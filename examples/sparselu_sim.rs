@@ -1,0 +1,56 @@
+//! Sparse LU on the simulated 48-core ThunderX — Figures 10 & 14 in one
+//! runnable example.
+//!
+//! Generates the paper's Table-4 workload, simulates all three runtime
+//! organizations across the thread sweep, prints the speedup table, and
+//! renders the in-graph/ready evolution (pyramid vs roof).
+//!
+//! Run: `cargo run --release --example sparselu_sim`
+
+use ddast::coordinator::{DdastParams, RuntimeKind};
+use ddast::sim::engine::{simulate, SimOptions};
+use ddast::sim::machine::MachineConfig;
+use ddast::sim::report::{ascii_series, speedup_table, Series};
+use ddast::workloads::sparselu;
+
+fn main() {
+    let machine = MachineConfig::thunderx();
+    let spec = sparselu::generate(sparselu::SparseLuParams { ms: 4096, bs: 128 });
+    println!(
+        "SparseLU {}: {} tasks on simulated {} ({} cores)\n",
+        spec.name,
+        spec.num_tasks(),
+        machine.name,
+        machine.cores
+    );
+
+    // Scalability (Figure 10c analogue).
+    let mut series = Vec::new();
+    for (label, kind) in [
+        ("Nanos++", RuntimeKind::Sync),
+        ("DDAST", RuntimeKind::Ddast),
+        ("GOMP", RuntimeKind::GompLike),
+    ] {
+        let mut points = Vec::new();
+        for &t in &machine.thread_sweep() {
+            let r = simulate(&spec, &machine, SimOptions::new(kind, t));
+            points.push((t, r.speedup));
+        }
+        series.push(Series { label: label.into(), points });
+    }
+    println!("{}", speedup_table("Speedup vs sequential (Fig 10 analogue)", &series));
+
+    // Trace shapes (Figure 14 analogue).
+    for (label, kind) in [("Nanos++", RuntimeKind::Sync), ("DDAST", RuntimeKind::Ddast)] {
+        let r = simulate(
+            &spec,
+            &machine,
+            SimOptions::new(kind, 48)
+                .with_params(DdastParams::tuned(48))
+                .with_trace(100_000),
+        );
+        let tr = r.trace.unwrap();
+        println!("{}", ascii_series(&format!("tasks in graph — {label}"), &tr.in_graph, 90, 7));
+    }
+    println!("sparselu_sim OK ✔");
+}

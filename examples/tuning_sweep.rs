@@ -1,0 +1,22 @@
+//! Table 5 / §5 tuning protocol as a runnable example: sweep each DDAST
+//! parameter on the simulated machines and print the speedup-over-default
+//! tables (quick problem sizes; `repro bench --exp fig5..fig8` runs the
+//! full versions).
+//!
+//! Run: `cargo run --release --example tuning_sweep`
+
+use ddast::bench_harness::figures::{self, FigureOpts, Param};
+
+fn main() {
+    let opts = FigureOpts::quick();
+    for param in [
+        Param::MaxDdastThreads,
+        Param::MaxSpins,
+        Param::MaxOpsThread,
+        Param::MinReadyTasks,
+    ] {
+        println!("{}", figures::param_sweep(param, opts));
+    }
+    println!("{}", figures::table5(opts));
+    println!("tuning_sweep OK ✔");
+}

@@ -1,0 +1,58 @@
+"""AOT compile path: lower every L2 model to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile()`` or serialized
+``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version the published `xla` 0.1.6 rust crate
+links) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (via `make
+artifacts`). Python runs ONCE here; never on the execution path.
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of model names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, (fn, specs) in sorted(MODELS.items()):
+        if args.only and name not in args.only:
+            continue
+        text = to_hlo_text(fn, specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        shapes = ",".join(
+            "x".join(map(str, s.shape)) + f":{s.dtype}" for s in specs
+        )
+        manifest_lines.append(f"{name}\t{digest}\t{shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "MANIFEST.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only) + pure-jnp oracles (`ref`)."""
+
+from . import ref  # noqa: F401
+from .matmul_block import matmul_block  # noqa: F401
+from .nbody_block import nbody_forces, nbody_update  # noqa: F401
+from .sparselu_block import bdiv, bmod, fwd, lu0  # noqa: F401

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: blocked-matmul task body (paper §4.2.1).
+
+One Matmul task computes ``C += A @ B`` on a BS x BS block. The Pallas
+kernel tiles the block for the MXU: ``tile x tile`` sub-blocks move through
+VMEM on a (i, j, k) grid; the output tile is revisited across the k
+dimension, accumulating in place (classic Pallas revisiting pattern — the
+HBM<->VMEM schedule the paper's CPU code expressed through the cache
+hierarchy; see DESIGN.md §Hardware-Adaptation).
+
+VMEM footprint per grid step: 3 tiles x tile² x 4 B (tile=128 -> 192 KiB),
+far under the 16 MiB/core budget; MXU sees (128, 128) f32 contractions.
+
+interpret=True everywhere: real-TPU lowering emits Mosaic custom-calls the
+CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, c_ref, o_ref):
+    """Grid (i, j, k): o[i, j] = c[i, j] + sum_k a[i, k] @ b[k, j]."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul_block(a, b, c, *, tile=128):
+    """Pallas-tiled ``c + a @ b`` for square BS x BS blocks."""
+    bs = a.shape[0]
+    t = min(tile, bs)
+    assert bs % t == 0, "BS must be a multiple of the tile size"
+    n = bs // t
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel),
+        grid=(n, n, n),
+        in_specs=[
+            pl.BlockSpec((t, t), lambda i, j, k: (i, k)),
+            pl.BlockSpec((t, t), lambda i, j, k: (k, j)),
+            pl.BlockSpec((t, t), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bs, bs), a.dtype),
+        interpret=True,
+    )(a, b, c)

@@ -1,0 +1,69 @@
+"""L1 Pallas kernels: N-Body task bodies (paper §4.2.2).
+
+``force(i, j)``: accelerations exerted by particle block j on block i
+(softened gravity). The kernel tiles the *target* block across the grid;
+the source block stays VMEM-resident (bs x 3 f32 = 1.5 KiB at bs=128), so
+each grid step is a (tile_p x bs) pairwise sweep — the TPU analogue of the
+cache-blocked inner loop of the CPU benchmark.
+
+``update``: per-block integration, a pure element-wise kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SOFTENING = 1e-3
+
+
+def _forces_kernel(pos_i_ref, pos_j_ref, mass_j_ref, o_ref):
+    pos_i = pos_i_ref[...]  # (tp, 3)
+    pos_j = pos_j_ref[...]  # (bs, 3)
+    m = mass_j_ref[...]  # (bs,)
+    d = pos_j[None, :, :] - pos_i[:, None, :]  # (tp, bs, 3)
+    dist2 = jnp.sum(d * d, axis=-1) + SOFTENING
+    inv_d3 = dist2 ** (-1.5)  # (tp, bs)
+    w = inv_d3 * m[None, :]
+    o_ref[...] = jnp.einsum("pq,pqc->pc", w, d)
+
+
+def nbody_forces(pos_i, pos_j, mass_j, *, tile=64):
+    """Accelerations on block i from block j: (bs, 3)."""
+    bs = pos_i.shape[0]
+    tp = min(tile, bs)
+    assert bs % tp == 0
+    return pl.pallas_call(
+        functools.partial(_forces_kernel),
+        grid=(bs // tp,),
+        in_specs=[
+            pl.BlockSpec((tp, 3), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 3), lambda i: (0, 0)),
+            pl.BlockSpec((bs,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tp, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs, 3), pos_i.dtype),
+        interpret=True,
+    )(pos_i, pos_j, mass_j)
+
+
+def _update_kernel(pos_ref, vel_ref, acc_ref, dt_ref, pos_o_ref, vel_o_ref):
+    dt = dt_ref[0]
+    vel_new = vel_ref[...] + acc_ref[...] * dt
+    vel_o_ref[...] = vel_new
+    pos_o_ref[...] = pos_ref[...] + vel_new * dt
+
+
+def nbody_update(pos, vel, acc, dt):
+    """Integrate one particle block. Returns (pos', vel')."""
+    bs = pos.shape[0]
+    dt_arr = jnp.asarray([dt], dtype=pos.dtype) if jnp.ndim(dt) == 0 else dt
+    return pl.pallas_call(
+        _update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((bs, 3), pos.dtype),
+            jax.ShapeDtypeStruct((bs, 3), vel.dtype),
+        ),
+        interpret=True,
+    )(pos, vel, acc, dt_arr)

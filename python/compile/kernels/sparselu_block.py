@@ -1,0 +1,141 @@
+"""L1 Pallas kernels: SparseLU block task bodies (paper §4.2.3).
+
+The four kernels of the BOTS-derived benchmark:
+
+* ``bmod`` — the flop-dominant trailing update ``inner -= row @ col``:
+  a tiled, MXU-shaped Pallas GEMM with in-place accumulation, like the
+  Matmul kernel.
+* ``lu0`` / ``fwd`` / ``bdiv`` — panel factorizations/solves. A BS x BS f32
+  block is at most 256 KiB (BS=256), so the whole block is VMEM-resident
+  and the sequential elimination runs inside one kernel invocation — the
+  TPU mapping of "the block fits in L2" that the CPU benchmark relies on.
+
+interpret=True for CPU-PJRT executability (see matmul_block.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# --- bmod: tiled GEMM update ------------------------------------------------
+
+
+def _bmod_kernel(row_ref, col_ref, inner_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = inner_ref[...]
+
+    o_ref[...] -= jnp.dot(
+        row_ref[...], col_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def bmod(row, col, inner, *, tile=128):
+    """Trailing update: inner - row @ col (tiled for the MXU)."""
+    bs = row.shape[0]
+    t = min(tile, bs)
+    assert bs % t == 0
+    n = bs // t
+    return pl.pallas_call(
+        functools.partial(_bmod_kernel),
+        grid=(n, n, n),
+        in_specs=[
+            pl.BlockSpec((t, t), lambda i, j, k: (i, k)),
+            pl.BlockSpec((t, t), lambda i, j, k: (k, j)),
+            pl.BlockSpec((t, t), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bs, bs), row.dtype),
+        interpret=True,
+    )(row, col, inner)
+
+
+# --- VMEM-resident panel kernels ---------------------------------------------
+
+
+def _lu0_kernel(a_ref, o_ref):
+    n = a_ref.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+
+    def body(k, a):
+        pivot = jax.lax.dynamic_index_in_dim(
+            jax.lax.dynamic_index_in_dim(a, k, 0, keepdims=False), k, 0, keepdims=False
+        )
+        col_k = jax.lax.dynamic_slice_in_dim(a, k, 1, axis=1)[:, 0]
+        scaled = jnp.where(rows[:, 0] > k, col_k / pivot, col_k)
+        a = jnp.where(cols == k, scaled[:, None], a)
+        row_k = jax.lax.dynamic_slice_in_dim(a, k, 1, axis=0)[0, :]
+        mask = (rows > k) & (cols > k)
+        a = jnp.where(mask, a - scaled[:, None] * row_k[None, :], a)
+        return a
+
+    o_ref[...] = jax.lax.fori_loop(0, n - 1, body, a_ref[...])
+
+
+def lu0(a):
+    """In-block LU (Doolittle, unit lower), whole block VMEM-resident."""
+    bs = a.shape[0]
+    return pl.pallas_call(
+        _lu0_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), a.dtype),
+        interpret=True,
+    )(a)
+
+
+def _fwd_kernel(diag_ref, a_ref, o_ref):
+    n = a_ref.shape[0]
+    diag = diag_ref[...]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+
+    def body(k, x):
+        factor = jax.lax.dynamic_slice_in_dim(diag, k, 1, axis=1)[:, 0]
+        row_k = jax.lax.dynamic_slice_in_dim(x, k, 1, axis=0)[0, :]
+        x = jnp.where(rows > k, x - factor[:, None] * row_k[None, :], x)
+        return x
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body, a_ref[...])
+
+
+def fwd(diag, a):
+    """Row-panel update: solve L X = A, L = unit-lower(diag)."""
+    bs = a.shape[0]
+    return pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), a.dtype),
+        interpret=True,
+    )(diag, a)
+
+
+def _bdiv_kernel(diag_ref, a_ref, o_ref):
+    n = a_ref.shape[0]
+    diag = diag_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+
+    def body(k, x):
+        pivot = jax.lax.dynamic_index_in_dim(
+            jax.lax.dynamic_index_in_dim(diag, k, 0, keepdims=False),
+            k,
+            0,
+            keepdims=False,
+        )
+        col_k = jax.lax.dynamic_slice_in_dim(x, k, 1, axis=1)[:, 0] / pivot
+        x = jnp.where(cols == k, col_k[:, None], x)
+        row_k = jax.lax.dynamic_slice_in_dim(diag, k, 1, axis=0)[0, :]
+        x = jnp.where(cols > k, x - col_k[:, None] * row_k[None, :], x)
+        return x
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body, a_ref[...])
+
+
+def bdiv(diag, a):
+    """Column-panel update: solve X U = A, U = upper(diag)."""
+    bs = a.shape[0]
+    return pl.pallas_call(
+        _bdiv_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), a.dtype),
+        interpret=True,
+    )(diag, a)

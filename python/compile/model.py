@@ -1,0 +1,129 @@
+"""L2: the benchmark compute graphs, as jitted JAX functions calling the L1
+Pallas kernels. `aot.py` lowers each entry of MODELS once to HLO text; the
+Rust coordinator executes them from task bodies via PJRT (python never runs
+at execution time).
+
+Every function returns a tuple — the artifacts are lowered with
+``return_tuple=True`` and the Rust side unwraps tuples uniformly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+F32 = jnp.float32
+
+
+# --- Matmul task body (C += A @ B on one block) -----------------------------
+
+
+def matmul_step(a, b, c):
+    return (kernels.matmul_block(a, b, c),)
+
+
+# --- N-Body task bodies ------------------------------------------------------
+
+
+def nbody_forces_step(pos_i, pos_j, mass_j):
+    return (kernels.nbody_forces(pos_i, pos_j, mass_j),)
+
+
+def nbody_update_step(pos, vel, acc, dt):
+    pos_new, vel_new = kernels.nbody_update(pos, vel, acc, dt[0])
+    return (pos_new, vel_new)
+
+
+# --- SparseLU task bodies -----------------------------------------------------
+
+
+def lu0_step(a):
+    return (kernels.lu0(a),)
+
+
+def fwd_step(diag, a):
+    return (kernels.fwd(diag, a),)
+
+
+def bdiv_step(diag, a):
+    return (kernels.bdiv(diag, a),)
+
+
+def bmod_step(row, col, inner):
+    return (kernels.bmod(row, col, inner),)
+
+
+def _mat(bs):
+    return jax.ShapeDtypeStruct((bs, bs), F32)
+
+
+def _vec3(bs):
+    return jax.ShapeDtypeStruct((bs, 3), F32)
+
+
+#: name -> (function, example argument specs). Names become artifact files
+#: `<name>.hlo.txt`; block sizes are fixed per artifact (one compiled
+#: executable per model variant, as the runtime expects).
+MODELS = {
+    # E2E block size (64) and the paper's KNL-FG block size (256).
+    "matmul_block": (matmul_step, (_mat(64), _mat(64), _mat(64))),
+    "matmul_block_256": (matmul_step, (_mat(256), _mat(256), _mat(256))),
+    # SparseLU at the e2e block size.
+    "lu0": (lu0_step, (_mat(64),)),
+    "fwd": (fwd_step, (_mat(64), _mat(64))),
+    "bdiv": (bdiv_step, (_mat(64), _mat(64))),
+    "bmod": (bmod_step, (_mat(64), _mat(64), _mat(64))),
+    # N-Body at the paper's CG block size.
+    "nbody_forces": (
+        nbody_forces_step,
+        (_vec3(128), _vec3(128), jax.ShapeDtypeStruct((128,), F32)),
+    ),
+    "nbody_update": (
+        nbody_update_step,
+        (_vec3(128), _vec3(128), _vec3(128), jax.ShapeDtypeStruct((1,), F32)),
+    ),
+}
+
+
+# --- Fused L2 graph: one whole N-Body timestep over all blocks ---------------
+#
+# Demonstrates L2 composition: the Pallas force kernel is instantiated for
+# every (i, j) block pair and the update kernel for every block, fused by
+# XLA into one executable — the "one compiled executable per model variant"
+# the runtime loads for coarse-grain offload experiments.
+
+NB_FUSED = 4  # blocks in the fused-timestep artifact
+BS_FUSED = 64  # particles per block
+
+
+def nbody_timestep(pos, vel, mass, dt):
+    """One timestep over `NB_FUSED` blocks.
+
+    pos, vel: (nb, bs, 3); mass: (nb, bs); dt: (1,).
+    Returns (pos', vel').
+    """
+    nb = pos.shape[0]
+    forces = []
+    for i in range(nb):
+        acc_i = jnp.zeros_like(pos[i])
+        for j in range(nb):
+            acc_i = acc_i + kernels.nbody_forces(pos[i], pos[j], mass[j])
+        forces.append(acc_i)
+    acc = jnp.stack(forces)
+    new_pos, new_vel = [], []
+    for i in range(nb):
+        p, v = kernels.nbody_update(pos[i], vel[i], acc[i], dt[0])
+        new_pos.append(p)
+        new_vel.append(v)
+    return (jnp.stack(new_pos), jnp.stack(new_vel))
+
+
+MODELS["nbody_timestep"] = (
+    nbody_timestep,
+    (
+        jax.ShapeDtypeStruct((NB_FUSED, BS_FUSED, 3), F32),
+        jax.ShapeDtypeStruct((NB_FUSED, BS_FUSED, 3), F32),
+        jax.ShapeDtypeStruct((NB_FUSED, BS_FUSED), F32),
+        jax.ShapeDtypeStruct((1,), F32),
+    ),
+)

@@ -1,0 +1,37 @@
+"""AOT artifact consistency: the built artifacts (if present) match the
+MODELS registry and are plain-HLO (CPU-executable)."""
+
+import os
+
+import pytest
+
+from compile.model import MODELS
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "..", "artifacts")
+
+
+def built():
+    return os.path.exists(os.path.join(ART, "MANIFEST.txt"))
+
+
+@pytest.mark.skipif(not built(), reason="artifacts not built (run `make artifacts`)")
+def test_manifest_covers_all_models():
+    with open(os.path.join(ART, "MANIFEST.txt")) as f:
+        names = {line.split("\t")[0] for line in f if line.strip()}
+    missing = set(MODELS) - names
+    # Allow the manifest to be older than a freshly added model; it must
+    # never list unknown models.
+    assert names <= set(MODELS), names - set(MODELS)
+    if missing:
+        pytest.skip(f"artifacts older than MODELS ({missing}); run `make artifacts`")
+
+
+@pytest.mark.skipif(not built(), reason="artifacts not built")
+def test_artifacts_are_plain_hlo():
+    for fname in os.listdir(ART):
+        if not fname.endswith(".hlo.txt"):
+            continue
+        with open(os.path.join(ART, fname)) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), fname
+        assert "tpu_custom_call" not in text, f"{fname} is not CPU-executable"

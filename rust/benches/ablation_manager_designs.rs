@@ -1,0 +1,40 @@
+//! Ablation: manager organization — none (Sync) vs dedicated thread
+//! (CentralDast, the authors' IPDPSW'17 design [7]) vs distributed idle
+//! threads (DDAST, this paper). The design choice DESIGN.md §4 calls out.
+//!
+//! Run: `cargo bench --bench ablation_manager_designs`
+
+use ddast::coordinator::RuntimeKind;
+use ddast::sim::engine::{simulate, SimOptions};
+use ddast::sim::machine::MachineConfig;
+use ddast::sim::report::{speedup_table, Series};
+use ddast::workloads::matmul;
+
+fn main() {
+    let m = MachineConfig::knl();
+    let spec = matmul::generate(matmul::MatmulParams { ms: 4096, bs: 256 });
+    let mut series = Vec::new();
+    for (label, kind) in [
+        ("no manager (Sync)", RuntimeKind::Sync),
+        ("dedicated (DAST[7])", RuntimeKind::CentralDast),
+        ("distributed (DDAST)", RuntimeKind::Ddast),
+    ] {
+        let mut points = Vec::new();
+        for &t in &[2usize, 4, 8, 16, 32, 64] {
+            let r = simulate(&spec, &m, SimOptions::new(kind, t));
+            points.push((t, r.speedup));
+        }
+        series.push(Series { label: label.into(), points });
+    }
+    println!(
+        "{}",
+        speedup_table("Ablation: manager organization (Matmul FG, simulated KNL)", &series)
+    );
+    // Also report the structural difference: graph occupancy.
+    for (label, kind) in
+        [("DAST[7]", RuntimeKind::CentralDast), ("DDAST", RuntimeKind::Ddast)]
+    {
+        let r = simulate(&spec, &m, SimOptions::new(kind, 64));
+        println!("{label}: max in-graph {} (roof vs pyramid)", r.stats.max_in_graph);
+    }
+}

@@ -1,0 +1,13 @@
+//! Figure 11: NBody scalability — Nanos++ / DDAST / DDAST-tuned / GOMP
+//! over the thread sweep on simulated KNL, ThunderX and Power9 (paper
+//! §6.1). Quick sizes; `repro bench --exp fig11` runs full sizes.
+use ddast::bench_harness::figures::{scalability, Bench, FigureOpts};
+
+fn main() {
+    println!("Figure 11 (NBody scalability, quick sizes)\n");
+    for machine in ["knl", "thunderx", "power9"] {
+        for coarse in [false, true] {
+            println!("{}", scalability(Bench::NBody, machine, coarse, FigureOpts::quick()));
+        }
+    }
+}

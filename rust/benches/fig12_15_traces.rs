@@ -1,0 +1,12 @@
+//! Figures 12–15: execution-analysis traces (paper §6.2) — in-graph /
+//! ready evolutions and thread-state timelines. Quick sizes; `repro trace
+//! --exp fig12..fig15` runs full sizes.
+use ddast::bench_harness::figures::{fig12, fig13, fig14, fig15, FigureOpts};
+
+fn main() {
+    let o = FigureOpts::quick();
+    println!("{}", fig12(o));
+    println!("{}", fig13(o));
+    println!("{}", fig14(o));
+    println!("{}", fig15(o));
+}

@@ -1,0 +1,8 @@
+//! Figure 5: speedup over the default value when sweeping
+//! MaxDdastThreads (paper §5). Quick problem sizes; `repro bench
+//! --exp fig5` runs the full-size version.
+use ddast::bench_harness::figures::{param_sweep, FigureOpts, Param};
+
+fn main() {
+    println!("{}", param_sweep(Param::MaxDdastThreads, FigureOpts::quick()));
+}

@@ -1,0 +1,8 @@
+//! Figure 6: speedup over the default value when sweeping
+//! MaxSpins (paper §5). Quick problem sizes; `repro bench
+//! --exp fig6` runs the full-size version.
+use ddast::bench_harness::figures::{param_sweep, FigureOpts, Param};
+
+fn main() {
+    println!("{}", param_sweep(Param::MaxSpins, FigureOpts::quick()));
+}

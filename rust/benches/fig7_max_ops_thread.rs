@@ -1,0 +1,8 @@
+//! Figure 7: speedup over the default value when sweeping
+//! MaxOpsThread (paper §5). Quick problem sizes; `repro bench
+//! --exp fig7` runs the full-size version.
+use ddast::bench_harness::figures::{param_sweep, FigureOpts, Param};
+
+fn main() {
+    println!("{}", param_sweep(Param::MaxOpsThread, FigureOpts::quick()));
+}

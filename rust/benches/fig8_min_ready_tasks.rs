@@ -1,0 +1,8 @@
+//! Figure 8: speedup over the default value when sweeping
+//! MinReadyTasks (paper §5). Quick problem sizes; `repro bench
+//! --exp fig8` runs the full-size version.
+use ddast::bench_harness::figures::{param_sweep, FigureOpts, Param};
+
+fn main() {
+    println!("{}", param_sweep(Param::MinReadyTasks, FigureOpts::quick()));
+}

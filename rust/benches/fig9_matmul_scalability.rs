@@ -1,0 +1,13 @@
+//! Figure 9: Matmul scalability — Nanos++ / DDAST / DDAST-tuned / GOMP
+//! over the thread sweep on simulated KNL, ThunderX and Power9 (paper
+//! §6.1). Quick sizes; `repro bench --exp fig9` runs full sizes.
+use ddast::bench_harness::figures::{scalability, Bench, FigureOpts};
+
+fn main() {
+    println!("Figure 9 (Matmul scalability, quick sizes)\n");
+    for machine in ["knl", "thunderx", "power9"] {
+        for coarse in [false, true] {
+            println!("{}", scalability(Bench::Matmul, machine, coarse, FigureOpts::quick()));
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Microbenchmarks of the real runtime structures (calibration source for
+//! the simulator's CostModel — DESIGN.md §7, EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench micro_structures`
+
+use ddast::bench_harness::Bencher;
+use ddast::coordinator::{RuntimeKind, TaskSystem};
+use ddast::sim::calibrate;
+use ddast::workloads::{executor, synthetic};
+use std::sync::Arc;
+
+fn main() {
+    println!("== micro_structures: real-structure op costs ==\n");
+    println!("{}", calibrate::report());
+
+    let mut b = Bencher::new(5, 1);
+    // End-to-end task throughput per organization (pure overhead: zero-cost
+    // bodies). This is the producer-side submit-path + drain cost.
+    for kind in [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::GompLike] {
+        let spec = Arc::new(synthetic::independent(20_000, 0));
+        b.bench(&format!("20k independent tasks, {kind:?}, 4 threads"), || {
+            let ts = TaskSystem::builder().kind(kind).num_threads(4).build();
+            executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+            ts.shutdown();
+        });
+    }
+    for kind in [RuntimeKind::Sync, RuntimeKind::Ddast] {
+        let spec = Arc::new(synthetic::chain(20_000, 0));
+        b.bench(&format!("20k chained tasks, {kind:?}, 2 threads"), || {
+            let ts = TaskSystem::builder().kind(kind).num_threads(2).build();
+            executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+            ts.shutdown();
+        });
+    }
+}

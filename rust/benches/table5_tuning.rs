@@ -1,0 +1,7 @@
+//! Table 5: DDAST parameter defaults before/after tuning + verification
+//! that tuned beats initial on every benchmark/machine (paper §5.5).
+use ddast::bench_harness::figures::{table5, FigureOpts};
+
+fn main() {
+    println!("{}", table5(FigureOpts::quick()));
+}

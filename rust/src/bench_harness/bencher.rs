@@ -1,0 +1,152 @@
+//! Minimal criterion-style bench runner (criterion itself is not available
+//! in this offline environment). Provides warmup, repeated timed samples,
+//! and mean/σ/min reporting; the `harness = false` bench binaries under
+//! `rust/benches/` drive it.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len().max(1) as f64
+    }
+
+    pub fn stddev_ns(&self) -> f64 {
+        let m = self.mean_ns();
+        let var = self.samples_ns.iter().map(|s| (s - m) * (s - m)).sum::<f64>()
+            / self.samples_ns.len().max(1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn report(&self) -> String {
+        // The paper reports best-of-5 (§4 criterion 3) — we print min too.
+        format!(
+            "{:<50} mean {:>12} σ {:>10} min {:>12}  ({} samples)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.stddev_ns()),
+            fmt_ns(self.min_ns()),
+            self.samples_ns.len()
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Bench runner with a time budget per benchmark.
+pub struct Bencher {
+    /// Samples per benchmark (paper uses 5 repetitions, best-of).
+    pub samples: usize,
+    /// Warmup iterations before sampling.
+    pub warmup: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { samples: 5, warmup: 1, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(samples: usize, warmup: usize) -> Self {
+        Bencher { samples, warmup, results: Vec::new() }
+    }
+
+    /// Time `f` (which performs one complete run) `samples` times.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let m = Measurement { name: name.to_string(), samples_ns };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Time a high-frequency operation: `f(iters)` runs the op `iters`
+    /// times; reports per-op cost.
+    pub fn bench_throughput<F: FnMut(u64)>(&mut self, name: &str, iters: u64, mut f: F) -> &Measurement {
+        f(self.warmup as u64 * 100);
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f(iters);
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let m = Measurement { name: format!("{name} (per op)"), samples_ns };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Guard against the harness itself taking too long in CI-ish runs.
+    pub fn elapsed_budget_exceeded(start: Instant, budget: Duration) -> bool {
+        start.elapsed() > budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut b = Bencher::new(3, 0);
+        b.bench("noop", || {});
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].samples_ns.len(), 3);
+        assert!(b.results()[0].min_ns() <= b.results()[0].mean_ns());
+    }
+
+    #[test]
+    fn throughput_per_op() {
+        let mut b = Bencher::new(2, 0);
+        let m = b.bench_throughput("add", 10_000, |iters| {
+            let mut x = 0u64;
+            for i in 0..iters {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.mean_ns() < 1_000.0, "per-op cost should be tiny");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(5.0), "5ns");
+        assert_eq!(fmt_ns(5_000.0), "5.000µs");
+        assert_eq!(fmt_ns(5e6), "5.000ms");
+        assert_eq!(fmt_ns(5e9), "5.000s");
+    }
+}

@@ -1,0 +1,8 @@
+//! Benchmark harness: per-figure drivers (`figures`) and the in-tree
+//! criterion replacement (`bencher`).
+
+pub mod bencher;
+pub mod figures;
+
+pub use bencher::{Bencher, Measurement};
+pub use figures::{Bench, FigureOpts};

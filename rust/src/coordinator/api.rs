@@ -1,0 +1,341 @@
+//! Public API: [`TaskSystem`] — the OmpSs-style programming surface.
+//!
+//! ```no_run
+//! use ddast::coordinator::{TaskSystem, RuntimeKind, DepMode};
+//!
+//! let ts = TaskSystem::builder().kind(RuntimeKind::Ddast).num_threads(4).build();
+//! ts.spawn(&[(0x1, DepMode::Out)], || println!("produce"));
+//! ts.spawn(&[(0x1, DepMode::In)], || println!("consume"));
+//! ts.taskwait();
+//! ```
+//!
+//! The calling thread plays the role OmpSs gives the "main" thread: it is
+//! worker 0 of the pool, and `taskwait` makes it execute tasks / runtime
+//! functionalities while it waits (thread-pool model, §2.1).
+
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::ddast::DdastParams;
+use crate::coordinator::dep::{DepMode, Dependence};
+use crate::coordinator::pool::{clear_ctx, current_ctx, install_ctx, RuntimeKind, RuntimeShared};
+use crate::coordinator::wd::Wd;
+use crate::substrate::RegionKey;
+
+/// Builder for [`TaskSystem`].
+pub struct TaskSystemBuilder {
+    kind: RuntimeKind,
+    num_threads: usize,
+    params: Option<DdastParams>,
+    tracing: bool,
+    autotune: bool,
+    autotune_interval: std::time::Duration,
+    manager_affinity: Option<Vec<usize>>,
+    ranged: bool,
+    seed: u64,
+}
+
+impl Default for TaskSystemBuilder {
+    fn default() -> Self {
+        TaskSystemBuilder {
+            kind: RuntimeKind::Ddast,
+            num_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            params: None,
+            tracing: false,
+            autotune: false,
+            autotune_interval: std::time::Duration::from_millis(2),
+            manager_affinity: None,
+            ranged: false,
+            seed: 0xDDA57,
+        }
+    }
+}
+
+impl TaskSystemBuilder {
+    /// Runtime organization (Sync baseline / DDAST / GOMP-like).
+    pub fn kind(mut self, kind: RuntimeKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Total threads *including* the calling thread.
+    pub fn num_threads(mut self, n: usize) -> Self {
+        self.num_threads = n.max(1);
+        self
+    }
+
+    /// Override the DDAST parameters (defaults to `DdastParams::tuned(n)`).
+    pub fn params(mut self, p: DdastParams) -> Self {
+        self.params = Some(p);
+        self
+    }
+
+    /// Enable trace collection (Paraver-style figures).
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.tracing = on;
+        self
+    }
+
+    /// Seed for stealing/victim RNG (reproducibility).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Enable dynamic DDAST parameter tuning (the paper's §8 future work):
+    /// a feedback controller registered in the Functionality Dispatcher
+    /// adjusts `MAX_DDAST_THREADS` online.
+    pub fn autotune(mut self, on: bool) -> Self {
+        self.autotune = on;
+        self
+    }
+
+    /// Adjustment period of the auto-tuner.
+    pub fn autotune_interval(mut self, d: std::time::Duration) -> Self {
+        self.autotune_interval = d;
+        self
+    }
+
+    /// Restrict which workers may become DDAST managers (big.LITTLE
+    /// adaptation, paper §8 — e.g. pass the LITTLE-core worker ids).
+    pub fn manager_affinity(mut self, workers: Vec<usize>) -> Self {
+        self.manager_affinity = Some(workers);
+        self
+    }
+
+    /// Use the range-overlap dependence plugin: `(base, len)` regions
+    /// conflict on interval overlap rather than exact base match
+    /// (Nanos++'s richer regions plugin).
+    pub fn ranged_deps(mut self, on: bool) -> Self {
+        self.ranged = on;
+        self
+    }
+
+    pub fn build(self) -> TaskSystem {
+        let params = self.params.unwrap_or_else(|| DdastParams::tuned(self.num_threads));
+        let rt = RuntimeShared::new_with_plugin(
+            self.kind,
+            self.num_threads,
+            params,
+            self.tracing,
+            self.seed,
+            self.ranged,
+        );
+        let mut autotuner = None;
+        if self.kind == RuntimeKind::Ddast {
+            match self.manager_affinity {
+                Some(workers) => rt.register_ddast_with_affinity(workers),
+                None => rt.register_ddast(),
+            }
+            if self.autotune {
+                let tuner =
+                    crate::coordinator::autotune::AutoTuner::new(Arc::clone(&rt), self.autotune_interval);
+                tuner.register();
+                autotuner = Some(tuner);
+            }
+        }
+        // The calling thread is worker 0.
+        install_ctx(&rt, 0);
+        let mut threads = Vec::new();
+        for w in 1..self.num_threads {
+            let rt = Arc::clone(&rt);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ddast-worker-{w}"))
+                    .spawn(move || rt.worker_loop(w))
+                    .expect("spawn worker"),
+            );
+        }
+        if self.kind == RuntimeKind::CentralDast {
+            // The centralized design runs its manager on an *additional*
+            // thread (the paper's earlier system [7]).
+            let rt2 = Arc::clone(&rt);
+            let slot = self.num_threads;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("dast-manager".into())
+                    .spawn(move || rt2.dast_thread_loop(slot))
+                    .expect("spawn dast manager"),
+            );
+        }
+        TaskSystem { inner: Arc::new(Inner { rt, threads: Mutex::new(threads), autotuner }) }
+    }
+}
+
+struct Inner {
+    rt: Arc<RuntimeShared>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    autotuner: Option<Arc<crate::coordinator::autotune::AutoTuner>>,
+}
+
+/// Handle to a running task system. Cloneable; capture clones inside task
+/// bodies to spawn nested tasks. The pool shuts down when the last clone
+/// that called [`TaskSystem::shutdown`] (or `Drop` of the final handle)
+/// completes.
+#[derive(Clone)]
+pub struct TaskSystem {
+    inner: Arc<Inner>,
+}
+
+impl TaskSystem {
+    pub fn builder() -> TaskSystemBuilder {
+        TaskSystemBuilder::default()
+    }
+
+    /// Convenience: a DDAST system with tuned parameters.
+    pub fn new_ddast(num_threads: usize) -> Self {
+        Self::builder().kind(RuntimeKind::Ddast).num_threads(num_threads).build()
+    }
+
+    /// Convenience: the Nanos++-like synchronous baseline.
+    pub fn new_sync(num_threads: usize) -> Self {
+        Self::builder().kind(RuntimeKind::Sync).num_threads(num_threads).build()
+    }
+
+    #[inline]
+    pub fn runtime(&self) -> &Arc<RuntimeShared> {
+        &self.inner.rt
+    }
+
+    /// The auto-tuner, if enabled through [`TaskSystemBuilder::autotune`].
+    pub fn autotuner(&self) -> Option<&Arc<crate::coordinator::autotune::AutoTuner>> {
+        self.inner.autotuner.as_ref()
+    }
+
+    /// Spawn a task with address-keyed dependences — the ergonomic form
+    /// matching `#pragma omp task in(...) out(...)`.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, deps: &[(u64, DepMode)], body: F) {
+        let deps = deps
+            .iter()
+            .map(|&(addr, mode)| Dependence::new(RegionKey::addr(addr), mode))
+            .collect();
+        self.spawn_full(deps, "task", body);
+    }
+
+    /// Spawn with full [`Dependence`] descriptors and a trace label.
+    pub fn spawn_full<F: FnOnce() + Send + 'static>(
+        &self,
+        deps: Vec<Dependence>,
+        label: &'static str,
+        body: F,
+    ) {
+        let (rt, worker, parent) = self.ctx();
+        rt.spawn_from(worker, &parent, deps, label, Box::new(body));
+    }
+
+    /// `#pragma omp taskwait`: wait until all children of the *current*
+    /// task (the caller's innermost running task, or the implicit root)
+    /// have completed and been removed from the runtime structures.
+    pub fn taskwait(&self) {
+        let (rt, worker, parent) = self.ctx();
+        rt.taskwait_on(worker, &parent);
+    }
+
+    /// Resolve the calling thread's context; threads outside the pool act
+    /// as worker 0 spawning from the root task.
+    fn ctx(&self) -> (Arc<RuntimeShared>, usize, Arc<Wd>) {
+        match current_ctx() {
+            // The TLS context may belong to a *different* (nested/test)
+            // TaskSystem; only trust it if it is ours.
+            Some((rt, w, cur)) if Arc::ptr_eq(&rt, &self.inner.rt) => (rt, w, cur),
+            _ => (Arc::clone(&self.inner.rt), 0, Arc::clone(&self.inner.rt.root)),
+        }
+    }
+
+    /// Drain all work and stop the worker threads. Idempotent.
+    pub fn shutdown(&self) {
+        let rt = &self.inner.rt;
+        if !rt.shutdown_requested() {
+            // Finish everything in flight first.
+            let root = Arc::clone(&rt.root);
+            rt.taskwait_on(0, &root);
+            rt.request_shutdown();
+        }
+        let mut threads = self.inner.threads.lock().unwrap();
+        for t in threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // Last handle gone: drain and join.
+        if !self.rt.shutdown_requested() {
+            let root = Arc::clone(&self.rt.root);
+            self.rt.taskwait_on(0, &root);
+            self.rt.request_shutdown();
+        }
+        for t in self.threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+        clear_ctx();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn quickstart_compiles_and_runs() {
+        let ts = TaskSystem::builder().kind(RuntimeKind::Ddast).num_threads(2).build();
+        let x = Arc::new(AtomicU64::new(0));
+        let (x1, x2) = (Arc::clone(&x), Arc::clone(&x));
+        ts.spawn(&[(1, DepMode::Out)], move || x1.store(21, Ordering::SeqCst));
+        ts.spawn(&[(1, DepMode::Inout)], move || {
+            x2.fetch_add(21, Ordering::SeqCst);
+        });
+        ts.taskwait();
+        assert_eq!(x.load(Ordering::SeqCst), 42);
+        ts.shutdown();
+    }
+
+    #[test]
+    fn nested_tasks_and_taskwait() {
+        let ts = TaskSystem::new_ddast(2);
+        let sum = Arc::new(AtomicU64::new(0));
+        let ts2 = ts.clone();
+        let s = Arc::clone(&sum);
+        ts.spawn(&[], move || {
+            // Inside a task: children attach to *this* task.
+            for i in 1..=10u64 {
+                let s = Arc::clone(&s);
+                ts2.spawn(&[], move || {
+                    s.fetch_add(i, Ordering::SeqCst);
+                });
+            }
+            ts2.taskwait(); // waits for the 10 children only
+            assert_eq!(s.load(Ordering::SeqCst), 55);
+        });
+        ts.taskwait();
+        assert_eq!(sum.load(Ordering::SeqCst), 55);
+    }
+
+    #[test]
+    fn all_kinds_run_a_chain() {
+        for kind in [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::GompLike] {
+            let ts = TaskSystem::builder().kind(kind).num_threads(3).build();
+            let v = Arc::new(AtomicU64::new(1));
+            for _ in 0..20 {
+                let v = Arc::clone(&v);
+                ts.spawn(&[(7, DepMode::Inout)], move || {
+                    // Dependent chain: each doubles; order violations would
+                    // give a different result than 2^20.
+                    v.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |x| Some(x * 2)).unwrap();
+                });
+            }
+            ts.taskwait();
+            assert_eq!(v.load(Ordering::SeqCst), 1 << 20, "kind={kind:?}");
+        }
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let ts = TaskSystem::new_sync(2);
+        ts.spawn(&[], || {});
+        ts.shutdown();
+        ts.shutdown();
+    }
+}

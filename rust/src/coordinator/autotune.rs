@@ -1,0 +1,179 @@
+//! Dynamic DDAST parameter tuning — the paper's stated future work (§8:
+//! "the runtime manager will dynamically tune its parameters to fit the
+//! application requirements", citing the feedback-directed approach of
+//! [18]).
+//!
+//! The tuner is itself a Functionality Dispatcher callback (§3.2 envisions
+//! exactly this: more runtime services sharing idle threads). Every
+//! `interval` of runtime it samples two signals and nudges the *tunable*
+//! parameters:
+//!
+//! * **backlog**: messages pending while ready tasks are scarce → the
+//!   managers cannot keep up → raise `MAX_DDAST_THREADS`;
+//! * **idle managers**: activations that found little work → shrink
+//!   `MAX_DDAST_THREADS` back toward the static tuned value (locality,
+//!   §5.1).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::ddast::DdastParams;
+use crate::coordinator::pool::RuntimeShared;
+use crate::substrate::Counter;
+
+/// Atomically adjustable DDAST parameters.
+#[derive(Debug)]
+pub struct TunableParams {
+    max_ddast_threads: AtomicUsize,
+    max_spins: AtomicU32,
+    max_ops_thread: AtomicUsize,
+    min_ready_tasks: AtomicU64,
+}
+
+impl TunableParams {
+    pub fn new(p: DdastParams) -> Self {
+        TunableParams {
+            max_ddast_threads: AtomicUsize::new(p.max_ddast_threads),
+            max_spins: AtomicU32::new(p.max_spins),
+            max_ops_thread: AtomicUsize::new(p.max_ops_thread),
+            min_ready_tasks: AtomicU64::new(p.min_ready_tasks),
+        }
+    }
+
+    /// Consistent-enough snapshot for one callback execution.
+    pub fn snapshot(&self) -> DdastParams {
+        DdastParams {
+            max_ddast_threads: self.max_ddast_threads.load(Ordering::Relaxed),
+            max_spins: self.max_spins.load(Ordering::Relaxed),
+            max_ops_thread: self.max_ops_thread.load(Ordering::Relaxed),
+            min_ready_tasks: self.min_ready_tasks.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn set_max_ddast_threads(&self, v: usize) {
+        self.max_ddast_threads.store(v.max(1), Ordering::Relaxed);
+    }
+
+    pub fn set_max_ops_thread(&self, v: usize) {
+        self.max_ops_thread.store(v.max(1), Ordering::Relaxed);
+    }
+
+    pub fn set_min_ready_tasks(&self, v: u64) {
+        self.min_ready_tasks.store(v.max(1), Ordering::Relaxed);
+    }
+}
+
+/// The feedback controller. Registered with
+/// [`AutoTuner::register`]; safe to run from any idle thread.
+pub struct AutoTuner {
+    rt: Arc<RuntimeShared>,
+    /// Static tuned baseline to decay back to.
+    baseline: DdastParams,
+    /// Adjustment period (wall time).
+    interval: std::time::Duration,
+    start: Instant,
+    /// Last adjustment timestamp (µs since start) — CAS-guarded so only
+    /// one idle thread adjusts per period.
+    last_adjust_us: AtomicU64,
+    // Deltas of the counters at the previous adjustment.
+    last_mgr_activations: AtomicU64,
+    last_mgr_msgs: AtomicU64,
+    /// Number of adjustments performed (diagnostics/tests).
+    pub adjustments: Counter,
+    pub raises: Counter,
+    pub decays: Counter,
+}
+
+impl AutoTuner {
+    pub fn new(rt: Arc<RuntimeShared>, interval: std::time::Duration) -> Arc<Self> {
+        let baseline = DdastParams::tuned(rt.num_threads);
+        Arc::new(AutoTuner {
+            rt,
+            baseline,
+            interval,
+            start: Instant::now(),
+            last_adjust_us: AtomicU64::new(0),
+            last_mgr_activations: AtomicU64::new(0),
+            last_mgr_msgs: AtomicU64::new(0),
+            adjustments: Counter::new(),
+            raises: Counter::new(),
+            decays: Counter::new(),
+        })
+    }
+
+    /// Register the tuner in the runtime's Functionality Dispatcher.
+    pub fn register(self: &Arc<Self>) {
+        let tuner = Arc::clone(self);
+        self.rt
+            .dispatcher
+            .register("autotune", Box::new(move |_worker| tuner.step()));
+    }
+
+    /// One controller step. Returns true if parameters were adjusted.
+    pub fn step(&self) -> bool {
+        let now_us = self.start.elapsed().as_micros() as u64;
+        let last = self.last_adjust_us.load(Ordering::Acquire);
+        if now_us.saturating_sub(last) < self.interval.as_micros() as u64 {
+            return false;
+        }
+        // One adjuster per period.
+        if self
+            .last_adjust_us
+            .compare_exchange(last, now_us, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false;
+        }
+        let tunables = self.rt.tunables();
+        let p = tunables.snapshot();
+        let backlog = self.rt.queues.pending();
+        let ready = self.rt.ready.ready_count();
+        let acts = self.rt.stats.mgr_activations.get();
+        let msgs = self.rt.stats.mgr_msgs.get();
+        let d_acts = acts - self.last_mgr_activations.swap(acts, Ordering::AcqRel);
+        let d_msgs = msgs - self.last_mgr_msgs.swap(msgs, Ordering::AcqRel);
+
+        let mut adjusted = false;
+        // Signal 1: backlog with starving workers -> more managers.
+        if backlog > 4 * self.rt.num_threads as u64 && ready < p.min_ready_tasks {
+            let cap = self.rt.num_threads;
+            if p.max_ddast_threads < cap {
+                tunables.set_max_ddast_threads((p.max_ddast_threads + 1).min(cap));
+                self.raises.inc();
+                adjusted = true;
+            }
+        } else if d_acts > 16 && d_msgs / d_acts.max(1) < 2 {
+            // Signal 2: managers mostly find nothing -> decay toward the
+            // static tuned value (fewer managers = better locality, §5.1).
+            if p.max_ddast_threads > self.baseline.max_ddast_threads {
+                tunables.set_max_ddast_threads(p.max_ddast_threads - 1);
+                self.decays.inc();
+                adjusted = true;
+            }
+        }
+        if adjusted {
+            self.adjustments.inc();
+        }
+        adjusted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let t = TunableParams::new(DdastParams::tuned(64));
+        assert_eq!(t.snapshot(), DdastParams::tuned(64));
+        t.set_max_ddast_threads(3);
+        assert_eq!(t.snapshot().max_ddast_threads, 3);
+        t.set_max_ddast_threads(0); // clamped
+        assert_eq!(t.snapshot().max_ddast_threads, 1);
+        t.set_max_ops_thread(5);
+        t.set_min_ready_tasks(9);
+        let s = t.snapshot();
+        assert_eq!((s.max_ops_thread, s.min_ready_tasks), (5, 9));
+    }
+}

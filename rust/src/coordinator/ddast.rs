@@ -1,0 +1,168 @@
+//! The DDAST manager: parameters (§3.3, Table 5) and the callback
+//! (Listing 2) registered in the Functionality Dispatcher.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::coordinator::pool::RuntimeShared;
+
+/// Tuning knobs of the DDAST callback (paper §3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DdastParams {
+    /// Maximum number of threads allowed to execute the DDAST callback
+    /// concurrently.
+    pub max_ddast_threads: usize,
+    /// Times a manager iterates over all queues without finding a message
+    /// before leaving the callback.
+    pub max_spins: u32,
+    /// Maximum messages satisfied from the same worker's queues before
+    /// moving to the next worker.
+    pub max_ops_thread: usize,
+    /// Manager threads exit once at least this many ready tasks exist.
+    pub min_ready_tasks: u64,
+}
+
+impl DdastParams {
+    /// Pre-tuning defaults (Table 5 "Initial Value"). `usize::MAX` models
+    /// the paper's "∞" for `MAX_DDAST_THREADS`.
+    pub fn initial() -> Self {
+        DdastParams {
+            max_ddast_threads: usize::MAX,
+            max_spins: 20,
+            max_ops_thread: 6,
+            min_ready_tasks: 4,
+        }
+    }
+
+    /// Post-tuning defaults (Table 5 "Tuned Value"):
+    /// `MAX_DDAST_THREADS = ⌈num_threads / 8⌉`, `MAX_SPINS = 1`,
+    /// `MAX_OPS_THREAD = 8`, `MIN_READY_TASKS = 4`.
+    pub fn tuned(num_threads: usize) -> Self {
+        DdastParams {
+            max_ddast_threads: num_threads.div_ceil(8).max(1),
+            max_spins: 1,
+            max_ops_thread: 8,
+            min_ready_tasks: 4,
+        }
+    }
+}
+
+impl Default for DdastParams {
+    fn default() -> Self {
+        // Tuned values for a nominal 8-thread machine; `TaskSystem::builder`
+        // replaces this with `tuned(num_threads)`.
+        DdastParams::tuned(8)
+    }
+}
+
+/// The DDAST callback — a faithful transcription of the paper's Listing 2.
+///
+/// Returns `true` if at least one message was satisfied (the Functionality
+/// Dispatcher uses this for its idle accounting).
+pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
+    // Snapshot the live parameters: the auto-tuner (§8 future work) may
+    // adjust them between callback executions.
+    let p = rt.tunables().snapshot();
+
+    // Listing 2 line 1: `if (numThreads >= MAX_DDAST_THREADS) return`.
+    // CAS loop so the cap is never overshot (DESIGN.md invariant #4).
+    loop {
+        let n = rt.mgr_count.load(Ordering::Acquire);
+        if n >= p.max_ddast_threads {
+            return false;
+        }
+        if rt
+            .mgr_count
+            .compare_exchange_weak(n, n + 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            rt.stats.mgr_peak.record_max(n as u64 + 1);
+            break;
+        }
+    }
+    rt.stats.mgr_activations.inc();
+    rt.trace_manager_enter(me);
+
+    let mut spins = p.max_spins;
+    let mut total_processed: u64 = 0;
+    // Listing 2 lines 4..25.
+    loop {
+        let mut total_cnt: usize = 0;
+        for w in 0..rt.queues.num_workers() {
+            // Line 7: early exit when enough parallelism is uncovered.
+            if rt.ready.ready_count() >= p.min_ready_tasks {
+                break;
+            }
+            let wq = &rt.queues.workers[w];
+            // Lines 8–16: Submit Task Messages first (prioritized), under
+            // the exclusive consumer token — one manager per submit queue.
+            let mut cnt: usize = 0;
+            if let Some(mut g) = wq.submit.try_acquire() {
+                while cnt < p.max_ops_thread {
+                    match g.pop() {
+                        Some(m) => {
+                            rt.process_submit(me, m.task);
+                            cnt += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+            // Lines 17–20: Done Task Messages share the per-worker budget.
+            if cnt < p.max_ops_thread {
+                if let Some(mut g) = wq.done.try_acquire() {
+                    while cnt < p.max_ops_thread {
+                        match g.pop() {
+                            Some(m) => {
+                                rt.process_done_msg(me, m);
+                                cnt += 1;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }
+            total_cnt += cnt;
+        }
+        total_processed += total_cnt as u64;
+        // Line 24: reset the spin budget on progress, decrement otherwise.
+        spins = if total_cnt == 0 { spins.saturating_sub(1) } else { p.max_spins };
+        // Line 25 break conditions.
+        if spins == 0 || rt.ready.ready_count() >= p.min_ready_tasks {
+            break;
+        }
+    }
+
+    rt.stats.mgr_msgs.add(total_processed);
+    rt.mgr_count.fetch_sub(1, Ordering::AcqRel);
+    rt.trace_manager_exit(me);
+    total_processed > 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_values_match_table5() {
+        let p = DdastParams::initial();
+        assert_eq!(p.max_ddast_threads, usize::MAX);
+        assert_eq!(p.max_spins, 20);
+        assert_eq!(p.max_ops_thread, 6);
+        assert_eq!(p.min_ready_tasks, 4);
+    }
+
+    #[test]
+    fn tuned_values_match_table5() {
+        let p = DdastParams::tuned(64);
+        assert_eq!(p.max_ddast_threads, 8, "⌈64/8⌉");
+        assert_eq!(p.max_spins, 1);
+        assert_eq!(p.max_ops_thread, 8);
+        assert_eq!(p.min_ready_tasks, 4);
+        // Small machines still get one manager.
+        assert_eq!(DdastParams::tuned(1).max_ddast_threads, 1);
+        assert_eq!(DdastParams::tuned(4).max_ddast_threads, 1);
+        assert_eq!(DdastParams::tuned(9).max_ddast_threads, 2, "ceiling");
+        assert_eq!(DdastParams::tuned(48).max_ddast_threads, 6);
+    }
+}

@@ -1,0 +1,91 @@
+//! Task data dependences — the `in(...)`, `out(...)`, `inout(...)` clauses
+//! of OmpSs/OpenMP (§2.1.1 of the paper).
+
+use crate::substrate::RegionKey;
+
+/// Access mode of a task on a region.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum DepMode {
+    /// `in(x)` — the task reads `x`; depends on the last writer (RAW).
+    In,
+    /// `out(x)` — the task writes `x`; depends on previous readers (WAR)
+    /// and the previous writer (WAW).
+    Out,
+    /// `inout(x)` — reads and writes; union of the above.
+    Inout,
+}
+
+impl DepMode {
+    #[inline]
+    pub fn reads(self) -> bool {
+        matches!(self, DepMode::In | DepMode::Inout)
+    }
+
+    #[inline]
+    pub fn writes(self) -> bool {
+        matches!(self, DepMode::Out | DepMode::Inout)
+    }
+}
+
+/// One declared dependence of a task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Dependence {
+    pub region: RegionKey,
+    pub mode: DepMode,
+}
+
+impl Dependence {
+    #[inline]
+    pub fn new(region: RegionKey, mode: DepMode) -> Self {
+        Dependence { region, mode }
+    }
+
+    /// Address-keyed dependence (the form the benchmarks use).
+    #[inline]
+    pub fn addr(base: u64, mode: DepMode) -> Self {
+        Dependence { region: RegionKey::addr(base), mode }
+    }
+
+    /// Do two dependences conflict (i.e. order the tasks)? At least one
+    /// side must write and the regions must overlap.
+    #[inline]
+    pub fn conflicts(&self, other: &Dependence) -> bool {
+        (self.mode.writes() || other.mode.writes()) && self.region.overlaps(&other.region)
+    }
+}
+
+/// Convenience constructors mirroring the pragma clauses.
+pub fn dep_in(addr: u64) -> Dependence {
+    Dependence::addr(addr, DepMode::In)
+}
+pub fn dep_out(addr: u64) -> Dependence {
+    Dependence::addr(addr, DepMode::Out)
+}
+pub fn dep_inout(addr: u64) -> Dependence {
+    Dependence::addr(addr, DepMode::Inout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modes() {
+        assert!(DepMode::In.reads() && !DepMode::In.writes());
+        assert!(!DepMode::Out.reads() && DepMode::Out.writes());
+        assert!(DepMode::Inout.reads() && DepMode::Inout.writes());
+    }
+
+    #[test]
+    fn conflicts() {
+        let r = dep_in(1);
+        let r2 = dep_in(1);
+        let w = dep_out(1);
+        let w2 = dep_out(2);
+        assert!(!r.conflicts(&r2), "read-read never conflicts");
+        assert!(r.conflicts(&w));
+        assert!(w.conflicts(&r));
+        assert!(!w.conflicts(&w2), "disjoint regions");
+        assert!(dep_inout(1).conflicts(&dep_inout(1)));
+    }
+}

@@ -1,0 +1,454 @@
+//! The task dependence graph (one *domain* per parent task, §2.2.1).
+//!
+//! Nanos++ keeps a dependence graph per parent task: children can only
+//! depend on sibling tasks, and the graph is protected by a spinlock because
+//! sibling submissions/finalizations may race. Both runtime organizations
+//! use this same code; what differs is *who* calls it (worker threads
+//! directly in the Sync baseline, manager threads in DDAST) and therefore
+//! how contended the lock is.
+//!
+//! Semantics per region (last-writer / reader-set tracking):
+//! * `in`    — RAW edge from the last unfinished writer;
+//! * `out`   — WAR edges from unfinished readers of the current epoch and a
+//!             WAW edge from the last unfinished writer;
+//! * `inout` — both.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::wd::Wd;
+use crate::substrate::{Counter, SpinLock};
+
+/// Per-region bookkeeping: who wrote it last, who has read it since.
+#[derive(Default)]
+struct RegionEntry {
+    last_writer: Option<Arc<Wd>>,
+    readers: Vec<Arc<Wd>>,
+}
+
+struct DomainInner {
+    /// Keyed by region base address (Nanos++ default plugin: exact match).
+    entries: HashMap<u64, RegionEntry>,
+    /// Range-overlap plugin (Nanos++'s "regions" plugin): entries keyed by
+    /// full `(base, len)` regions, conflict = interval overlap. Linear
+    /// scan per op — the correctness-oriented plugin, like the original.
+    ranged: Vec<(crate::substrate::RegionKey, RegionEntry)>,
+    /// Which plugin this domain uses.
+    use_ranges: bool,
+}
+
+/// A dependence domain: the task graph of one parent task's children.
+pub struct DepDomain {
+    inner: SpinLock<DomainInner>,
+    /// Tasks currently in the graph (submitted, not yet done-handled).
+    /// This is the observable plotted in the paper's Figures 12–14.
+    tasks_in_graph: Counter,
+}
+
+impl Default for DepDomain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DepDomain {
+    /// Exact-base-match plugin (Nanos++ default; what the benchmarks use).
+    pub fn new() -> Self {
+        DepDomain {
+            inner: SpinLock::new(DomainInner {
+                entries: HashMap::new(),
+                ranged: Vec::new(),
+                use_ranges: false,
+            }),
+            tasks_in_graph: Counter::new(),
+        }
+    }
+
+    /// Range-overlap plugin: dependences on `(base, len)` regions conflict
+    /// whenever the intervals overlap, not only on exact base match.
+    pub fn new_ranged() -> Self {
+        DepDomain {
+            inner: SpinLock::new(DomainInner {
+                entries: HashMap::new(),
+                ranged: Vec::new(),
+                use_ranges: true,
+            }),
+            tasks_in_graph: Counter::new(),
+        }
+    }
+
+    /// Number of tasks currently tracked by this domain.
+    #[inline]
+    pub fn tasks_in_graph(&self) -> u64 {
+        self.tasks_in_graph.get()
+    }
+
+    /// Lock statistics of the domain spinlock: (acquisitions, contended,
+    /// spin iterations). Fuel for `sim::calibrate`.
+    pub fn lock_stats(&self) -> (u64, u64, u64) {
+        self.inner.stats()
+    }
+
+    /// Insert `task` into the graph, computing its predecessors (task
+    /// life-cycle step 2, "Task submission").
+    ///
+    /// Returns `true` if the task became ready immediately (no pending
+    /// predecessors). The caller is responsible for scheduling it then.
+    pub fn submit(&self, task: &Arc<Wd>) -> bool {
+        {
+            let mut inner = self.inner.lock();
+            if inner.use_ranges {
+                Self::submit_ranged(&mut inner, task);
+            } else {
+                Self::submit_exact(&mut inner, task);
+            }
+        }
+        self.tasks_in_graph.inc();
+        // Release the submission guard; true -> no predecessors remained.
+        task.release_pred()
+    }
+
+    fn submit_exact(inner: &mut DomainInner, task: &Arc<Wd>) {
+        {
+            for dep in &task.deps {
+                let entry = inner.entries.entry(dep.region.base).or_default();
+                let mode = dep.mode;
+                if mode.reads() {
+                    // RAW on the last unfinished writer.
+                    if let Some(w) = &entry.last_writer {
+                        if !w.is_finished() && w.id != task.id {
+                            w.successors.lock().push(Arc::clone(task));
+                            task.add_preds(1);
+                        }
+                    }
+                }
+                if mode.writes() {
+                    // WAR on every unfinished reader of the current epoch.
+                    for r in &entry.readers {
+                        if !r.is_finished() && r.id != task.id {
+                            r.successors.lock().push(Arc::clone(task));
+                            task.add_preds(1);
+                        }
+                    }
+                    // WAW on the last unfinished writer (only needed when
+                    // there were no readers — readers already chain after
+                    // the writer — but adding it is correct and mirrors
+                    // Nanos++' conservative behaviour).
+                    if !mode.reads() {
+                        if let Some(w) = &entry.last_writer {
+                            if !w.is_finished() && w.id != task.id {
+                                w.successors.lock().push(Arc::clone(task));
+                                task.add_preds(1);
+                            }
+                        }
+                    }
+                    // New write epoch: previous readers are superseded.
+                    entry.readers.clear();
+                    entry.last_writer = Some(Arc::clone(task));
+                } else {
+                    entry.readers.push(Arc::clone(task));
+                }
+            }
+        }
+    }
+
+    /// Range-overlap submission: conservative interval semantics — a task
+    /// orders after every unfinished prior accessor whose region overlaps
+    /// conflictingly. Self-registration is on the task's exact region; the
+    /// scan matches by overlap.
+    fn submit_ranged(inner: &mut DomainInner, task: &Arc<Wd>) {
+        for dep in &task.deps {
+            let mode = dep.mode;
+            for (region, entry) in inner.ranged.iter() {
+                if !region.overlaps(&dep.region) {
+                    continue;
+                }
+                // RAW/WAW: order after the overlapping writer.
+                if let Some(w) = &entry.last_writer {
+                    if !w.is_finished() && w.id != task.id {
+                        w.successors.lock().push(Arc::clone(task));
+                        task.add_preds(1);
+                    }
+                }
+                // WAR: a writer orders after overlapping readers.
+                if mode.writes() {
+                    for r in &entry.readers {
+                        if !r.is_finished() && r.id != task.id {
+                            r.successors.lock().push(Arc::clone(task));
+                            task.add_preds(1);
+                        }
+                    }
+                }
+            }
+            // Register on the exact region entry (create on first touch).
+            let idx = match inner.ranged.iter().position(|(r, _)| *r == dep.region) {
+                Some(i) => i,
+                None => {
+                    inner.ranged.push((dep.region, RegionEntry::default()));
+                    inner.ranged.len() - 1
+                }
+            };
+            let entry = &mut inner.ranged[idx].1;
+            if mode.writes() {
+                // Readers of *this exact* region are superseded; partially
+                // overlapping readers stay (conservative, still correct:
+                // they were ordered before this writer above).
+                entry.readers.clear();
+                entry.last_writer = Some(Arc::clone(task));
+            } else {
+                entry.readers.push(Arc::clone(task));
+            }
+        }
+    }
+
+    /// Remove a finished task from the graph and collect the successors
+    /// that become ready (task life-cycle step 5, "Task finalization").
+    ///
+    /// Returns the now-ready tasks; the caller schedules them.
+    pub fn finish(&self, task: &Arc<Wd>) -> Vec<Arc<Wd>> {
+        debug_assert!(task.is_finished(), "finish() before body completed");
+        let succs = {
+            let mut inner = self.inner.lock();
+            // Prune this task from the region entries it touched. The entry
+            // itself is kept (empty) for reuse: benchmarks revisit the same
+            // block regions constantly, and dropping/reinserting entries
+            // was ~10 % of the finish path (EXPERIMENTS.md §Perf iter 1).
+            // Memory stays bounded by the number of *distinct* regions.
+            if inner.use_ranges {
+                for (_, entry) in inner.ranged.iter_mut() {
+                    if entry.last_writer.as_ref().is_some_and(|w| w.id == task.id) {
+                        entry.last_writer = None;
+                    }
+                    entry.readers.retain(|r| r.id != task.id);
+                }
+            } else {
+                for dep in &task.deps {
+                    if let Some(entry) = inner.entries.get_mut(&dep.region.base) {
+                        if entry
+                            .last_writer
+                            .as_ref()
+                            .is_some_and(|w| w.id == task.id)
+                        {
+                            entry.last_writer = None;
+                        }
+                        entry.readers.retain(|r| r.id != task.id);
+                    }
+                }
+            }
+            // Drain the successor list; nobody can append anymore because
+            // `task.is_finished()` is observed under this same lock by
+            // submitters.
+            std::mem::take(&mut *task.successors.lock())
+        };
+        self.tasks_in_graph.dec();
+        let mut ready = Vec::new();
+        for s in succs {
+            if s.release_pred() {
+                ready.push(s);
+            }
+        }
+        ready
+    }
+
+    /// Number of distinct regions ever tracked (test/diagnostic).
+    pub fn regions_tracked(&self) -> usize {
+        let inner = self.inner.lock();
+        inner.entries.len() + inner.ranged.len()
+    }
+
+    /// Regions with a live writer or readers (test/diagnostic).
+    pub fn live_regions(&self) -> usize {
+        let inner = self.inner.lock();
+        inner
+            .entries
+            .values()
+            .chain(inner.ranged.iter().map(|(_, e)| e))
+            .filter(|e| e.last_writer.is_some() || !e.readers.is_empty())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dep::{dep_in, dep_inout, dep_out};
+    use crate::coordinator::wd::{TaskId, WdState};
+    use std::sync::Weak;
+
+    fn mk(id: u64, deps: Vec<crate::coordinator::dep::Dependence>) -> Arc<Wd> {
+        Wd::new(TaskId(id), deps, "t", Weak::new(), Box::new(|| {}))
+    }
+
+    fn finish_body(t: &Arc<Wd>) {
+        t.set_state(WdState::Ready);
+        t.set_state(WdState::Running);
+        t.set_state(WdState::Finished);
+    }
+
+    #[test]
+    fn raw_dependence_chain() {
+        let d = DepDomain::new();
+        let w = mk(1, vec![dep_out(10)]);
+        let r = mk(2, vec![dep_in(10)]);
+        assert!(d.submit(&w), "writer has no preds");
+        assert!(!d.submit(&r), "reader must wait for writer");
+        finish_body(&w);
+        let ready = d.finish(&w);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].id, TaskId(2));
+    }
+
+    #[test]
+    fn war_dependence() {
+        let d = DepDomain::new();
+        let w = mk(1, vec![dep_out(10)]);
+        let r = mk(2, vec![dep_in(10)]);
+        let w2 = mk(3, vec![dep_out(10)]);
+        assert!(d.submit(&w));
+        assert!(!d.submit(&r));
+        assert!(!d.submit(&w2), "second writer waits for reader (WAR)");
+        finish_body(&w);
+        let ready = d.finish(&w);
+        assert_eq!(ready.len(), 1, "reader released");
+        finish_body(&r);
+        let ready = d.finish(&r);
+        assert_eq!(ready.len(), 1, "second writer released after reader");
+        assert_eq!(ready[0].id, TaskId(3));
+    }
+
+    #[test]
+    fn waw_dependence_without_readers() {
+        let d = DepDomain::new();
+        let w1 = mk(1, vec![dep_out(10)]);
+        let w2 = mk(2, vec![dep_out(10)]);
+        assert!(d.submit(&w1));
+        assert!(!d.submit(&w2), "WAW ordering enforced");
+        finish_body(&w1);
+        assert_eq!(d.finish(&w1).len(), 1);
+    }
+
+    #[test]
+    fn concurrent_readers_dont_order() {
+        let d = DepDomain::new();
+        let w = mk(1, vec![dep_out(10)]);
+        assert!(d.submit(&w));
+        finish_body(&w);
+        assert!(d.finish(&w).is_empty());
+        let r1 = mk(2, vec![dep_in(10)]);
+        let r2 = mk(3, vec![dep_in(10)]);
+        assert!(d.submit(&r1), "writer already finished");
+        assert!(d.submit(&r2), "readers run concurrently");
+    }
+
+    #[test]
+    fn inout_chains() {
+        let d = DepDomain::new();
+        let a = mk(1, vec![dep_inout(10)]);
+        let b = mk(2, vec![dep_inout(10)]);
+        let c = mk(3, vec![dep_inout(10)]);
+        assert!(d.submit(&a));
+        assert!(!d.submit(&b));
+        assert!(!d.submit(&c));
+        finish_body(&a);
+        let r = d.finish(&a);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, TaskId(2));
+        finish_body(&b);
+        let r = d.finish(&b);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, TaskId(3));
+    }
+
+    #[test]
+    fn multi_region_preds_counted_per_region() {
+        // Listing 1's propagate/correct pattern: correct(i) needs b[i-1], b[i].
+        let d = DepDomain::new();
+        let p1 = mk(1, vec![dep_out(100)]); // writes b1
+        let p2 = mk(2, vec![dep_out(101)]); // writes b2
+        let c = mk(3, vec![dep_in(100), dep_inout(101)]);
+        assert!(d.submit(&p1));
+        assert!(d.submit(&p2));
+        assert!(!d.submit(&c));
+        assert_eq!(c.pending_preds(), 2);
+        finish_body(&p1);
+        assert!(d.finish(&p1).is_empty(), "c still waits on p2");
+        finish_body(&p2);
+        let r = d.finish(&p2);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, TaskId(3));
+    }
+
+    #[test]
+    fn graph_prunes_entries() {
+        let d = DepDomain::new();
+        for i in 0..100u64 {
+            let t = mk(i + 1, vec![dep_out(i), dep_in(1000 + i)]);
+            d.submit(&t);
+            finish_body(&t);
+            d.finish(&t);
+        }
+        assert_eq!(d.live_regions(), 0, "all entries pruned of content");
+        assert_eq!(d.tasks_in_graph(), 0);
+    }
+
+    #[test]
+    fn tasks_in_graph_gauge() {
+        let d = DepDomain::new();
+        let a = mk(1, vec![dep_out(1)]);
+        let b = mk(2, vec![dep_in(1)]);
+        d.submit(&a);
+        d.submit(&b);
+        assert_eq!(d.tasks_in_graph(), 2);
+        finish_body(&a);
+        d.finish(&a);
+        assert_eq!(d.tasks_in_graph(), 1);
+    }
+
+    #[test]
+    fn ranged_overlap_orders_partial_regions() {
+        use crate::coordinator::dep::{DepMode, Dependence};
+        use crate::substrate::RegionKey;
+        let d = DepDomain::new_ranged();
+        let w = mk_r(1, vec![Dependence::new(RegionKey::new(0, 100), DepMode::Out)]);
+        let r = mk_r(2, vec![Dependence::new(RegionKey::new(50, 100), DepMode::In)]);
+        assert!(d.submit(&w));
+        assert!(!d.submit(&r), "partial overlap must order");
+        finish_body(&w);
+        assert_eq!(d.finish(&w).len(), 1);
+    }
+
+    #[test]
+    fn ranged_disjoint_do_not_order() {
+        use crate::coordinator::dep::{DepMode, Dependence};
+        use crate::substrate::RegionKey;
+        let d = DepDomain::new_ranged();
+        let a = mk_r(1, vec![Dependence::new(RegionKey::new(0, 50), DepMode::Inout)]);
+        let b = mk_r(2, vec![Dependence::new(RegionKey::new(50, 50), DepMode::Inout)]);
+        assert!(d.submit(&a));
+        assert!(d.submit(&b), "disjoint half-open intervals run concurrently");
+    }
+
+    #[test]
+    fn ranged_war_on_overlap() {
+        use crate::coordinator::dep::{DepMode, Dependence};
+        use crate::substrate::RegionKey;
+        let d = DepDomain::new_ranged();
+        let r = mk_r(1, vec![Dependence::new(RegionKey::new(10, 10), DepMode::In)]);
+        let w = mk_r(2, vec![Dependence::new(RegionKey::new(0, 15), DepMode::Out)]);
+        assert!(d.submit(&r), "reader of untouched region is ready");
+        assert!(!d.submit(&w), "writer must wait for overlapping reader");
+        finish_body(&r);
+        assert_eq!(d.finish(&r).len(), 1);
+    }
+
+    fn mk_r(id: u64, deps: Vec<crate::coordinator::dep::Dependence>) -> Arc<Wd> {
+        Wd::new(TaskId(id), deps, "t", Weak::new(), Box::new(|| {}))
+    }
+
+    #[test]
+    fn no_self_dependence() {
+        let d = DepDomain::new();
+        let t = mk(1, vec![dep_in(5), dep_out(5)]);
+        assert!(d.submit(&t), "a task never depends on itself");
+    }
+}

@@ -1,0 +1,172 @@
+//! The Functionality Dispatcher (paper §3.2).
+//!
+//! A registry of callback functions inside the runtime core. Worker threads
+//! notify the dispatcher when they become idle; the dispatcher runs the
+//! registered callbacks on the idle thread, turning it into a temporary
+//! service thread (the DDAST manager is callback #0 in this reproduction,
+//! but the module is generic — §3.2 envisions offload handling, finished
+//! task processing, etc.).
+
+use crate::substrate::{Counter, SpinLock};
+
+/// A registered runtime functionality. Receives the idle worker's id and
+/// returns `true` if it performed useful work (used by the idle loop's
+/// backoff and by tests).
+pub type DispatchCallback = Box<dyn Fn(usize) -> bool + Send + Sync + 'static>;
+
+struct Registered {
+    name: &'static str,
+    callback: DispatchCallback,
+    invocations: Counter,
+    useful: Counter,
+}
+
+/// The dispatcher. Registration is expected at runtime init but is allowed
+/// at any time (the paper allows registration "during the runtime
+/// initialization or the application execution").
+pub struct Dispatcher {
+    // SpinLock<Vec<..>> rather than RwLock: polls vastly outnumber
+    // registrations, and the poll path clones nothing — it iterates under a
+    // short critical section collecting indices, then invokes outside it.
+    callbacks: SpinLock<Vec<std::sync::Arc<Registered>>>,
+    polls: Counter,
+}
+
+impl Default for Dispatcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dispatcher {
+    pub fn new() -> Self {
+        Dispatcher { callbacks: SpinLock::new(Vec::new()), polls: Counter::new() }
+    }
+
+    /// Register a callback under a diagnostic name. Returns its slot index.
+    pub fn register(&self, name: &'static str, callback: DispatchCallback) -> usize {
+        let mut cbs = self.callbacks.lock();
+        cbs.push(std::sync::Arc::new(Registered {
+            name,
+            callback,
+            invocations: Counter::new(),
+            useful: Counter::new(),
+        }));
+        cbs.len() - 1
+    }
+
+    /// A worker became idle: run every registered functionality once.
+    /// Returns `true` if any callback did useful work.
+    pub fn poll_idle(&self, worker: usize) -> bool {
+        self.polls.inc();
+        // Snapshot the registration list (Arc clones) so callbacks run
+        // outside the lock and may themselves register more callbacks.
+        let snapshot: Vec<_> = self.callbacks.lock().iter().cloned().collect();
+        let mut any = false;
+        for reg in snapshot {
+            reg.invocations.inc();
+            if (reg.callback)(worker) {
+                reg.useful.inc();
+                any = true;
+            }
+        }
+        any
+    }
+
+    /// Number of registered functionalities.
+    pub fn len(&self) -> usize {
+        self.callbacks.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total idle notifications received.
+    pub fn poll_count(&self) -> u64 {
+        self.polls.get()
+    }
+
+    /// Per-callback (name, invocations, useful invocations).
+    pub fn callback_stats(&self) -> Vec<(&'static str, u64, u64)> {
+        self.callbacks
+            .lock()
+            .iter()
+            .map(|r| (r.name, r.invocations.get(), r.useful.get()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn registered_callback_runs_on_poll() {
+        let d = Dispatcher::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        d.register("test", Box::new(move |_w| {
+            h.fetch_add(1, Ordering::Relaxed);
+            true
+        }));
+        assert!(d.poll_idle(3));
+        assert!(d.poll_idle(1));
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+        assert_eq!(d.poll_count(), 2);
+    }
+
+    #[test]
+    fn useful_work_reported() {
+        let d = Dispatcher::new();
+        d.register("never-useful", Box::new(|_| false));
+        assert!(!d.poll_idle(0));
+        d.register("useful", Box::new(|_| true));
+        assert!(d.poll_idle(0));
+        let stats = d.callback_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].0, "never-useful");
+        assert_eq!(stats[0].2, 0);
+        assert_eq!(stats[1].2, 1);
+    }
+
+    #[test]
+    fn callback_receives_worker_id() {
+        let d = Dispatcher::new();
+        let seen = Arc::new(AtomicUsize::new(usize::MAX));
+        let s = Arc::clone(&seen);
+        d.register("id", Box::new(move |w| {
+            s.store(w, Ordering::Relaxed);
+            false
+        }));
+        d.poll_idle(7);
+        assert_eq!(seen.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn registration_during_execution() {
+        // A callback may register another callback while running.
+        let d = Arc::new(Dispatcher::new());
+        let d2 = Arc::clone(&d);
+        let once = Arc::new(AtomicUsize::new(0));
+        let o = Arc::clone(&once);
+        d.register("registrar", Box::new(move |_| {
+            if o.swap(1, Ordering::Relaxed) == 0 {
+                d2.register("child", Box::new(|_| true));
+            }
+            false
+        }));
+        d.poll_idle(0);
+        assert_eq!(d.len(), 2);
+        assert!(d.poll_idle(0), "child callback now does work");
+    }
+
+    #[test]
+    fn empty_dispatcher() {
+        let d = Dispatcher::new();
+        assert!(d.is_empty());
+        assert!(!d.poll_idle(0));
+    }
+}

@@ -1,0 +1,161 @@
+//! Messages and the per-worker queuing system (paper §3.1).
+//!
+//! Two message types only:
+//! * **Submit Task Message** — a worker created a task and asks the manager
+//!   to insert it into the dependence graph;
+//! * **Done Task Message** — a worker finished a task's body and asks the
+//!   manager to notify/schedule its successors.
+//!
+//! Task deletion needs no third message: the `DoneHandled` state on the WD
+//! carries that synchronization (§3.1, last paragraph).
+//!
+//! Each worker owns one queue *pair*; only the owning worker pushes, and
+//! the Submit queue is FIFO with an exclusive consumer token so the graph
+//! sees submissions in program order (§3.1, ordering discussion).
+
+use std::sync::Arc;
+
+use crate::coordinator::wd::Wd;
+use crate::substrate::{Counter, SpscQueue};
+
+/// Request to insert a created task into the dependence graph.
+#[derive(Debug)]
+pub struct SubmitTaskMsg {
+    pub task: Arc<Wd>,
+}
+
+/// Notification that a task's body finished.
+#[derive(Debug)]
+pub struct DoneTaskMsg {
+    pub task: Arc<Wd>,
+    /// Worker that executed the task (successors are scheduled to its
+    /// ready queue for locality).
+    pub worker: usize,
+}
+
+/// The queue pair owned by one worker thread.
+pub struct WorkerQueues {
+    pub submit: SpscQueue<SubmitTaskMsg>,
+    pub done: SpscQueue<DoneTaskMsg>,
+}
+
+impl Default for WorkerQueues {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkerQueues {
+    pub fn new() -> Self {
+        WorkerQueues { submit: SpscQueue::new(), done: SpscQueue::new() }
+    }
+
+    /// Total messages currently pending in this pair.
+    pub fn pending(&self) -> usize {
+        self.submit.len() + self.done.len()
+    }
+}
+
+/// All workers' queues plus a global pending gauge for quiescence checks.
+pub struct QueueSystem {
+    pub workers: Vec<WorkerQueues>,
+    /// Messages pushed and not yet fully *processed* (not merely popped):
+    /// the counter is decremented after the graph mutation completes, so
+    /// `pending() == 0` means the runtime structures are up to date.
+    pending: Counter,
+}
+
+impl QueueSystem {
+    pub fn new(num_workers: usize) -> Self {
+        QueueSystem {
+            workers: (0..num_workers).map(|_| WorkerQueues::new()).collect(),
+            pending: Counter::new(),
+        }
+    }
+
+    #[inline]
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Push a Submit Task Message from `worker` (its own queue only).
+    pub fn push_submit(&self, worker: usize, task: Arc<Wd>) {
+        self.pending.inc();
+        self.workers[worker].submit.push(SubmitTaskMsg { task });
+    }
+
+    /// Push a Done Task Message from `worker`.
+    pub fn push_done(&self, worker: usize, task: Arc<Wd>) {
+        self.pending.inc();
+        self.workers[worker].done.push(DoneTaskMsg { task, worker });
+    }
+
+    /// Mark one popped message as fully processed.
+    #[inline]
+    pub fn message_processed(&self) {
+        self.pending.dec();
+    }
+
+    /// Messages pushed but not yet fully processed.
+    #[inline]
+    pub fn pending(&self) -> u64 {
+        self.pending.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::wd::TaskId;
+    use std::sync::Weak;
+
+    fn mk(id: u64) -> Arc<Wd> {
+        Wd::new(TaskId(id), Vec::new(), "t", Weak::new(), Box::new(|| {}))
+    }
+
+    #[test]
+    fn submit_fifo_per_worker() {
+        let qs = QueueSystem::new(2);
+        qs.push_submit(0, mk(1));
+        qs.push_submit(0, mk(2));
+        qs.push_submit(1, mk(3));
+        assert_eq!(qs.pending(), 3);
+        let mut g = qs.workers[0].submit.try_acquire().unwrap();
+        assert_eq!(g.pop().unwrap().task.id, TaskId(1));
+        assert_eq!(g.pop().unwrap().task.id, TaskId(2));
+        assert!(g.pop().is_none());
+    }
+
+    #[test]
+    fn pending_tracks_processing_not_popping() {
+        let qs = QueueSystem::new(1);
+        qs.push_done(0, mk(1));
+        let msg = {
+            let mut g = qs.workers[0].done.try_acquire().unwrap();
+            g.pop().unwrap()
+        };
+        // Popped but not processed yet.
+        assert_eq!(qs.pending(), 1);
+        drop(msg);
+        qs.message_processed();
+        assert_eq!(qs.pending(), 0);
+    }
+
+    #[test]
+    fn done_records_executing_worker() {
+        let qs = QueueSystem::new(3);
+        qs.push_done(2, mk(9));
+        let mut g = qs.workers[2].done.try_acquire().unwrap();
+        let m = g.pop().unwrap();
+        assert_eq!(m.worker, 2);
+    }
+
+    #[test]
+    fn queue_pair_pending() {
+        let wq = WorkerQueues::new();
+        assert_eq!(wq.pending(), 0);
+        wq.submit.push(SubmitTaskMsg { task: mk(1) });
+        wq.done.push(DoneTaskMsg { task: mk(2), worker: 0 });
+        assert_eq!(wq.pending(), 2);
+    }
+}

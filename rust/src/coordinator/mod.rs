@@ -1,0 +1,28 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! An OmpSs/Nanos++-style task runtime with three interchangeable
+//! organizations (`RuntimeKind`): the synchronous baseline, the paper's
+//! asynchronous DDAST organization, and a GOMP-like comparator. See the
+//! crate docs and DESIGN.md for the module map.
+
+pub mod api;
+pub mod autotune;
+pub mod ddast;
+pub mod dep;
+pub mod depgraph;
+pub mod dispatcher;
+pub mod messages;
+pub mod pool;
+pub mod ready;
+pub mod trace;
+pub mod wd;
+
+pub use api::{TaskSystem, TaskSystemBuilder};
+pub use autotune::{AutoTuner, TunableParams};
+pub use ddast::DdastParams;
+pub use dep::{dep_in, dep_inout, dep_out, DepMode, Dependence};
+pub use depgraph::DepDomain;
+pub use dispatcher::Dispatcher;
+pub use pool::{RuntimeKind, RuntimeShared};
+pub use trace::{ThreadState, TraceEvent, TraceKind, Tracer};
+pub use wd::{TaskId, Wd, WdState};

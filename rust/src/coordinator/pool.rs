@@ -1,0 +1,590 @@
+//! The worker thread pool and the runtime core shared state.
+//!
+//! Implements the paper's task flow (Fig 2 for the Sync baseline, Fig 3 for
+//! DDAST): task creation/submission, the idle loop that notifies the
+//! Functionality Dispatcher, task execution, finalization and the
+//! `DoneHandled`/`Deletable` deletion protocol, plus `taskwait`.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::ddast::{ddast_callback, DdastParams};
+use crate::coordinator::dep::Dependence;
+use crate::coordinator::dispatcher::Dispatcher;
+use crate::coordinator::messages::{DoneTaskMsg, QueueSystem};
+use crate::coordinator::ready::ReadyPools;
+use crate::coordinator::trace::{ThreadState, TraceKind, Tracer};
+use crate::coordinator::wd::{TaskBody, TaskId, Wd, WdState};
+use crate::substrate::Counter;
+
+/// Which runtime organization to run (paper §6.1's compared runtimes, plus
+/// the authors' earlier centralized design [7] for lineage comparison).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RuntimeKind {
+    /// `Nanos++` baseline: worker threads mutate the dependence graph
+    /// directly under the domain spinlocks (Fig 2).
+    Sync,
+    /// The paper's contribution: asynchronous requests to a distributed
+    /// manager running on idle threads (Fig 3).
+    Ddast,
+    /// The authors' previous design (IPDPSW'17 [7]): same message queues,
+    /// but one *dedicated* manager thread (the DAS Thread) drains them —
+    /// worker threads never become managers. One core is spent on
+    /// management permanently; the manager saturates at scale, which is
+    /// what motivated DDAST.
+    CentralDast,
+    /// GOMP-like comparator: direct graph mutation + one centralized ready
+    /// queue all threads contend on.
+    GompLike,
+}
+
+impl RuntimeKind {
+    /// Does this organization communicate through the message queues?
+    #[inline]
+    pub fn asynchronous(self) -> bool {
+        matches!(self, RuntimeKind::Ddast | RuntimeKind::CentralDast)
+    }
+}
+
+/// Aggregate runtime statistics.
+#[derive(Default)]
+pub struct RtStats {
+    pub tasks_created: Counter,
+    pub tasks_executed: Counter,
+    /// Tasks created but not yet done-handled (quiescence gauge).
+    pub tasks_outstanding: Counter,
+    pub mgr_activations: Counter,
+    pub mgr_msgs: Counter,
+    /// Peak number of threads concurrently inside the DDAST callback
+    /// (invariant: never exceeds `MAX_DDAST_THREADS` — DESIGN.md #4).
+    pub mgr_peak: Counter,
+    pub graph_submits: Counter,
+    pub graph_finishes: Counter,
+}
+
+thread_local! {
+    /// (runtime, worker id, current task stack) of the thread.
+    static CTX: RefCell<Option<WorkerCtx>> = const { RefCell::new(None) };
+}
+
+struct WorkerCtx {
+    rt: Arc<RuntimeShared>,
+    worker: usize,
+    task_stack: Vec<Arc<Wd>>,
+}
+
+/// Everything the workers share. Owned by [`crate::coordinator::api::TaskSystem`].
+pub struct RuntimeShared {
+    pub kind: RuntimeKind,
+    /// Parameters at construction (the static defaults).
+    pub params: DdastParams,
+    /// Live parameters — adjustable at runtime by the auto-tuner (§8
+    /// future work); the DDAST callback snapshots these on entry.
+    tunables: Arc<crate::coordinator::autotune::TunableParams>,
+    pub num_threads: usize,
+    pub queues: QueueSystem,
+    pub ready: ReadyPools,
+    pub dispatcher: Dispatcher,
+    /// The implicit whole-program task; parent of top-level tasks.
+    pub root: Arc<Wd>,
+    /// Threads currently inside the DDAST callback (Listing 2's
+    /// `numThreads`).
+    pub mgr_count: AtomicUsize,
+    pub stats: RtStats,
+    pub tracer: Option<Tracer>,
+    /// Use the range-overlap dependence plugin for new domains
+    /// (TaskSystemBuilder::ranged_deps).
+    pub ranged_deps: bool,
+    shutdown: AtomicBool,
+    next_task_id: AtomicU64,
+}
+
+impl RuntimeShared {
+    pub fn new(
+        kind: RuntimeKind,
+        num_threads: usize,
+        params: DdastParams,
+        tracing: bool,
+        seed: u64,
+    ) -> Arc<Self> {
+        Self::new_with_plugin(kind, num_threads, params, tracing, seed, false)
+    }
+
+    /// Like [`RuntimeShared::new`], selecting the dependence plugin
+    /// (`ranged_deps = true` → range-overlap regions).
+    pub fn new_with_plugin(
+        kind: RuntimeKind,
+        num_threads: usize,
+        params: DdastParams,
+        tracing: bool,
+        seed: u64,
+        ranged_deps: bool,
+    ) -> Arc<Self> {
+        assert!(num_threads >= 1, "need at least the main thread");
+        // GOMP-like: a single central ready queue all threads hit.
+        let ready_queues = if kind == RuntimeKind::GompLike { 1 } else { num_threads };
+        Arc::new(RuntimeShared {
+            kind,
+            params,
+            tunables: Arc::new(crate::coordinator::autotune::TunableParams::new(params)),
+            num_threads,
+            queues: QueueSystem::new(num_threads),
+            ready: ReadyPools::new(ready_queues, seed),
+            dispatcher: Dispatcher::new(),
+            root: Wd::root(),
+            mgr_count: AtomicUsize::new(0),
+            stats: RtStats::default(),
+            tracer: if tracing { Some(Tracer::new(num_threads)) } else { None },
+            ranged_deps,
+            shutdown: AtomicBool::new(false),
+            next_task_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Register the DDAST callback in the Functionality Dispatcher (§3.2's
+    /// sequence diagram step "register callback", done at runtime init).
+    pub fn register_ddast(self: &Arc<Self>) {
+        let rt = Arc::clone(self);
+        self.dispatcher
+            .register("ddast", Box::new(move |worker| ddast_callback(&rt, worker)));
+    }
+
+    /// Register the DDAST callback restricted to a subset of workers — the
+    /// paper's big.LITTLE adaptation (§8: "allowing a subset of the worker
+    /// threads to become manager threads", e.g. only the LITTLE cores).
+    pub fn register_ddast_with_affinity(self: &Arc<Self>, allowed_workers: Vec<usize>) {
+        let rt = Arc::clone(self);
+        let mut mask = vec![false; self.num_threads + 1];
+        for w in allowed_workers {
+            if w < mask.len() {
+                mask[w] = true;
+            }
+        }
+        assert!(
+            mask.iter().any(|&b| b),
+            "manager affinity must allow at least one worker (deadlock otherwise)"
+        );
+        self.dispatcher.register(
+            "ddast(affinity)",
+            Box::new(move |worker| {
+                if !mask.get(worker).copied().unwrap_or(false) {
+                    return false;
+                }
+                ddast_callback(&rt, worker)
+            }),
+        );
+    }
+
+    /// Live (auto-tunable) DDAST parameters.
+    #[inline]
+    pub fn tunables(&self) -> &Arc<crate::coordinator::autotune::TunableParams> {
+        &self.tunables
+    }
+
+    #[inline]
+    pub fn fresh_task_id(&self) -> TaskId {
+        TaskId(self.next_task_id.fetch_add(1, Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+
+    /// All work done and all messages processed?
+    pub fn quiescent(&self) -> bool {
+        self.stats.tasks_outstanding.get() == 0
+            && self.queues.pending() == 0
+            && self.ready.ready_count() == 0
+    }
+
+    // ---- tracing helpers -------------------------------------------------
+
+    #[inline]
+    pub fn trace_manager_enter(&self, worker: usize) {
+        if let Some(t) = &self.tracer {
+            t.record(worker, TraceKind::State { worker, state: ThreadState::Manager, label: "" });
+        }
+    }
+
+    #[inline]
+    pub fn trace_manager_exit(&self, worker: usize) {
+        if let Some(t) = &self.tracer {
+            t.record(worker, TraceKind::State { worker, state: ThreadState::Idle, label: "" });
+        }
+    }
+
+    #[inline]
+    fn trace_gauges(&self, worker: usize) {
+        if let Some(t) = &self.tracer {
+            let in_graph = self.root.child_domain_opt().map_or(0, |d| d.tasks_in_graph());
+            t.record(worker, TraceKind::InGraph(in_graph));
+            t.record(worker, TraceKind::Ready(self.ready.ready_count()));
+        }
+    }
+
+    // ---- task life cycle -------------------------------------------------
+
+    /// Create + submit a task (life-cycle steps 1 and 2). `worker` is the
+    /// creating thread; `parent` the creating task.
+    pub fn spawn_from(
+        self: &Arc<Self>,
+        worker: usize,
+        parent: &Arc<Wd>,
+        deps: Vec<Dependence>,
+        label: &'static str,
+        body: TaskBody,
+    ) -> Arc<Wd> {
+        assert!(
+            !self.shutdown_requested(),
+            "spawn after shutdown was requested"
+        );
+        let wd = Wd::new(self.fresh_task_id(), deps, label, Arc::downgrade(parent), body);
+        parent.child_created();
+        self.stats.tasks_created.inc();
+        self.stats.tasks_outstanding.inc();
+
+        if wd.deps.is_empty() {
+            // Fast path: no dependences -> never enters the graph; ready
+            // immediately in every organization.
+            wd.set_state(WdState::Submitted);
+            let became_ready = wd.release_pred();
+            debug_assert!(became_ready);
+            wd.set_state(WdState::Ready);
+            self.ready.push(worker, Arc::clone(&wd));
+            self.trace_gauges(worker);
+            return wd;
+        }
+
+        match self.kind {
+            RuntimeKind::Sync | RuntimeKind::GompLike => {
+                // Fig 2: the creating thread updates the graph itself,
+                // contending on the domain spinlock.
+                self.process_submit_direct(worker, Arc::clone(&wd));
+            }
+            RuntimeKind::Ddast | RuntimeKind::CentralDast => {
+                // Fig 3: request the runtime operation instead and return
+                // to application code immediately.
+                self.queues.push_submit(worker, Arc::clone(&wd));
+            }
+        }
+        self.trace_gauges(worker);
+        wd
+    }
+
+    fn process_submit_direct(&self, worker: usize, task: Arc<Wd>) {
+        let parent = task.parent.upgrade().expect("parent outlives children");
+        let domain = parent.child_domain_with(self.ranged_deps);
+        task.set_state(WdState::Submitted);
+        self.stats.graph_submits.inc();
+        if domain.submit(&task) {
+            task.set_state(WdState::Ready);
+            self.ready.push(worker, task);
+        }
+    }
+
+    /// Manager-side handling of a Submit Task Message.
+    pub fn process_submit(&self, mgr_worker: usize, task: Arc<Wd>) {
+        self.process_submit_direct(mgr_worker, task);
+        self.queues.message_processed();
+        self.trace_gauges(mgr_worker);
+    }
+
+    /// Manager-side handling of a Done Task Message.
+    pub fn process_done_msg(&self, mgr_worker: usize, msg: DoneTaskMsg) {
+        self.finalize_task(mgr_worker, &msg.task);
+        self.queues.message_processed();
+        self.trace_gauges(mgr_worker);
+    }
+
+    /// Life-cycle step 5/6: remove from graph, wake successors, run the
+    /// deletion-state protocol. Called by the worker itself (Sync/GOMP) or
+    /// by a manager thread (DDAST).
+    fn finalize_task(&self, worker: usize, task: &Arc<Wd>) {
+        let parent = task.parent.upgrade().expect("parent outlives children");
+        if !task.deps.is_empty() {
+            let domain = parent.child_domain_with(self.ranged_deps);
+            self.stats.graph_finishes.inc();
+            let ready = domain.finish(task);
+            for t in &ready {
+                t.set_state(WdState::Ready);
+            }
+            self.ready.push_batch(worker, ready);
+        }
+        // §3.1: deletion synchronization through an extra state rather than
+        // a third message type.
+        task.set_state(WdState::DoneHandled);
+        if task.children_live() == 0 {
+            task.set_state(WdState::Deletable);
+        }
+        self.stats.tasks_outstanding.dec();
+        if parent.child_done() && parent.done_handled() {
+            parent.set_state(WdState::Deletable);
+        }
+    }
+
+    /// Execute a ready task on `worker` (life-cycle steps 3–5).
+    pub fn run_task(self: &Arc<Self>, worker: usize, task: Arc<Wd>) {
+        task.set_state(WdState::Running);
+        if let Some(t) = &self.tracer {
+            t.record(worker, TraceKind::TaskStart { worker, id: task.id.0, label: task.label });
+            t.record(
+                worker,
+                TraceKind::State { worker, state: ThreadState::Task, label: task.label },
+            );
+        }
+        let body = task.take_body();
+        // Make the executing task the current task for nested spawns.
+        CTX.with(|c| {
+            if let Some(ctx) = c.borrow_mut().as_mut() {
+                ctx.task_stack.push(Arc::clone(&task));
+            }
+        });
+        body();
+        CTX.with(|c| {
+            if let Some(ctx) = c.borrow_mut().as_mut() {
+                let popped = ctx.task_stack.pop();
+                debug_assert!(popped.is_some_and(|p| p.id == task.id));
+            }
+        });
+        task.set_state(WdState::Finished);
+        self.stats.tasks_executed.inc();
+        if let Some(t) = &self.tracer {
+            t.record(worker, TraceKind::TaskEnd { worker, id: task.id.0 });
+            t.record(worker, TraceKind::State { worker, state: ThreadState::Idle, label: "" });
+        }
+        match self.kind {
+            RuntimeKind::Sync | RuntimeKind::GompLike => self.finalize_task(worker, &task),
+            RuntimeKind::Ddast | RuntimeKind::CentralDast => self.queues.push_done(worker, task),
+        }
+        self.trace_gauges(worker);
+    }
+
+    /// One scheduling attempt for `worker`: run a ready task, else notify
+    /// the Functionality Dispatcher (§3.2: idle threads run registered
+    /// functionalities). Returns true if anything useful happened.
+    pub fn try_make_progress(self: &Arc<Self>, worker: usize) -> bool {
+        if let Some(task) = self.ready.get(worker) {
+            self.run_task(worker, task);
+            return true;
+        }
+        self.dispatcher.poll_idle(worker)
+    }
+
+    /// Block the current task until all its children are done-handled
+    /// (the `taskwait` annotation, §2.1.1). The blocked thread keeps
+    /// executing other ready tasks / runtime functionalities meanwhile
+    /// (task life-cycle step 4, "Task becomes blocked").
+    pub fn taskwait_on(self: &Arc<Self>, worker: usize, task: &Arc<Wd>) {
+        let mut idle: u32 = 0;
+        while task.children_live() > 0 {
+            if self.try_make_progress(worker) {
+                idle = 0;
+            } else {
+                idle += 1;
+                idle_backoff(idle);
+            }
+        }
+    }
+
+    /// The dedicated DAS Thread loop of the centralized design
+    /// (`RuntimeKind::CentralDast`, the authors' IPDPSW'17 system [7]):
+    /// drains every worker's queues continuously and never executes
+    /// application tasks. `worker_slot` is an extra context slot beyond
+    /// the workers (its ready pushes wrap onto worker queues).
+    pub fn dast_thread_loop(self: Arc<Self>, worker_slot: usize) {
+        install_ctx(&self, worker_slot);
+        let mut idle: u32 = 0;
+        loop {
+            let mut processed: u64 = 0;
+            for w in 0..self.queues.num_workers() {
+                let wq = &self.queues.workers[w];
+                if let Some(mut g) = wq.submit.try_acquire() {
+                    while let Some(m) = g.pop() {
+                        self.process_submit(worker_slot, m.task);
+                        processed += 1;
+                    }
+                }
+                if let Some(mut g) = wq.done.try_acquire() {
+                    while let Some(m) = g.pop() {
+                        self.process_done_msg(worker_slot, m);
+                        processed += 1;
+                    }
+                }
+            }
+            if processed > 0 {
+                self.stats.mgr_activations.inc();
+                self.stats.mgr_msgs.add(processed);
+                idle = 0;
+                continue;
+            }
+            if self.shutdown_requested() && self.quiescent() {
+                break;
+            }
+            idle += 1;
+            idle_backoff(idle);
+        }
+        clear_ctx();
+    }
+
+    /// The worker thread main loop.
+    pub fn worker_loop(self: Arc<Self>, worker: usize) {
+        install_ctx(&self, worker);
+        let mut idle: u32 = 0;
+        loop {
+            if self.try_make_progress(worker) {
+                idle = 0;
+                continue;
+            }
+            if self.shutdown_requested() && self.quiescent() {
+                break;
+            }
+            idle += 1;
+            idle_backoff(idle);
+        }
+        clear_ctx();
+    }
+}
+
+/// Idle back-off: spin briefly, then yield, then sleep. The sleep tier
+/// matters when the host is oversubscribed (more runtime threads than
+/// cores — always true on this 1-core box): pure spin/yield starves
+/// whoever holds actual work (e.g. the PJRT service thread).
+#[inline]
+fn idle_backoff(idle: u32) {
+    if idle < 16 {
+        std::hint::spin_loop();
+    } else if idle < 256 {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(std::time::Duration::from_micros(100));
+    }
+}
+
+/// Bind this thread to `rt` as `worker` (main thread and pool threads).
+pub fn install_ctx(rt: &Arc<RuntimeShared>, worker: usize) {
+    CTX.with(|c| {
+        *c.borrow_mut() = Some(WorkerCtx { rt: Arc::clone(rt), worker, task_stack: Vec::new() })
+    });
+}
+
+pub fn clear_ctx() {
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+/// (runtime, worker id, current task) of the calling thread, if bound.
+pub fn current_ctx() -> Option<(Arc<RuntimeShared>, usize, Arc<Wd>)> {
+    CTX.with(|c| {
+        c.borrow().as_ref().map(|ctx| {
+            let cur = ctx.task_stack.last().cloned().unwrap_or_else(|| Arc::clone(&ctx.rt.root));
+            (Arc::clone(&ctx.rt), ctx.worker, cur)
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dep::{dep_in, dep_out};
+    use std::sync::atomic::AtomicUsize;
+
+    fn rt(kind: RuntimeKind) -> Arc<RuntimeShared> {
+        let rt = RuntimeShared::new(kind, 1, DdastParams::tuned(1), false, 42);
+        if kind == RuntimeKind::Ddast {
+            rt.register_ddast();
+        }
+        install_ctx(&rt, 0);
+        rt
+    }
+
+    fn drain(rt: &Arc<RuntimeShared>) {
+        let root = Arc::clone(&rt.root);
+        rt.taskwait_on(0, &root);
+    }
+
+    #[test]
+    fn sync_runs_dependent_tasks_in_order() {
+        let rt = rt(RuntimeKind::Sync);
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let (o1, o2) = (Arc::clone(&order), Arc::clone(&order));
+        let root = Arc::clone(&rt.root);
+        rt.spawn_from(0, &root, vec![dep_out(1)], "w", Box::new(move || o1.lock().unwrap().push(1)));
+        rt.spawn_from(0, &root, vec![dep_in(1)], "r", Box::new(move || o2.lock().unwrap().push(2)));
+        drain(&rt);
+        assert_eq!(*order.lock().unwrap(), vec![1, 2]);
+        assert_eq!(rt.stats.tasks_executed.get(), 2);
+        clear_ctx();
+    }
+
+    #[test]
+    fn ddast_single_thread_self_drains() {
+        let rt = rt(RuntimeKind::Ddast);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let root = Arc::clone(&rt.root);
+        for i in 0..100u64 {
+            let h = Arc::clone(&hits);
+            rt.spawn_from(
+                0,
+                &root,
+                vec![dep_inout_addr(i % 7)],
+                "t",
+                Box::new(move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+        }
+        drain(&rt);
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert!(rt.quiescent());
+        assert!(rt.stats.mgr_activations.get() > 0, "the idle thread became a manager");
+        clear_ctx();
+    }
+
+    fn dep_inout_addr(a: u64) -> Dependence {
+        crate::coordinator::dep::dep_inout(a)
+    }
+
+    #[test]
+    fn gomp_like_runs_everything() {
+        let rt = rt(RuntimeKind::GompLike);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let root = Arc::clone(&rt.root);
+        for _ in 0..50 {
+            let h = Arc::clone(&hits);
+            rt.spawn_from(0, &root, vec![], "t", Box::new(move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        drain(&rt);
+        assert_eq!(hits.load(Ordering::Relaxed), 50);
+        clear_ctx();
+    }
+
+    #[test]
+    fn deletion_protocol_reaches_deletable() {
+        let rt = rt(RuntimeKind::Sync);
+        let root = Arc::clone(&rt.root);
+        let wd = rt.spawn_from(0, &root, vec![dep_out(9)], "t", Box::new(|| {}));
+        drain(&rt);
+        assert_eq!(wd.state(), WdState::Deletable);
+        clear_ctx();
+    }
+
+    #[test]
+    fn outstanding_gauge_settles_to_zero() {
+        let rt = rt(RuntimeKind::Ddast);
+        let root = Arc::clone(&rt.root);
+        for i in 0..20u64 {
+            rt.spawn_from(0, &root, vec![dep_out(i)], "t", Box::new(|| {}));
+        }
+        drain(&rt);
+        assert_eq!(rt.stats.tasks_outstanding.get(), 0);
+        assert_eq!(rt.queues.pending(), 0);
+        clear_ctx();
+    }
+}

@@ -1,0 +1,211 @@
+//! Ready-task pools: the Distributed Breadth-First (DBF) scheduling policy.
+//!
+//! §4 of the paper: "The DBF policy uses a queue of ready tasks for each
+//! thread with a stealing mechanism". Ready tasks are pushed FIFO to the
+//! enqueueing thread's own queue (breadth-first within a thread) and idle
+//! threads steal from victims chosen round-robin from a random start.
+//!
+//! A global gauge of ready tasks is maintained because the DDAST callback's
+//! `MIN_READY_TASKS` break condition needs an O(1) read (Listing 2 line 7).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::coordinator::wd::Wd;
+use crate::substrate::{Counter, SpinLock, XorShift64};
+
+/// Per-thread ready queues with stealing.
+pub struct ReadyPools {
+    queues: Vec<SpinLock<VecDeque<Arc<Wd>>>>,
+    ready_count: Counter,
+    steals: Counter,
+    /// Per-thread RNG state for victim selection (index = thread id).
+    rngs: Vec<SpinLock<XorShift64>>,
+}
+
+impl ReadyPools {
+    pub fn new(num_threads: usize, seed: u64) -> Self {
+        ReadyPools {
+            queues: (0..num_threads).map(|_| SpinLock::new(VecDeque::new())).collect(),
+            ready_count: Counter::new(),
+            steals: Counter::new(),
+            rngs: (0..num_threads)
+                .map(|i| SpinLock::new(XorShift64::new(seed ^ (i as u64).wrapping_mul(0xA24BAED4963EE407))))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn num_threads(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Global number of ready tasks across all queues.
+    #[inline]
+    pub fn ready_count(&self) -> u64 {
+        self.ready_count.get()
+    }
+
+    /// Total successful steals (diagnostics / calibration).
+    #[inline]
+    pub fn steal_count(&self) -> u64 {
+        self.steals.get()
+    }
+
+    /// Push a task that just became ready onto `thread`'s queue.
+    pub fn push(&self, thread: usize, task: Arc<Wd>) {
+        self.queues[thread % self.queues.len()].lock().push_back(task);
+        self.ready_count.inc();
+    }
+
+    /// Push a batch (used by done-message processing which can release
+    /// several successors at once — one lock acquisition).
+    pub fn push_batch(&self, thread: usize, tasks: Vec<Arc<Wd>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len() as u64;
+        {
+            let mut q = self.queues[thread % self.queues.len()].lock();
+            for t in tasks {
+                q.push_back(t);
+            }
+        }
+        self.ready_count.add(n);
+    }
+
+    /// Get work for `thread`: own queue first (FIFO), then steal.
+    pub fn get(&self, thread: usize) -> Option<Arc<Wd>> {
+        let me = thread % self.queues.len();
+        if let Some(t) = self.queues[me].lock().pop_front() {
+            self.ready_count.dec();
+            return Some(t);
+        }
+        self.steal(me)
+    }
+
+    /// Try to steal from another thread's queue. Victims are scanned
+    /// round-robin from a random start so steals spread out.
+    fn steal(&self, me: usize) -> Option<Arc<Wd>> {
+        let n = self.queues.len();
+        if n <= 1 {
+            return None;
+        }
+        // Fast path: nothing anywhere.
+        if self.ready_count.get() == 0 {
+            return None;
+        }
+        let start = self.rngs[me].lock().next_below(n as u64) as usize;
+        for k in 0..n {
+            let v = (start + k) % n;
+            if v == me {
+                continue;
+            }
+            // Steal from the *back* (oldest work stays with the owner's
+            // FIFO front; stealing the back grabs the most recently
+            // released — deepest — work, the classic DBF choice).
+            if let Some(mut q) = self.queues[v].try_lock() {
+                if let Some(t) = q.pop_back() {
+                    drop(q);
+                    self.ready_count.dec();
+                    self.steals.inc();
+                    return Some(t);
+                }
+            }
+        }
+        None
+    }
+
+    /// Drain everything (shutdown path / tests).
+    pub fn drain_all(&self) -> Vec<Arc<Wd>> {
+        let mut out = Vec::new();
+        for q in &self.queues {
+            let mut q = q.lock();
+            while let Some(t) = q.pop_front() {
+                self.ready_count.dec();
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::wd::TaskId;
+    use std::sync::Weak;
+
+    fn mk(id: u64) -> Arc<Wd> {
+        Wd::new(TaskId(id), Vec::new(), "t", Weak::new(), Box::new(|| {}))
+    }
+
+    #[test]
+    fn fifo_within_own_queue() {
+        let p = ReadyPools::new(2, 1);
+        p.push(0, mk(1));
+        p.push(0, mk(2));
+        p.push(0, mk(3));
+        assert_eq!(p.ready_count(), 3);
+        assert_eq!(p.get(0).unwrap().id, TaskId(1));
+        assert_eq!(p.get(0).unwrap().id, TaskId(2));
+        assert_eq!(p.get(0).unwrap().id, TaskId(3));
+        assert_eq!(p.ready_count(), 0);
+    }
+
+    #[test]
+    fn stealing_when_own_empty() {
+        let p = ReadyPools::new(2, 1);
+        p.push(0, mk(1));
+        let got = p.get(1).expect("thread 1 steals from thread 0");
+        assert_eq!(got.id, TaskId(1));
+        assert_eq!(p.steal_count(), 1);
+    }
+
+    #[test]
+    fn steal_takes_back_of_victim() {
+        let p = ReadyPools::new(2, 1);
+        p.push(0, mk(1));
+        p.push(0, mk(2));
+        let got = p.get(1).unwrap();
+        assert_eq!(got.id, TaskId(2), "steals the newest task");
+        let own = p.get(0).unwrap();
+        assert_eq!(own.id, TaskId(1), "owner keeps FIFO front");
+    }
+
+    #[test]
+    fn empty_pools_return_none() {
+        let p = ReadyPools::new(4, 1);
+        for t in 0..4 {
+            assert!(p.get(t).is_none());
+        }
+    }
+
+    #[test]
+    fn batch_push_counts() {
+        let p = ReadyPools::new(1, 1);
+        p.push_batch(0, vec![mk(1), mk(2), mk(3)]);
+        assert_eq!(p.ready_count(), 3);
+        p.push_batch(0, vec![]);
+        assert_eq!(p.ready_count(), 3);
+    }
+
+    #[test]
+    fn drain_all_collects_everything() {
+        let p = ReadyPools::new(3, 1);
+        p.push(0, mk(1));
+        p.push(1, mk(2));
+        p.push(2, mk(3));
+        let drained = p.drain_all();
+        assert_eq!(drained.len(), 3);
+        assert_eq!(p.ready_count(), 0);
+    }
+
+    #[test]
+    fn single_thread_pool_never_steals() {
+        let p = ReadyPools::new(1, 1);
+        p.push(0, mk(1));
+        assert!(p.get(0).is_some());
+        assert_eq!(p.steal_count(), 0);
+    }
+}

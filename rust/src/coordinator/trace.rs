@@ -1,0 +1,227 @@
+//! Execution tracing — the reproduction's Paraver stand-in (paper §6.2).
+//!
+//! Collects the observables the paper plots: tasks in the dependence graph
+//! (Fig 12a/13b/14a), ready tasks (Fig 12b/14b/15a) and per-thread states
+//! (Fig 13a/13c/15b). Per-thread buffers keep recording off the hot path's
+//! shared state; `dump_csv` and the ASCII renderers in `bench_harness`
+//! consume the merged stream.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// What a thread is doing (Fig 13's color legend).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ThreadState {
+    /// Sky-blue in the paper's traces.
+    Idle,
+    /// Running application task code (label tells which task type).
+    Task,
+    /// Acting as a DDAST manager (runtime code on an idle thread).
+    Manager,
+}
+
+/// One trace record.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Nanoseconds since trace start.
+    pub t_ns: u64,
+    pub kind: TraceKind,
+}
+
+#[derive(Clone, Debug)]
+pub enum TraceKind {
+    /// Gauge: number of tasks currently in the dependence graph.
+    InGraph(u64),
+    /// Gauge: number of ready tasks.
+    Ready(u64),
+    /// Thread `worker` switched state; label names the task type when
+    /// entering `ThreadState::Task`.
+    State { worker: usize, state: ThreadState, label: &'static str },
+    /// Task lifetime markers (id, label) for span reconstruction.
+    TaskStart { worker: usize, id: u64, label: &'static str },
+    TaskEnd { worker: usize, id: u64 },
+}
+
+/// Trace collector. One instance per runtime; cheap enough to keep on for
+/// the trace figures, `None`d out for throughput benches.
+pub struct Tracer {
+    start: Instant,
+    buffers: Vec<Mutex<Vec<TraceEvent>>>,
+}
+
+impl Tracer {
+    pub fn new(num_threads: usize) -> Self {
+        Tracer {
+            start: Instant::now(),
+            buffers: (0..num_threads.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    #[inline]
+    pub fn record(&self, worker: usize, kind: TraceKind) {
+        let ev = TraceEvent { t_ns: self.now_ns(), kind };
+        self.buffers[worker % self.buffers.len()].lock().unwrap().push(ev);
+    }
+
+    /// Merge all per-thread buffers, sorted by time.
+    pub fn merged(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<TraceEvent> = Vec::new();
+        for b in &self.buffers {
+            all.extend(b.lock().unwrap().iter().cloned());
+        }
+        all.sort_by_key(|e| e.t_ns);
+        all
+    }
+
+    /// CSV dump: `t_ns,kind,worker,value,label`.
+    pub fn dump_csv(&self) -> String {
+        let mut out = String::from("t_ns,kind,worker,value,label\n");
+        for e in self.merged() {
+            match &e.kind {
+                TraceKind::InGraph(v) => out.push_str(&format!("{},in_graph,,{},\n", e.t_ns, v)),
+                TraceKind::Ready(v) => out.push_str(&format!("{},ready,,{},\n", e.t_ns, v)),
+                TraceKind::State { worker, state, label } => out.push_str(&format!(
+                    "{},state,{},{},{}\n",
+                    e.t_ns,
+                    worker,
+                    match state {
+                        ThreadState::Idle => 0,
+                        ThreadState::Task => 1,
+                        ThreadState::Manager => 2,
+                    },
+                    label
+                )),
+                TraceKind::TaskStart { worker, id, label } => {
+                    out.push_str(&format!("{},task_start,{},{},{}\n", e.t_ns, worker, id, label))
+                }
+                TraceKind::TaskEnd { worker, id } => {
+                    out.push_str(&format!("{},task_end,{},{},\n", e.t_ns, worker, id))
+                }
+            }
+        }
+        out
+    }
+
+    /// Export in Paraver `.prv` format — the tool the paper's §6.2 traces
+    /// were rendered with. State records (`1:cpu:appl:task:thread:begin:
+    /// end:state`) encode Idle/Task/Manager; event records (`2:...:type:
+    /// value`) carry the gauges (type 9001 = tasks in graph, 9002 = ready).
+    pub fn dump_prv(&self, num_threads: usize) -> String {
+        let events = self.merged();
+        let end_time = events.last().map_or(0, |e| e.t_ns);
+        let mut out = format!(
+            "#Paraver (01/01/2026 at 00:00):{end_time}_ns:1(1):1:1({num_threads}:1)\n"
+        );
+        // Reconstruct per-thread state intervals.
+        let mut cur_state: Vec<(u64, u32)> = vec![(0, 0); num_threads]; // (since, state)
+        let state_code = |s: &ThreadState| match s {
+            ThreadState::Idle => 0u32,
+            ThreadState::Task => 1,
+            ThreadState::Manager => 3,
+        };
+        for e in &events {
+            match &e.kind {
+                TraceKind::State { worker, state, .. } => {
+                    let w = *worker % num_threads;
+                    let (since, code) = cur_state[w];
+                    if e.t_ns > since {
+                        out.push_str(&format!(
+                            "1:{cpu}:1:1:{thr}:{since}:{end}:{code}\n",
+                            cpu = w + 1,
+                            thr = w + 1,
+                            end = e.t_ns
+                        ));
+                    }
+                    cur_state[w] = (e.t_ns, state_code(state));
+                }
+                TraceKind::InGraph(v) => {
+                    out.push_str(&format!("2:1:1:1:1:{}:9001:{v}\n", e.t_ns));
+                }
+                TraceKind::Ready(v) => {
+                    out.push_str(&format!("2:1:1:1:1:{}:9002:{v}\n", e.t_ns));
+                }
+                _ => {}
+            }
+        }
+        for (w, (since, code)) in cur_state.iter().enumerate() {
+            if end_time > *since {
+                out.push_str(&format!(
+                    "1:{cpu}:1:1:{thr}:{since}:{end_time}:{code}\n",
+                    cpu = w + 1,
+                    thr = w + 1
+                ));
+            }
+        }
+        out
+    }
+
+    /// Time series of a gauge: (t_ns, value) pairs.
+    pub fn gauge_series(&self, in_graph: bool) -> Vec<(u64, u64)> {
+        self.merged()
+            .into_iter()
+            .filter_map(|e| match e.kind {
+                TraceKind::InGraph(v) if in_graph => Some((e.t_ns, v)),
+                TraceKind::Ready(v) if !in_graph => Some((e.t_ns, v)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_merge_in_time_order() {
+        let t = Tracer::new(2);
+        t.record(0, TraceKind::InGraph(1));
+        t.record(1, TraceKind::InGraph(2));
+        t.record(0, TraceKind::Ready(1));
+        let m = t.merged();
+        assert_eq!(m.len(), 3);
+        assert!(m.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let t = Tracer::new(1);
+        t.record(0, TraceKind::TaskStart { worker: 0, id: 7, label: "lu0" });
+        t.record(0, TraceKind::TaskEnd { worker: 0, id: 7 });
+        t.record(0, TraceKind::State { worker: 0, state: ThreadState::Manager, label: "" });
+        let csv = t.dump_csv();
+        assert_eq!(csv.lines().count(), 4, "header + 3 events");
+        assert!(csv.contains("task_start,0,7,lu0"));
+        assert!(csv.contains("state,0,2,"));
+    }
+
+    #[test]
+    fn prv_export_structure() {
+        let t = Tracer::new(2);
+        t.record(0, TraceKind::State { worker: 0, state: ThreadState::Task, label: "m" });
+        t.record(1, TraceKind::State { worker: 1, state: ThreadState::Manager, label: "" });
+        t.record(0, TraceKind::InGraph(3));
+        t.record(0, TraceKind::State { worker: 0, state: ThreadState::Idle, label: "" });
+        let prv = t.dump_prv(2);
+        assert!(prv.starts_with("#Paraver"));
+        assert!(prv.contains(":9001:3"), "{prv}");
+        // State records exist for both threads.
+        assert!(prv.lines().any(|l| l.starts_with("1:1:")));
+        assert!(prv.lines().any(|l| l.starts_with("1:2:")));
+    }
+
+    #[test]
+    fn gauge_series_filters() {
+        let t = Tracer::new(1);
+        t.record(0, TraceKind::InGraph(5));
+        t.record(0, TraceKind::Ready(2));
+        t.record(0, TraceKind::InGraph(6));
+        assert_eq!(t.gauge_series(true).len(), 2);
+        assert_eq!(t.gauge_series(false).len(), 1);
+    }
+}

@@ -1,0 +1,300 @@
+//! Work Descriptors — the runtime's task representation (§2.2.1).
+//!
+//! Each task is one `Wd` flowing through the life-cycle state machine the
+//! paper describes: *Created → Submitted → Ready → Running → Finished →
+//! DoneHandled → Deletable*. The extra `DoneHandled` state is the paper's
+//! §3.1 trick: instead of a third message type for deletion, a state marks
+//! when the Done Task Message has been fully processed so the WD can be
+//! reclaimed safely.
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Weak};
+
+use crate::coordinator::dep::Dependence;
+use crate::substrate::SpinLock;
+
+/// Monotonic task identifier (0 is the implicit root task).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+/// Task body. `FnOnce` because a task runs exactly once.
+pub type TaskBody = Box<dyn FnOnce() + Send + 'static>;
+
+/// Task life-cycle states (paper §2.2.1 steps 1–6, plus the deletion
+/// state of §3.1).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum WdState {
+    /// Step 1: allocated and initialized.
+    Created = 0,
+    /// Step 2: dependences being/been inserted in the task graph.
+    Submitted = 1,
+    /// Step 3: dependences satisfied, queued for execution.
+    Ready = 2,
+    /// Executing on some worker.
+    Running = 3,
+    /// Step 5: body finished; successors not yet notified.
+    Finished = 4,
+    /// Done Task Message processed: successors notified, removed from graph.
+    DoneHandled = 5,
+    /// Step 6: no children alive either — safe to reclaim.
+    Deletable = 6,
+}
+
+impl WdState {
+    fn from_u8(v: u8) -> WdState {
+        match v {
+            0 => WdState::Created,
+            1 => WdState::Submitted,
+            2 => WdState::Ready,
+            3 => WdState::Running,
+            4 => WdState::Finished,
+            5 => WdState::DoneHandled,
+            6 => WdState::Deletable,
+            _ => unreachable!("invalid WdState {v}"),
+        }
+    }
+}
+
+/// A work descriptor. Shared via `Arc`; the dependence graph, ready pools
+/// and message queues all hold references during the task's life.
+pub struct Wd {
+    pub id: TaskId,
+    /// Declared dependences (fixed at creation).
+    pub deps: Vec<Dependence>,
+    /// Label used by tracing/benchmarks (e.g. "lu0", "propagate").
+    pub label: &'static str,
+    /// The code to run. Taken exactly once by the executing worker.
+    body: SpinLock<Option<TaskBody>>,
+    state: AtomicU8,
+    /// Pending predecessor count **plus one submission guard**. The guard
+    /// prevents the task from becoming ready while its own submission is
+    /// still inserting dependences.
+    preds: AtomicUsize,
+    /// Successor tasks discovered by the dependence graph. Mutated only
+    /// under the owning domain's lock; drained once at finish.
+    pub(crate) successors: SpinLock<Vec<Arc<Wd>>>,
+    /// Direct children not yet done-handled (taskwait + deletion safety).
+    children_live: AtomicUsize,
+    /// Parent task. Weak to break the parent→domain→child→parent cycle.
+    pub(crate) parent: Weak<Wd>,
+    /// Dependence domain for this task's children (lazily created on first
+    /// child with dependences). `Arc` so graph operations run without
+    /// holding this outer lock.
+    pub(crate) child_domain: SpinLock<Option<Arc<crate::coordinator::depgraph::DepDomain>>>,
+}
+
+impl Wd {
+    pub fn new(
+        id: TaskId,
+        deps: Vec<Dependence>,
+        label: &'static str,
+        parent: Weak<Wd>,
+        body: TaskBody,
+    ) -> Arc<Wd> {
+        Arc::new(Wd {
+            id,
+            deps,
+            label,
+            body: SpinLock::new(Some(body)),
+            state: AtomicU8::new(WdState::Created as u8),
+            preds: AtomicUsize::new(1), // the submission guard
+            successors: SpinLock::new(Vec::new()),
+            children_live: AtomicUsize::new(0),
+            parent,
+            child_domain: SpinLock::new(None),
+        })
+    }
+
+    /// The implicit root task (the "main" task of §2.1: the thread-pool
+    /// model gives the whole program an enclosing task).
+    pub fn root() -> Arc<Wd> {
+        let root = Wd::new(TaskId(0), Vec::new(), "root", Weak::new(), Box::new(|| {}));
+        root.set_state(WdState::Running);
+        root
+    }
+
+    #[inline]
+    pub fn state(&self) -> WdState {
+        WdState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    /// Transition with a validity check: the life cycle only moves forward.
+    ///
+    /// SeqCst: the `DoneHandled` + `children_live == 0` → `Deletable`
+    /// decision is taken from two threads reading each other's writes
+    /// (store-buffer pattern); Acq/Rel alone would allow both to miss.
+    pub fn set_state(&self, next: WdState) {
+        let prev = self.state.swap(next as u8, Ordering::SeqCst);
+        debug_assert!(
+            prev < next as u8 || (prev == next as u8),
+            "illegal WD state transition {:?} -> {:?} (task {:?})",
+            WdState::from_u8(prev),
+            next,
+            self.id
+        );
+    }
+
+    /// Has the Done Task Message for this task been fully processed?
+    /// (Used instead of a third message type — paper §3.1.)
+    #[inline]
+    pub fn done_handled(&self) -> bool {
+        self.state.load(Ordering::Acquire) >= WdState::DoneHandled as u8
+    }
+
+    /// Has the body finished executing? Checked under the domain lock by
+    /// the graph code to decide whether a would-be predecessor still counts.
+    #[inline]
+    pub fn is_finished(&self) -> bool {
+        self.state.load(Ordering::Acquire) >= WdState::Finished as u8
+    }
+
+    /// Take the body for execution. Panics if taken twice — a task must run
+    /// exactly once (invariant #2 of DESIGN.md §6).
+    pub fn take_body(&self) -> TaskBody {
+        self.body
+            .lock()
+            .take()
+            .unwrap_or_else(|| panic!("task {:?} body taken twice", self.id))
+    }
+
+    /// Add `n` pending predecessors. Called under the domain lock during
+    /// submission.
+    #[inline]
+    pub fn add_preds(&self, n: usize) {
+        self.preds.fetch_add(n, Ordering::AcqRel);
+    }
+
+    /// Drop one pending predecessor (or the submission guard). Returns true
+    /// when the task just became ready.
+    #[inline]
+    pub fn release_pred(&self) -> bool {
+        let prev = self.preds.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "pred underflow on task {:?}", self.id);
+        prev == 1
+    }
+
+    #[inline]
+    pub fn pending_preds(&self) -> usize {
+        self.preds.load(Ordering::Acquire)
+    }
+
+    /// Register a newly created child (for taskwait and deletion safety).
+    #[inline]
+    pub fn child_created(&self) {
+        self.children_live.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A child reached `DoneHandled`. Returns true if this was the last
+    /// live child. SeqCst pairs with [`Wd::set_state`] (see there).
+    #[inline]
+    pub fn child_done(&self) -> bool {
+        let prev = self.children_live.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev > 0, "children underflow on task {:?}", self.id);
+        prev == 1
+    }
+
+    #[inline]
+    pub fn children_live(&self) -> usize {
+        self.children_live.load(Ordering::SeqCst)
+    }
+
+    /// Dependence domain for this task's children, created on first use
+    /// (exact-match plugin).
+    pub fn child_domain(&self) -> Arc<crate::coordinator::depgraph::DepDomain> {
+        self.child_domain_with(false)
+    }
+
+    /// Like [`Wd::child_domain`], selecting the dependence plugin on first
+    /// creation (`ranged = true` → the range-overlap plugin).
+    pub fn child_domain_with(&self, ranged: bool) -> Arc<crate::coordinator::depgraph::DepDomain> {
+        let mut slot = self.child_domain.lock();
+        slot.get_or_insert_with(|| {
+            Arc::new(if ranged {
+                crate::coordinator::depgraph::DepDomain::new_ranged()
+            } else {
+                crate::coordinator::depgraph::DepDomain::new()
+            })
+        })
+        .clone()
+    }
+
+    /// The children's domain if it was ever created (diagnostics/tracing).
+    pub fn child_domain_opt(&self) -> Option<Arc<crate::coordinator::depgraph::DepDomain>> {
+        self.child_domain.lock().clone()
+    }
+}
+
+impl std::fmt::Debug for Wd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Wd")
+            .field("id", &self.id)
+            .field("label", &self.label)
+            .field("state", &self.state())
+            .field("preds", &self.pending_preds())
+            .field("children_live", &self.children_live())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dep::dep_in;
+
+    fn mk(id: u64) -> Arc<Wd> {
+        Wd::new(TaskId(id), vec![dep_in(1)], "t", Weak::new(), Box::new(|| {}))
+    }
+
+    #[test]
+    fn lifecycle_forward() {
+        let wd = mk(1);
+        assert_eq!(wd.state(), WdState::Created);
+        wd.set_state(WdState::Submitted);
+        wd.set_state(WdState::Ready);
+        wd.set_state(WdState::Running);
+        wd.set_state(WdState::Finished);
+        assert!(wd.is_finished());
+        assert!(!wd.done_handled());
+        wd.set_state(WdState::DoneHandled);
+        assert!(wd.done_handled());
+        wd.set_state(WdState::Deletable);
+    }
+
+    #[test]
+    #[should_panic(expected = "body taken twice")]
+    fn body_taken_once() {
+        let wd = mk(2);
+        let b = wd.take_body();
+        b();
+        let _ = wd.take_body();
+    }
+
+    #[test]
+    fn pred_counting_with_guard() {
+        let wd = mk(3);
+        // Starts with the submission guard.
+        assert_eq!(wd.pending_preds(), 1);
+        wd.add_preds(2);
+        assert!(!wd.release_pred()); // one real pred gone
+        assert!(!wd.release_pred()); // second real pred gone
+        assert!(wd.release_pred()); // guard released -> ready now
+    }
+
+    #[test]
+    fn children_accounting() {
+        let wd = mk(4);
+        wd.child_created();
+        wd.child_created();
+        assert_eq!(wd.children_live(), 2);
+        assert!(!wd.child_done());
+        assert!(wd.child_done());
+    }
+
+    #[test]
+    fn root_is_running() {
+        let r = Wd::root();
+        assert_eq!(r.state(), WdState::Running);
+        assert_eq!(r.id, TaskId(0));
+    }
+}

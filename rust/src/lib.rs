@@ -1,0 +1,53 @@
+//! # ddast — Asynchronous Task Runtime with a Distributed Manager
+//!
+//! Reproduction of *"Asynchronous Runtime with Distributed Manager for
+//! Task-based Programming Models"* (J. Bosch, C. Álvarez,
+//! D. Jiménez-González, X. Martorell, E. Ayguadé — Parallel Computing, 2020,
+//! DOI 10.1016/j.parco.2020.102664).
+//!
+//! The crate provides:
+//!
+//! * [`coordinator`] — a real, threaded OmpSs/Nanos++-style task runtime with
+//!   three interchangeable organizations:
+//!   * **Sync** (`Nanos++` baseline): worker threads mutate the shared task
+//!     dependence graph directly under per-domain locks;
+//!   * **DDAST** (the paper's contribution): workers enqueue
+//!     `SubmitTaskMsg`/`DoneTaskMsg` into per-worker queues and idle workers
+//!     become *manager threads* through the Functionality Dispatcher;
+//!   * **GOMP-like** comparator: centralized ready queue, fork-join idling.
+//! * [`workloads`] — generators for the paper's three benchmarks (blocked
+//!   Matmul, N-Body with nested tasks, Sparse LU) parameterized exactly as
+//!   the paper's Tables 2–4.
+//! * [`sim`] — a discrete-event simulator of many-core machines (KNL,
+//!   ThunderX, Power8+, Power9 — Table 1) used to regenerate the paper's
+//!   evaluation figures on hardware we do not have (see DESIGN.md §2).
+//! * [`runtime`] — the PJRT bridge that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from task bodies;
+//!   Python never runs on the execution path.
+//! * [`bench_harness`] — drivers that print every table and figure of the
+//!   paper's evaluation section.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ddast::coordinator::{TaskSystem, RuntimeKind, DepMode};
+//!
+//! let ts = TaskSystem::builder()
+//!     .kind(RuntimeKind::Ddast)
+//!     .num_threads(4)
+//!     .build();
+//! // b[i] depends on a[i] produced by the first task.
+//! ts.spawn(&[(0x10, DepMode::Out)], || { /* produce a */ });
+//! ts.spawn(&[(0x10, DepMode::In), (0x20, DepMode::Out)], || { /* a -> b */ });
+//! ts.taskwait();
+//! ```
+
+pub mod substrate;
+pub mod coordinator;
+pub mod workloads;
+pub mod sim;
+pub mod runtime;
+pub mod bench_harness;
+
+pub use coordinator::{TaskSystem, RuntimeKind, DepMode, DdastParams};
+pub use sim::machine::MachineConfig;

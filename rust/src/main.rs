@@ -1,0 +1,228 @@
+//! `repro` — CLI for the DDAST reproduction.
+//!
+//! ```text
+//! repro bench --exp <table5|fig5..fig11|micro|tables> [--quick]
+//! repro trace --exp <fig12..fig15> [--quick]
+//! repro sim   --bench <matmul|sparselu|nbody> --machine <knl|thunderx|power8|power9>
+//!             --runtime <sync|ddast|gomp> --threads N [--coarse] [--quick]
+//! repro real  --workload <chain|indep|diamonds|matmul|sparselu|nbody>
+//!             --runtime <sync|ddast|gomp> --threads N [--tasks N]
+//! repro list-machines
+//! ```
+//!
+//! (Argument parsing is hand-rolled: the offline environment has no clap.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use ddast::bench_harness::figures::{self, Bench, FigureOpts};
+use ddast::coordinator::{DdastParams, RuntimeKind, TaskSystem};
+use ddast::sim::engine::{simulate, SimOptions};
+use ddast::sim::machine::MachineConfig;
+use ddast::workloads::{executor, matmul, nbody, sparselu, synthetic};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  repro bench --exp <tables|table5|fig5|fig6|fig7|fig8|fig9|fig10|fig11|micro> [--quick]\n  repro trace --exp <fig12|fig13|fig14|fig15> [--quick]\n  repro sim --bench <matmul|sparselu|nbody> --machine <knl|thunderx|power8|power9> --runtime <sync|ddast|gomp> --threads N [--coarse] [--quick] [--max-ddast N] [--max-ops N] [--min-ready N] [--max-spins N]\n  repro real --workload <chain|indep|diamonds|nested|matmul|sparselu|nbody> --runtime <sync|ddast|gomp> --threads N [--tasks N]\n  repro list-machines"
+    );
+    std::process::exit(2);
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        } else {
+            eprintln!("unexpected argument: {a}");
+            usage();
+        }
+        i += 1;
+    }
+    m
+}
+
+fn runtime_kind(s: &str) -> RuntimeKind {
+    match s {
+        "sync" | "nanos" => RuntimeKind::Sync,
+        "ddast" => RuntimeKind::Ddast,
+        "dast" | "central" => RuntimeKind::CentralDast,
+        "gomp" => RuntimeKind::GompLike,
+        _ => {
+            eprintln!("unknown runtime {s}");
+            usage()
+        }
+    }
+}
+
+fn cmd_bench(flags: &HashMap<String, String>) {
+    let opts = if flags.contains_key("quick") { FigureOpts::quick() } else { FigureOpts::full() };
+    let exp = flags.get("exp").map(String::as_str).unwrap_or("tables");
+    let out = match exp {
+        "tables" => format!("{}\n{}", figures::table1(), figures::tables234()),
+        "table5" => figures::table5(opts),
+        "fig5" => figures::fig5(opts),
+        "fig6" => figures::fig6(opts),
+        "fig7" => figures::fig7(opts),
+        "fig8" => figures::fig8(opts),
+        "fig9" => figures::fig9(opts),
+        "fig10" => figures::fig10(opts),
+        "fig11" => figures::fig11(opts),
+        "micro" => ddast::sim::calibrate::report(),
+        other => {
+            eprintln!("unknown experiment {other}");
+            usage()
+        }
+    };
+    println!("{out}");
+}
+
+fn cmd_trace(flags: &HashMap<String, String>) {
+    let opts = if flags.contains_key("quick") { FigureOpts::quick() } else { FigureOpts::full() };
+    let exp = flags.get("exp").map(String::as_str).unwrap_or_else(|| usage());
+    let out = match exp {
+        "fig12" => figures::fig12(opts),
+        "fig13" => figures::fig13(opts),
+        "fig14" => figures::fig14(opts),
+        "fig15" => figures::fig15(opts),
+        other => {
+            eprintln!("unknown trace experiment {other}");
+            usage()
+        }
+    };
+    println!("{out}");
+}
+
+fn cmd_sim(flags: &HashMap<String, String>) {
+    let bench = match flags.get("bench").map(String::as_str).unwrap_or("matmul") {
+        "matmul" => Bench::Matmul,
+        "sparselu" => Bench::SparseLu,
+        "nbody" => Bench::NBody,
+        other => {
+            eprintln!("unknown bench {other}");
+            usage()
+        }
+    };
+    let machine = flags.get("machine").map(String::as_str).unwrap_or("knl");
+    let m = MachineConfig::by_name(machine).unwrap_or_else(|| {
+        eprintln!("unknown machine {machine}");
+        usage()
+    });
+    let kind = runtime_kind(flags.get("runtime").map(String::as_str).unwrap_or("ddast"));
+    let threads: usize =
+        flags.get("threads").and_then(|s| s.parse().ok()).unwrap_or(m.max_threads_used());
+    let coarse = flags.contains_key("coarse");
+    let opts =
+        if flags.contains_key("quick") { FigureOpts::quick() } else { FigureOpts::full() };
+    let spec = figures::spec_for(bench, machine, coarse, opts);
+    let mut params = DdastParams::tuned(threads);
+    if let Some(v) = flags.get("max-ddast").and_then(|s| s.parse().ok()) {
+        params.max_ddast_threads = v;
+    }
+    if let Some(v) = flags.get("max-ops").and_then(|s| s.parse().ok()) {
+        params.max_ops_thread = v;
+    }
+    if let Some(v) = flags.get("min-ready").and_then(|s| s.parse().ok()) {
+        params.min_ready_tasks = v;
+    }
+    if let Some(v) = flags.get("max-spins").and_then(|s| s.parse().ok()) {
+        params.max_spins = v;
+    }
+    let r = simulate(&spec, &m, SimOptions::new(kind, threads).with_params(params));
+    println!(
+        "sim {} on {} ({:?}, {} threads): makespan {}  speedup {:.2}",
+        spec.name, machine, kind, threads, r.makespan, r.speedup
+    );
+    println!(
+        "  tasks {}  msgs {}  mgr passes {}  steals {}  lock wait {:.3}ms  max in-graph {}  max ready {}",
+        r.stats.tasks_executed,
+        r.stats.msgs_processed,
+        r.stats.mgr_passes,
+        r.stats.steals,
+        r.stats.lock_wait_ns as f64 / 1e6,
+        r.stats.max_in_graph,
+        r.stats.max_ready
+    );
+}
+
+fn cmd_real(flags: &HashMap<String, String>) {
+    let kind = runtime_kind(flags.get("runtime").map(String::as_str).unwrap_or("ddast"));
+    let threads: usize = flags.get("threads").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let n: usize = flags.get("tasks").and_then(|s| s.parse().ok()).unwrap_or(10_000);
+    let wl = flags.get("workload").map(String::as_str).unwrap_or("indep");
+    let spec = match wl {
+        "chain" => synthetic::chain(n, 0),
+        "indep" => synthetic::independent(n, 0),
+        "diamonds" => synthetic::diamonds(8, n / 10 + 1, 0),
+        "nested" => synthetic::nested(n / 100 + 1, 100, 0),
+        "matmul" => matmul::generate(matmul::MatmulParams { ms: 1024, bs: 128 }),
+        "sparselu" => sparselu::generate(sparselu::SparseLuParams { ms: 1024, bs: 64 }),
+        "nbody" => nbody::generate(nbody::NBodyParams {
+            num_particles: 2048,
+            timesteps: 4,
+            bs: 128,
+        }),
+        other => {
+            eprintln!("unknown workload {other}");
+            usage()
+        }
+    };
+    let spec = Arc::new(spec);
+    let ts = TaskSystem::builder().kind(kind).num_threads(threads).build();
+    let t0 = std::time::Instant::now();
+    let log = executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+    let elapsed = t0.elapsed();
+    let rt = ts.runtime().clone();
+    ts.shutdown();
+    assert!(log.all_ran(), "not all tasks ran");
+    let viol = log.dependence_violations(&spec.predecessor_edges());
+    println!(
+        "real {} ({:?}, {} threads): {} tasks in {:.3}ms ({:.0} tasks/s), violations={}, steals={}, mgr activations={}",
+        spec.name,
+        kind,
+        threads,
+        spec.num_tasks(),
+        elapsed.as_secs_f64() * 1e3,
+        spec.num_tasks() as f64 / elapsed.as_secs_f64(),
+        viol.len(),
+        rt.ready.steal_count(),
+        rt.stats.mgr_activations.get(),
+    );
+    if !viol.is_empty() {
+        std::process::exit(1);
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else { usage() };
+    let flags = parse_flags(rest);
+    match cmd.as_str() {
+        "bench" => cmd_bench(&flags),
+        "trace" => cmd_trace(&flags),
+        "sim" => cmd_sim(&flags),
+        "real" => cmd_real(&flags),
+        "list-machines" => {
+            println!("{}", figures::table1());
+            for m in MachineConfig::all() {
+                println!(
+                    "{}: sweep {:?}, {:.1} Gflop/s/core",
+                    m.name,
+                    m.thread_sweep(),
+                    m.flops_per_core / 1e9
+                );
+            }
+        }
+        _ => usage(),
+    }
+    ExitCode::SUCCESS
+}

@@ -1,0 +1,119 @@
+//! Artifact registry: name → compiled PJRT executable.
+//!
+//! Interchange format is **HLO text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::exec::ExecHandle;
+
+/// A PJRT CPU client plus every compiled artifact found in a directory.
+///
+/// Not `Send` (the `xla` crate wrappers are `Rc`-based): share it across
+/// worker threads through [`crate::runtime::PjrtServiceHost`].
+pub struct ArtifactRegistry {
+    #[allow(dead_code)] // keeps the client (and its devices) alive
+    client: xla::PjRtClient,
+    executables: HashMap<String, ExecHandle>,
+    dir: PathBuf,
+}
+
+impl ArtifactRegistry {
+    /// Create a CPU client and compile every `*.hlo.txt` under `dir`.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            let fname = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+            if let Some(name) = fname.strip_suffix(".hlo.txt") {
+                let exe = Self::compile_file(&client, &path)
+                    .with_context(|| format!("compiling {}", path.display()))?;
+                executables.insert(name.to_string(), exe);
+            }
+        }
+        if executables.is_empty() {
+            return Err(anyhow!(
+                "no *.hlo.txt artifacts in {} — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        Ok(ArtifactRegistry { client, executables, dir })
+    }
+
+    fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<ExecHandle> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO text: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        Ok(ExecHandle::new(exe))
+    }
+
+    /// Names of all loaded artifacts, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ExecHandle> {
+        self.executables.get(name).ok_or_else(|| {
+            anyhow!("artifact '{name}' not found in {} (have: {:?})", self.dir.display(), self.names())
+        })
+    }
+
+    /// The default artifacts directory relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // Prefer the env override, else ./artifacts next to the binary's CWD.
+        std::env::var_os("DDAST_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests only run when artifacts exist (after `make artifacts`);
+    /// the python tests + matmul_e2e example cover the full path.
+    fn registry() -> Option<ArtifactRegistry> {
+        let dir = ArtifactRegistry::default_dir();
+        if dir.join("MANIFEST.txt").exists() {
+            Some(ArtifactRegistry::load_dir(dir).expect("artifacts load"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_all_artifacts_when_built() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let names = reg.names();
+        assert!(names.contains(&"matmul_block"), "have {names:?}");
+        assert!(reg.get("matmul_block").is_ok());
+        assert!(reg.get("definitely_not_there").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let Err(err) = ArtifactRegistry::load_dir("/nonexistent/path") else {
+            panic!("expected error for missing dir");
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Typed execution helpers over PJRT loaded executables.
+//!
+//! The artifacts are lowered with `return_tuple=True`, so every result is a
+//! 1-tuple (or n-tuple) of arrays; `run_f32` unwraps the common
+//! single-output case. `ExecHandle` is not `Send` (xla wrappers are
+//! `Rc`-based); worker threads go through [`crate::runtime::PjrtService`].
+
+use anyhow::{anyhow, Result};
+
+/// A float32 input tensor: data + shape.
+#[derive(Clone, Debug)]
+pub struct TensorArg<'a> {
+    pub data: &'a [f32],
+    pub shape: Vec<i64>,
+}
+
+impl<'a> TensorArg<'a> {
+    pub fn new(data: &'a [f32], shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data length must match shape"
+        );
+        TensorArg { data, shape: shape.iter().map(|&d| d as i64).collect() }
+    }
+}
+
+/// One compiled artifact.
+pub struct ExecHandle {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ExecHandle {
+    pub fn new(exe: xla::PjRtLoadedExecutable) -> Self {
+        ExecHandle { exe }
+    }
+
+    /// Execute with f32 inputs, return the flattened f32 outputs (one Vec
+    /// per tuple element).
+    pub fn run_f32_multi(&self, args: &[TensorArg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(args.len());
+        for a in args {
+            let lit = xla::Literal::vec1(a.data)
+                .reshape(&a.shape)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True.
+        let tuple = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(t.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(out)
+    }
+
+    /// Single-output convenience.
+    pub fn run_f32(&self, args: &[TensorArg<'_>]) -> Result<Vec<f32>> {
+        let mut outs = self.run_f32_multi(args)?;
+        if outs.len() != 1 {
+            return Err(anyhow!("expected 1 output, got {}", outs.len()));
+        }
+        Ok(outs.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_arg_shape_check() {
+        let data = vec![1.0f32; 6];
+        let t = TensorArg::new(&data, &[2, 3]);
+        assert_eq!(t.shape, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "data length")]
+    fn tensor_arg_rejects_mismatch() {
+        let data = vec![1.0f32; 5];
+        let _ = TensorArg::new(&data, &[2, 3]);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime bridge — loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from task bodies. Python never runs on this path.
+
+pub mod artifacts;
+pub mod exec;
+pub mod service;
+
+pub use artifacts::ArtifactRegistry;
+pub use exec::{ExecHandle, TensorArg};
+pub use service::{PjrtService, PjrtServiceHost};

@@ -1,0 +1,210 @@
+//! PJRT execution service.
+//!
+//! The `xla` crate's wrapper types are `Rc`-based and not `Send`, but task
+//! bodies run on any worker thread. The service owns the
+//! [`ArtifactRegistry`] on a dedicated thread and serves execution requests
+//! over channels — the same "one executor, many requesters" shape a real
+//! deployment would use per device. On this 1-core host PJRT CPU compute
+//! would serialize anyway; the coordinator's parallelism lives in the task
+//! graph.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::artifacts::ArtifactRegistry;
+use crate::runtime::exec::TensorArg;
+
+enum Request {
+    Run {
+        name: String,
+        args: Vec<(Vec<f32>, Vec<usize>)>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Names { reply: mpsc::Sender<Vec<String>> },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the PJRT service thread.
+pub struct PjrtService {
+    tx: mpsc::Sender<Request>,
+}
+
+impl Clone for PjrtService {
+    fn clone(&self) -> Self {
+        PjrtService { tx: self.tx.clone() }
+    }
+}
+
+/// Owns the service thread; dropping it stops the thread.
+pub struct PjrtServiceHost {
+    tx: mpsc::Sender<Request>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl PjrtServiceHost {
+    /// Start the service, loading every artifact under `dir`.
+    pub fn start(dir: std::path::PathBuf) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let registry = match ArtifactRegistry::load_dir(&dir) {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Run { name, args, reply } => {
+                            let result = registry.get(&name).and_then(|exe| {
+                                let tensor_args: Vec<TensorArg<'_>> = args
+                                    .iter()
+                                    .map(|(data, shape)| TensorArg::new(data, shape))
+                                    .collect();
+                                exe.run_f32_multi(&tensor_args)
+                            });
+                            let _ = reply.send(result);
+                        }
+                        Request::Names { reply } => {
+                            let _ = reply
+                                .send(registry.names().iter().map(|s| s.to_string()).collect());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawn pjrt-service: {e}"))?;
+        ready_rx.recv().map_err(|_| anyhow!("pjrt-service died during init"))??;
+        Ok(PjrtServiceHost { tx, thread: Some(thread) })
+    }
+
+    /// A sendable handle for task bodies.
+    pub fn handle(&self) -> PjrtService {
+        PjrtService { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for PjrtServiceHost {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl PjrtService {
+    /// Execute artifact `name` with f32 inputs; returns all tuple outputs.
+    pub fn run_f32_multi(
+        &self,
+        name: &str,
+        args: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Run {
+                name: name.to_string(),
+                args: args.iter().map(|(d, s)| (d.to_vec(), s.to_vec())).collect(),
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt-service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt-service dropped reply"))?
+    }
+
+    /// Single-output convenience.
+    pub fn run_f32(&self, name: &str, args: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let mut outs = self.run_f32_multi(name, args)?;
+        if outs.len() != 1 {
+            return Err(anyhow!("expected 1 output, got {}", outs.len()));
+        }
+        Ok(outs.pop().unwrap())
+    }
+
+    pub fn names(&self) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Request::Names { reply }).map_err(|_| anyhow!("pjrt-service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt-service dropped reply"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service() -> Option<PjrtServiceHost> {
+        let dir = ArtifactRegistry::default_dir();
+        if dir.join("MANIFEST.txt").exists() {
+            Some(PjrtServiceHost::start(dir).expect("service start"))
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn matmul_artifact_numerics_via_service() {
+        let Some(host) = service() else { return };
+        let svc = host.handle();
+        // 64x64: C = 0 + A·I = A.
+        let mut a = vec![0.0f32; 64 * 64];
+        for (i, v) in a.iter_mut().enumerate() {
+            *v = (i % 97) as f32 * 0.25 - 10.0;
+        }
+        let mut eye = vec![0.0f32; 64 * 64];
+        for i in 0..64 {
+            eye[i * 64 + i] = 1.0;
+        }
+        let zero = vec![0.0f32; 64 * 64];
+        let out = svc
+            .run_f32(
+                "matmul_block",
+                &[(&a, &[64, 64]), (&eye, &[64, 64]), (&zero, &[64, 64])],
+            )
+            .expect("execute");
+        assert_eq!(out.len(), 64 * 64);
+        for (x, y) in out.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn service_usable_from_many_threads() {
+        let Some(host) = service() else { return };
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let svc = host.handle();
+            handles.push(std::thread::spawn(move || {
+                let a = vec![t as f32; 64 * 64];
+                let b = vec![1.0f32; 64 * 64];
+                let c = vec![0.0f32; 64 * 64];
+                let out = svc
+                    .run_f32(
+                        "matmul_block",
+                        &[(&a, &[64, 64]), (&b, &[64, 64]), (&c, &[64, 64])],
+                    )
+                    .expect("execute");
+                // Row sum: each element = 64 * t.
+                assert!((out[0] - 64.0 * t as f32).abs() < 1e-3);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(host) = service() else { return };
+        let svc = host.handle();
+        assert!(svc.run_f32("nope", &[]).is_err());
+        assert!(svc.names().unwrap().contains(&"lu0".to_string()));
+    }
+}

@@ -1,0 +1,163 @@
+//! Cost-model calibration against the *real* runtime structures.
+//!
+//! The simulator's constants (`CostModel`) should track the implementation,
+//! not guesses. This module microbenchmarks the actual structures on the
+//! host (WD allocation, graph submit/finish, SPSC push/pop, ready-pool
+//! push/pop) and reports measured ns/op next to the model's 2 GHz baseline.
+//! `repro bench --exp micro` prints the comparison; EXPERIMENTS.md §Perf
+//! records it.
+
+use std::sync::{Arc, Weak};
+use std::time::Instant;
+
+use crate::coordinator::dep::{dep_in, dep_out};
+use crate::coordinator::depgraph::DepDomain;
+use crate::coordinator::messages::SubmitTaskMsg;
+use crate::coordinator::ready::ReadyPools;
+use crate::coordinator::wd::{TaskId, Wd, WdState};
+use crate::substrate::SpscQueue;
+
+/// Measured per-operation costs (ns/op) of the real structures.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MeasuredCosts {
+    pub wd_create_ns: f64,
+    pub graph_submit_ns: f64,
+    pub graph_finish_ns: f64,
+    pub msg_push_ns: f64,
+    pub msg_pop_ns: f64,
+    pub ready_push_pop_ns: f64,
+}
+
+fn time_per_op<F: FnMut()>(iters: u64, mut f: F) -> f64 {
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    start.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Run the calibration microbenchmarks (~100 ms total).
+pub fn measure() -> MeasuredCosts {
+    let iters = 20_000u64;
+
+    // WD creation.
+    let mut sink = Vec::with_capacity(iters as usize);
+    let wd_create_ns = time_per_op(iters, || {
+        sink.push(Wd::new(
+            TaskId(1),
+            vec![dep_in(1), dep_out(2)],
+            "cal",
+            Weak::new(),
+            Box::new(|| {}),
+        ));
+    });
+    sink.clear();
+
+    // Graph submit + finish on a rolling window (steady-state graph size).
+    let domain = DepDomain::new();
+    let mut next_id = 1u64;
+    let mut window: std::collections::VecDeque<Arc<Wd>> = Default::default();
+    let graph_submit_ns = time_per_op(iters, || {
+        let wd = Wd::new(
+            TaskId(next_id),
+            vec![dep_in(next_id % 64), dep_out((next_id + 1) % 64)],
+            "cal",
+            Weak::new(),
+            Box::new(|| {}),
+        );
+        next_id += 1;
+        domain.submit(&wd);
+        window.push_back(wd);
+    });
+    let graph_finish_ns = time_per_op(window.len() as u64, || {
+        if let Some(wd) = window.pop_front() {
+            wd.set_state(WdState::Ready);
+            wd.set_state(WdState::Running);
+            wd.set_state(WdState::Finished);
+            let _ = domain.finish(&wd);
+        }
+    });
+
+    // Message queue push/pop.
+    let q: SpscQueue<SubmitTaskMsg> = SpscQueue::new();
+    let proto: Vec<Arc<Wd>> = (0..iters)
+        .map(|i| Wd::new(TaskId(i), vec![], "cal", Weak::new(), Box::new(|| {})))
+        .collect();
+    let mut i = 0usize;
+    let msg_push_ns = time_per_op(iters, || {
+        q.push(SubmitTaskMsg { task: Arc::clone(&proto[i]) });
+        i += 1;
+    });
+    let mut guard = q.try_acquire().unwrap();
+    let msg_pop_ns = time_per_op(iters, || {
+        let _ = guard.pop();
+    });
+    drop(guard);
+
+    // Ready pool push+pop pair.
+    let pools = ReadyPools::new(4, 7);
+    let mut i = 0usize;
+    let ready_push_pop_ns = time_per_op(iters, || {
+        pools.push(0, Arc::clone(&proto[i]));
+        let _ = pools.get(0);
+        i += 1;
+    }) / 2.0;
+
+    MeasuredCosts {
+        wd_create_ns,
+        graph_submit_ns,
+        graph_finish_ns,
+        msg_push_ns,
+        msg_pop_ns,
+        ready_push_pop_ns,
+    }
+}
+
+/// Pretty comparison of measured vs modelled (2 GHz baseline) costs.
+pub fn report() -> String {
+    let m = measure();
+    let model = crate::sim::machine::CostModel::scaled(1.0);
+    let mut out = String::new();
+    out.push_str("Calibration: measured real-structure costs vs simulator model (2 GHz baseline)\n");
+    out.push_str(&format!("{:<24}{:>14}{:>14}\n", "operation", "measured ns", "model ns"));
+    let rows = [
+        ("wd_create", m.wd_create_ns, model.t_create_ns as f64),
+        ("graph_submit (2 deps)", m.graph_submit_ns, (model.t_submit_per_dep_ns * 2) as f64),
+        ("graph_finish (2 deps)", m.graph_finish_ns, (model.t_finish_per_dep_ns * 2) as f64),
+        ("msg_push", m.msg_push_ns, model.t_msg_push_ns as f64),
+        ("msg_pop", m.msg_pop_ns, model.t_msg_pop_ns as f64),
+        ("ready_push_pop", m.ready_push_pop_ns, model.t_sched_ns as f64),
+    ];
+    for (name, meas, modl) in rows {
+        out.push_str(&format!("{name:<24}{meas:>14.1}{modl:>14.1}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurements_are_sane() {
+        let m = measure();
+        // All positive, all below 100µs/op (they are ns–µs scale ops).
+        for v in [
+            m.wd_create_ns,
+            m.graph_submit_ns,
+            m.graph_finish_ns,
+            m.msg_push_ns,
+            m.msg_pop_ns,
+            m.ready_push_pop_ns,
+        ] {
+            assert!(v > 0.0 && v < 100_000.0, "{v}");
+        }
+    }
+
+    #[test]
+    fn report_prints_all_rows() {
+        let r = report();
+        assert!(r.contains("wd_create") && r.contains("msg_pop"));
+        assert_eq!(r.lines().count(), 8);
+    }
+}

@@ -1,0 +1,1083 @@
+//! Discrete-event simulator of the task runtime on many-core machines.
+//!
+//! This is the documented hardware substitution (DESIGN.md §2): the paper's
+//! evaluation needs 40–64-core nodes; this engine replays a
+//! [`TaskGraphSpec`] under any of the three runtime organizations on a
+//! virtual machine from [`MachineConfig`], charging calibrated costs for
+//! every runtime operation and modelling the two effects the paper
+//! identifies:
+//!
+//! * **lock contention** — dependence-graph domains are FIFO queueing
+//!   resources: a core that wants the lock while it is held *spins*,
+//!   wasting virtual time exactly like the real spinlock wastes cycles;
+//! * **cache pollution / locality** — runtime-structure work raises a
+//!   core's pollution level, inflating its next task body (§6.1: sync-mode
+//!   task bodies ran ~1.5× slower than DDAST's in Matmul-KNL-FG), and
+//!   graph ops are discounted for cores that touched the structures
+//!   recently (§5.1's manager-locality finding). Structure costs also grow
+//!   with the number of tasks in the graph (§6.2).
+//!
+//! The DDAST decision logic here mirrors Listing 2 one-to-one (enter cap,
+//! per-worker submit-queue exclusivity, shared per-worker op budget,
+//! MIN_READY_TASKS early exit, MAX_SPINS empty-pass budget).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::coordinator::{DdastParams, RuntimeKind};
+use crate::sim::machine::MachineConfig;
+use crate::substrate::vtime::SimDuration;
+use crate::substrate::XorShift64;
+use crate::workloads::spec::{CostClass, TaskGraphSpec};
+
+/// Batch sizes: how many creations/graph-ops one event covers (keeps the
+/// event count ~3 per task instead of ~8; timing granularity stays well
+/// under a task body).
+const CREATE_BATCH: usize = 16;
+const CREATOR_BATCH: usize = 32;
+
+/// Simulation options.
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptions {
+    pub variant: RuntimeKind,
+    pub threads: usize,
+    pub params: DdastParams,
+    pub seed: u64,
+    pub trace: bool,
+    /// Minimum spacing of trace gauge samples (ns of virtual time).
+    pub trace_resolution_ns: u64,
+}
+
+impl SimOptions {
+    pub fn new(variant: RuntimeKind, threads: usize) -> Self {
+        SimOptions {
+            variant,
+            threads,
+            params: DdastParams::tuned(threads),
+            seed: 0x5EED,
+            trace: false,
+            trace_resolution_ns: 1_000_000,
+        }
+    }
+
+    pub fn with_params(mut self, p: DdastParams) -> Self {
+        self.params = p;
+        self
+    }
+
+    pub fn with_trace(mut self, res_ns: u64) -> Self {
+        self.trace = true;
+        self.trace_resolution_ns = res_ns;
+        self
+    }
+}
+
+/// Aggregate statistics of one simulated run.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub tasks_executed: u64,
+    pub lock_wait_ns: u64,
+    pub graph_op_ns: u64,
+    pub task_exec_ns: u64,
+    pub pollution_extra_ns: u64,
+    pub mgr_passes: u64,
+    pub msgs_processed: u64,
+    pub steals: u64,
+    pub idle_polls: u64,
+    pub max_in_graph: u64,
+    pub max_ready: u64,
+}
+
+/// Gauge/time-series trace of one simulated run (Figures 12–15).
+#[derive(Clone, Debug, Default)]
+pub struct SimTrace {
+    /// (t_ns, tasks in dependence graph).
+    pub in_graph: Vec<(u64, u64)>,
+    /// (t_ns, ready tasks).
+    pub ready: Vec<(u64, u64)>,
+    /// Per-core busy spans (start_ns, end_ns, label); label "mgr" =
+    /// manager work.
+    pub spans: Vec<Vec<(u64, u64, &'static str)>>,
+}
+
+/// Result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub makespan: SimDuration,
+    /// Speedup over the (runtime-free) sequential execution.
+    pub speedup: f64,
+    pub stats: SimStats,
+    pub trace: Option<SimTrace>,
+}
+
+// ---------------------------------------------------------------------------
+
+/// FIFO queueing lock: requesters reserve in arrival order; the time spent
+/// waiting is the spinning the paper's contention analysis is about.
+#[derive(Clone, Copy, Debug, Default)]
+struct SimLock {
+    free_at: u64,
+}
+
+impl SimLock {
+    /// Reserve the lock at `now` for `hold` ns. Returns (completion, waited).
+    fn acquire(&mut self, now: u64, hold: u64) -> (u64, u64) {
+        let start = self.free_at.max(now);
+        let waited = start - now;
+        self.free_at = start + hold;
+        (self.free_at, waited)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Msg {
+    Submit(usize),
+    Done(usize),
+}
+
+/// What a core is committed to until its next wake. Invariant: every event
+/// handler schedules **exactly one** continuation for the core (a pending +
+/// wake), so a core is never double-scheduled.
+enum Pending {
+    /// Wake and take a fresh decision.
+    Decide,
+    /// Executing creator `creator` produced children `ids[..next]` so far.
+    CreatorStep { creator: usize, ids: Vec<usize>, next: usize },
+    /// Task body completes at wake.
+    TaskEnd { task: usize, started: u64 },
+    /// Sync/GOMP: graph-finish for `task` completes at wake.
+    DoneApplied { task: usize },
+    /// DDAST manager pass completes at wake; apply `msgs`.
+    ManagerPass { msgs: Vec<Msg>, started: u64 },
+}
+
+struct Core {
+    pending: Pending,
+    pollution: f64,
+    last_rt_op: u64,
+    backoff: u64,
+    /// Currently counted in `mgr_count` (inside the DDAST callback).
+    is_mgr: bool,
+    empty_passes: u32,
+    /// GOMP: currently spinning on the central queue.
+    idle_polling: bool,
+    /// When the current idle stretch began (u64::MAX = not idle).
+    idle_since: u64,
+}
+
+struct TaskRt {
+    submitted: bool,
+    done: bool,
+    executed: bool,
+    preds_left: usize,
+    children_left: usize,
+    creating_done: bool,
+}
+
+pub struct Engine<'a> {
+    spec: &'a TaskGraphSpec,
+    machine: &'a MachineConfig,
+    opt: SimOptions,
+    now: u64,
+    seq: u64,
+    events: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    cores: Vec<Core>,
+    tasks: Vec<TaskRt>,
+    preds: Vec<Vec<usize>>,
+    succs: Vec<Vec<usize>>,
+    /// scope (creator id or usize::MAX for root) -> domain index.
+    domain_of_scope: HashMap<usize, usize>,
+    scope_of_task: Vec<usize>,
+    domain_locks: Vec<SimLock>,
+    domain_in_graph: Vec<u64>,
+    in_graph_total: u64,
+    ready_queues: Vec<VecDeque<usize>>,
+    ready_count: u64,
+    // DDAST queue system.
+    submit_q: Vec<VecDeque<usize>>,
+    done_q: Vec<VecDeque<usize>>,
+    submit_locked_until: Vec<u64>,
+    msgs_pending: u64,
+    mgr_count: usize,
+    // GOMP central queue model.
+    central_lock: SimLock,
+    idle_pollers: usize,
+    /// Cores currently idle (hot or futex-parked): a GOMP task insertion
+    /// wakes them all — the thundering herd that slows creation exactly
+    /// when "tasks are executed faster than created" (§6.1, Fig 11a).
+    idle_cores: usize,
+    // program counter of the main thread.
+    main_pos: usize,
+    top_level: Vec<usize>,
+    done_count: usize,
+    last_done_at: u64,
+    rng: XorShift64,
+    stats: SimStats,
+    trace: Option<SimTrace>,
+    last_trace_in_graph: (u64, u64),
+    last_trace_ready: (u64, u64),
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(spec: &'a TaskGraphSpec, machine: &'a MachineConfig, mut opt: SimOptions) -> Self {
+        if opt.variant == RuntimeKind::CentralDast {
+            // The centralized design [7]: the last core is the dedicated
+            // DAS Thread — it drains without Listing 2's caps or breaks.
+            assert!(opt.threads >= 2, "CentralDast needs a worker + the DAST core");
+            opt.params = DdastParams {
+                max_ddast_threads: 1,
+                max_spins: 1,
+                max_ops_thread: usize::MAX / 2,
+                min_ready_tasks: u64::MAX,
+            };
+        }
+        let n = spec.tasks.len();
+        let preds = spec.predecessor_edges();
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (s, ps) in preds.iter().enumerate() {
+            for &p in ps {
+                succs[p].push(s);
+            }
+        }
+        // Scope of each task: root, or its creator.
+        let mut scope_of_task = vec![usize::MAX; n];
+        for t in &spec.tasks {
+            for &c in &t.children {
+                scope_of_task[c] = t.id;
+            }
+        }
+        let nready = if opt.variant == RuntimeKind::GompLike { 1 } else { opt.threads };
+        let tasks = (0..n)
+            .map(|i| TaskRt {
+                submitted: false,
+                done: false,
+                executed: false,
+                preds_left: 0,
+                children_left: spec.tasks[i].children.len(),
+                creating_done: false,
+            })
+            .collect();
+        Engine {
+            spec,
+            machine,
+            opt,
+            now: 0,
+            seq: 0,
+            events: BinaryHeap::new(),
+            cores: (0..opt.threads)
+                .map(|_| Core {
+                    pending: Pending::Decide,
+                    pollution: 0.0,
+                    last_rt_op: u64::MAX,
+                    backoff: machine.costs.t_idle_poll_ns,
+                    is_mgr: false,
+                    empty_passes: 0,
+                    idle_polling: false,
+                    idle_since: u64::MAX,
+                })
+                .collect(),
+            tasks,
+            preds,
+            succs,
+            domain_of_scope: HashMap::new(),
+            scope_of_task,
+            domain_locks: Vec::new(),
+            domain_in_graph: Vec::new(),
+            in_graph_total: 0,
+            ready_queues: (0..nready).map(|_| VecDeque::new()).collect(),
+            ready_count: 0,
+            submit_q: (0..opt.threads).map(|_| VecDeque::new()).collect(),
+            done_q: (0..opt.threads).map(|_| VecDeque::new()).collect(),
+            submit_locked_until: vec![0; opt.threads],
+            msgs_pending: 0,
+            mgr_count: 0,
+            central_lock: SimLock::default(),
+            idle_pollers: 0,
+            idle_cores: 0,
+            main_pos: 0,
+            top_level: spec.top_level(),
+            done_count: 0,
+            last_done_at: 0,
+            rng: XorShift64::new(opt.seed),
+            stats: SimStats::default(),
+            trace: if opt.trace {
+                Some(SimTrace { spans: vec![Vec::new(); opt.threads], ..Default::default() })
+            } else {
+                None
+            },
+            last_trace_in_graph: (u64::MAX, u64::MAX),
+            last_trace_ready: (u64::MAX, u64::MAX),
+        }
+    }
+
+    // ---- small helpers ----------------------------------------------------
+
+    fn wake(&mut self, core: usize, at: u64) {
+        self.seq += 1;
+        self.events.push(Reverse((at, self.seq, core)));
+    }
+
+    fn domain_idx(&mut self, scope: usize) -> usize {
+        if let Some(&d) = self.domain_of_scope.get(&scope) {
+            return d;
+        }
+        let d = self.domain_locks.len();
+        self.domain_locks.push(SimLock::default());
+        self.domain_in_graph.push(0);
+        self.domain_of_scope.insert(scope, d);
+        d
+    }
+
+    /// Effective graph-op cost for `core`: base × structure-growth ×
+    /// warmth discount.
+    fn graph_cost(&mut self, core: usize, base: u64, domain: usize) -> u64 {
+        let c = &self.machine.costs;
+        // Structure-size growth saturates: once the working set no longer
+        // fits any cache level, an op's miss count stops growing.
+        let growth = (1.0
+            + c.graph_growth_factor * (1.0 + self.domain_in_graph[domain] as f64 / 256.0).ln())
+        .min(2.0);
+        let warm = self.cores[core].last_rt_op != u64::MAX
+            && self.now.saturating_sub(self.cores[core].last_rt_op) <= c.rt_warm_window_ns;
+        let disc = if warm { 1.0 - c.rt_warm_discount } else { 1.0 };
+        ((base as f64) * growth * disc).round() as u64
+    }
+
+    /// GOMP central-lock inflation from hot idle pollers, mildly capped
+    /// (cache-line bouncing saturates).
+    fn gomp_infl(&self) -> f64 {
+        (1.0 + self.machine.costs.gomp_contention * self.idle_pollers as f64).min(2.0)
+    }
+
+    /// GOMP thundering herd: inserting a task wakes every idle worker
+    /// (hot spinners re-arm, parked ones futex-wake); the creator pays a
+    /// per-idler cost. Machine dependent through `gomp_contention` — on
+    /// the KNL mesh this is what collapses creation-bound runs at 32/64
+    /// threads while ThunderX barely notices (§6.1, Fig 11a vs 11e).
+    fn gomp_wake_herd(&self) -> u64 {
+        (self.machine.costs.t_central_ns as f64
+            * self.machine.costs.gomp_contention
+            * 8.0
+            * self.idle_cores as f64) as u64
+    }
+
+    fn mark_idle(&mut self, core: usize) {
+        if self.cores[core].idle_since == u64::MAX {
+            self.cores[core].idle_since = self.now;
+            self.idle_cores += 1;
+        }
+    }
+
+    fn mark_busy(&mut self, core: usize) {
+        if self.cores[core].idle_since != u64::MAX {
+            self.cores[core].idle_since = u64::MAX;
+            self.idle_cores -= 1;
+        }
+    }
+
+    /// Charge runtime-structure work to a core's cache pollution.
+    fn pollute(&mut self, core: usize, dur: u64) {
+        let c = &mut self.cores[core];
+        c.pollution = (c.pollution + dur as f64 / self.machine.costs.pollution_sat_ns as f64).min(1.0);
+        c.last_rt_op = self.now;
+    }
+
+    fn exec_rate(&self) -> f64 {
+        self.machine.flops_per_thread(self.opt.threads)
+    }
+
+    fn body_ns(&self, task: usize, pollution: f64) -> u64 {
+        let base = match self.spec.tasks[task].cost {
+            CostClass::Flops(f) | CostClass::Creator(f) => (f / self.exec_rate() * 1e9) as u64,
+            CostClass::FixedNs(ns) => ns,
+        };
+        let infl = 1.0 + self.machine.costs.pollution_penalty * pollution;
+        ((base as f64) * infl) as u64
+    }
+
+    fn record_gauges(&mut self) {
+        self.stats.max_in_graph = self.stats.max_in_graph.max(self.in_graph_total);
+        self.stats.max_ready = self.stats.max_ready.max(self.ready_count);
+        if self.trace.is_none() {
+            return;
+        }
+        let res = self.opt.trace_resolution_ns;
+        let (lt, lv) = self.last_trace_in_graph;
+        if lv != self.in_graph_total && (lt == u64::MAX || self.now.saturating_sub(lt) >= res) {
+            self.trace.as_mut().unwrap().in_graph.push((self.now, self.in_graph_total));
+            self.last_trace_in_graph = (self.now, self.in_graph_total);
+        }
+        let (lt, lv) = self.last_trace_ready;
+        if lv != self.ready_count && (lt == u64::MAX || self.now.saturating_sub(lt) >= res) {
+            self.trace.as_mut().unwrap().ready.push((self.now, self.ready_count));
+            self.last_trace_ready = (self.now, self.ready_count);
+        }
+    }
+
+    fn push_ready(&mut self, core: usize, task: usize) {
+        let q = core % self.ready_queues.len();
+        self.ready_queues[q].push_back(task);
+        self.ready_count += 1;
+    }
+
+    // ---- graph effects (same semantics as coordinator::depgraph) ----------
+
+    /// Apply a submission: count unfinished predecessors; ready if none.
+    /// Returns true if the task became ready.
+    fn apply_submit(&mut self, core: usize, task: usize) {
+        let scope = self.scope_of_task[task];
+        let d = self.domain_idx(scope);
+        let left = self.preds[task].iter().filter(|&&p| !self.tasks[p].done).count();
+        let t = &mut self.tasks[task];
+        t.submitted = true;
+        t.preds_left = left;
+        self.domain_in_graph[d] += 1;
+        self.in_graph_total += 1;
+        if left == 0 {
+            self.push_ready(core, task);
+        }
+        self.record_gauges();
+    }
+
+    /// Apply done-processing: notify successors, remove from graph.
+    fn apply_done(&mut self, core: usize, task: usize) {
+        let scope = self.scope_of_task[task];
+        let d = self.domain_idx(scope);
+        debug_assert!(self.tasks[task].executed && !self.tasks[task].done);
+        self.tasks[task].done = true;
+        self.domain_in_graph[d] = self.domain_in_graph[d].saturating_sub(1);
+        self.in_graph_total = self.in_graph_total.saturating_sub(1);
+        self.done_count += 1;
+        self.last_done_at = self.now;
+        let succs = self.succs[task].clone();
+        for s in succs {
+            if self.tasks[s].submitted && !self.tasks[s].done {
+                debug_assert!(self.tasks[s].preds_left > 0);
+                self.tasks[s].preds_left -= 1;
+                if self.tasks[s].preds_left == 0 && !self.tasks[s].executed {
+                    self.push_ready(core, s);
+                }
+            }
+        }
+        // Creator bookkeeping: last child done -> creator body can finish.
+        if scope != usize::MAX {
+            self.tasks[scope].children_left -= 1;
+            if self.tasks[scope].children_left == 0 && self.tasks[scope].creating_done {
+                // The creator's taskwait returns; its finalization is
+                // processed inline on the core that completed the last
+                // child (without disturbing that core's own schedule).
+                self.finish_task_inline(core, scope);
+            }
+        }
+        self.record_gauges();
+    }
+
+    /// Submission action costs for one task, per variant. Returns duration
+    /// added to the acting core's busy time; queues side effects.
+    fn submit_action(&mut self, core: usize, task: usize, at: u64) -> u64 {
+        let c = self.machine.costs;
+        let ndeps = self.spec.tasks[task].deps.len().max(1) as u64;
+        match self.opt.variant {
+            RuntimeKind::Ddast | RuntimeKind::CentralDast => {
+                // Fig 3: push a Submit Task Message; the graph is touched
+                // later by a manager.
+                self.submit_q[core].push_back(task);
+                self.msgs_pending += 1;
+                c.t_msg_push_ns
+            }
+            RuntimeKind::Sync => {
+                let scope = self.scope_of_task[task];
+                let d = self.domain_idx(scope);
+                let hold = self.graph_cost(core, c.t_submit_per_dep_ns * ndeps, d);
+                let (completion, waited) = self.domain_locks[d].acquire(at, hold);
+                self.stats.lock_wait_ns += waited;
+                self.stats.graph_op_ns += hold;
+                self.pollute(core, hold + waited);
+                self.apply_submit(core, task);
+                completion - at
+            }
+            RuntimeKind::GompLike => {
+                // Central structures: one global lock; idle pollers inflate
+                // the effective hold (§6.1's GOMP contention collapse), but
+                // the structures themselves are leaner than Nanos++'s.
+                let infl = self.gomp_infl();
+                let fp = c.gomp_footprint;
+                // Insertion wakes every idle worker: the creator eats the
+                // herd cost (see gomp_wake_herd).
+                let hold = ((c.t_central_ns as f64
+                    + (c.t_submit_per_dep_ns * ndeps) as f64 * fp)
+                    * infl) as u64
+                    + self.gomp_wake_herd();
+                let (completion, waited) = self.central_lock.acquire(at, hold);
+                self.stats.lock_wait_ns += waited;
+                self.stats.graph_op_ns += hold;
+                self.pollute(core, ((hold + waited) as f64 * fp) as u64);
+                self.apply_submit(core, task);
+                completion - at
+            }
+        }
+    }
+
+    /// Finish-processing costs (graph removal + successor release) for
+    /// Sync/GOMP — DDAST managers price this inside their pass.
+    fn finish_hold(&mut self, core: usize, task: usize) -> (usize, u64) {
+        let c = self.machine.costs;
+        let ndeps = self.spec.tasks[task].deps.len().max(1) as u64;
+        let nsucc = self.succs[task].len() as u64;
+        let scope = self.scope_of_task[task];
+        let d = self.domain_idx(scope);
+        let base = c.t_finish_per_dep_ns * ndeps + c.t_release_per_succ_ns * nsucc;
+        (d, self.graph_cost(core, base, d))
+    }
+
+    // ---- task execution ----------------------------------------------------
+
+    /// Start executing `task` on `core` at `at` (after scheduling pickup).
+    fn start_task(&mut self, core: usize, task: usize, at: u64) {
+        let t = &self.spec.tasks[task];
+        if t.children.is_empty() {
+            let dur = self.body_ns(task, self.cores[core].pollution);
+            let base = self.body_ns(task, 0.0);
+            self.stats.pollution_extra_ns += dur - base;
+            self.stats.task_exec_ns += dur;
+            self.cores[core].pending = Pending::TaskEnd { task, started: at };
+            self.wake(core, at + dur);
+        } else {
+            // Creator: its body is the creation loop (plus its own flops).
+            let pre = self.body_ns(task, self.cores[core].pollution);
+            let ids = t.children.clone();
+            self.cores[core].pending = Pending::CreatorStep { creator: task, ids, next: 0 };
+            self.wake(core, at + pre);
+        }
+    }
+
+    /// Finalize a task *without* occupying the core's pending slot (used
+    /// for creator completion, which is detected while the core is in the
+    /// middle of another event). The lock time is still reserved — it
+    /// serializes against everyone else — but the effects apply at `now`.
+    fn finish_task_inline(&mut self, core: usize, task: usize) {
+        self.tasks[task].executed = true;
+        self.stats.tasks_executed += 1;
+        match self.opt.variant {
+            RuntimeKind::Ddast | RuntimeKind::CentralDast => {
+                self.done_q[core].push_back(task);
+                self.msgs_pending += 1;
+            }
+            RuntimeKind::Sync => {
+                let (d, hold) = self.finish_hold(core, task);
+                let (_completion, waited) = self.domain_locks[d].acquire(self.now, hold);
+                self.stats.lock_wait_ns += waited;
+                self.stats.graph_op_ns += hold;
+                self.pollute(core, hold + waited);
+                self.apply_done(core, task);
+            }
+            RuntimeKind::GompLike => {
+                let (_, hold) = self.finish_hold(core, task);
+                let infl = self.gomp_infl();
+                let fp = self.machine.costs.gomp_footprint;
+                let hold =
+                    ((hold as f64 * fp + self.machine.costs.t_central_ns as f64) * infl) as u64;
+                let (_completion, waited) = self.central_lock.acquire(self.now, hold);
+                self.stats.lock_wait_ns += waited;
+                self.stats.graph_op_ns += hold;
+                self.pollute(core, ((hold + waited) as f64 * fp) as u64);
+                self.apply_done(core, task);
+            }
+        }
+    }
+
+    /// Body of `task` finished at `at` on `core`: run the variant's
+    /// finalization path.
+    fn end_task(&mut self, core: usize, task: usize, at: u64) {
+        self.tasks[task].executed = true;
+        self.stats.tasks_executed += 1;
+        // Cache refilled with application data.
+        self.cores[core].pollution = 0.0;
+        match self.opt.variant {
+            RuntimeKind::Ddast | RuntimeKind::CentralDast => {
+                self.done_q[core].push_back(task);
+                self.msgs_pending += 1;
+                // Push cost is folded into the next decision latency.
+                self.cores[core].pending = Pending::Decide;
+                self.wake(core, at + self.machine.costs.t_msg_push_ns);
+            }
+            RuntimeKind::Sync => {
+                let (d, hold) = self.finish_hold(core, task);
+                let (completion, waited) = self.domain_locks[d].acquire(at, hold);
+                self.stats.lock_wait_ns += waited;
+                self.stats.graph_op_ns += hold;
+                self.pollute(core, hold + waited);
+                self.cores[core].pending = Pending::DoneApplied { task };
+                self.wake(core, completion);
+            }
+            RuntimeKind::GompLike => {
+                let (_, hold) = self.finish_hold(core, task);
+                let infl = self.gomp_infl();
+                let fp = self.machine.costs.gomp_footprint;
+                let hold =
+                    ((hold as f64 * fp + self.machine.costs.t_central_ns as f64) * infl) as u64;
+                let (completion, waited) = self.central_lock.acquire(at, hold);
+                self.stats.lock_wait_ns += waited;
+                self.stats.graph_op_ns += hold;
+                self.pollute(core, ((hold + waited) as f64 * fp) as u64);
+                self.cores[core].pending = Pending::DoneApplied { task };
+                self.wake(core, completion);
+            }
+        }
+    }
+
+    // ---- DDAST manager (Listing 2) -----------------------------------------
+
+    /// One pass over all worker queues. Pops messages *now* (they are
+    /// reserved to this manager), prices them, applies effects at wake.
+    /// Returns None if the pass found nothing.
+    fn manager_pass(&mut self, core: usize) -> Option<(Vec<Msg>, u64)> {
+        let p = self.opt.params;
+        let c = self.machine.costs;
+        let mut msgs = Vec::new();
+        let mut dur = 0u64;
+        for w in 0..self.opt.threads {
+            // Listing 2 line 7.
+            if self.ready_count >= p.min_ready_tasks {
+                break;
+            }
+            let mut cnt = 0usize;
+            // Submit queue: exclusive acquire (one manager at a time).
+            if self.now >= self.submit_locked_until[w] {
+                while cnt < p.max_ops_thread {
+                    match self.submit_q[w].pop_front() {
+                        Some(task) => {
+                            let scope = self.scope_of_task[task];
+                            let d = self.domain_idx(scope);
+                            let ndeps = self.spec.tasks[task].deps.len().max(1) as u64;
+                            let hold = self.graph_cost(core, c.t_submit_per_dep_ns * ndeps, d);
+                            let (completion, waited) =
+                                self.domain_locks[d].acquire(self.now + dur, hold);
+                            self.stats.lock_wait_ns += waited;
+                            self.stats.graph_op_ns += hold;
+                            dur = completion - self.now + c.t_msg_pop_ns;
+                            msgs.push(Msg::Submit(task));
+                            cnt += 1;
+                        }
+                        None => break,
+                    }
+                }
+                if cnt > 0 {
+                    self.submit_locked_until[w] = self.now + dur;
+                }
+            }
+            // Done queue shares the per-worker budget (Listing 2 L17-20).
+            while cnt < p.max_ops_thread {
+                match self.done_q[w].pop_front() {
+                    Some(task) => {
+                        let (d, hold) = self.finish_hold(core, task);
+                        let (completion, waited) =
+                            self.domain_locks[d].acquire(self.now + dur, hold);
+                        self.stats.lock_wait_ns += waited;
+                        self.stats.graph_op_ns += hold;
+                        dur = completion - self.now + c.t_msg_pop_ns;
+                        msgs.push(Msg::Done(task));
+                        cnt += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        if msgs.is_empty() {
+            None
+        } else {
+            self.msgs_pending -= msgs.len() as u64;
+            self.stats.msgs_processed += msgs.len() as u64;
+            self.stats.mgr_passes += 1;
+            Some((msgs, dur.max(c.t_msg_pop_ns)))
+        }
+    }
+
+    /// Try to enter / continue manager mode. Returns true if a pass was
+    /// scheduled.
+    fn try_manager(&mut self, core: usize) -> bool {
+        let p = self.opt.params;
+        if !self.cores[core].is_mgr {
+            if self.mgr_count >= p.max_ddast_threads || self.msgs_pending == 0 {
+                return false;
+            }
+            // Entering when parallelism is already uncovered is a no-op
+            // (Listing 2 would bounce straight out through line 7 + 25).
+            if self.ready_count >= p.min_ready_tasks {
+                return false;
+            }
+            self.cores[core].is_mgr = true;
+            self.cores[core].empty_passes = 0;
+            self.mgr_count += 1;
+        }
+        match self.manager_pass(core) {
+            Some((msgs, dur)) => {
+                self.cores[core].empty_passes = 0;
+                self.pollute(core, dur);
+                self.cores[core].pending = Pending::ManagerPass { msgs, started: self.now };
+                self.wake(core, self.now + dur);
+                true
+            }
+            None => {
+                self.cores[core].empty_passes += 1;
+                if self.cores[core].empty_passes >= self.opt.params.max_spins {
+                    // Leave the callback.
+                    self.cores[core].is_mgr = false;
+                    self.mgr_count -= 1;
+                    false
+                } else {
+                    // Spin once more: re-check shortly.
+                    self.cores[core].pending = Pending::Decide;
+                    self.wake(core, self.now + self.machine.costs.t_msg_pop_ns);
+                    true
+                }
+            }
+        }
+    }
+
+    /// Leave the DDAST callback (Listing 2's function return).
+    fn exit_manager(&mut self, core: usize) {
+        if self.cores[core].is_mgr {
+            self.cores[core].is_mgr = false;
+            self.mgr_count -= 1;
+        }
+    }
+
+    fn leave_idle_polling(&mut self, core: usize) {
+        if self.cores[core].idle_polling {
+            self.cores[core].idle_polling = false;
+            self.idle_pollers -= 1;
+        }
+    }
+
+    // ---- the decision function ---------------------------------------------
+
+    fn decide(&mut self, core: usize) {
+        let c = self.machine.costs;
+        // Main thread: create all top-level tasks first (the benchmarks'
+        // sequential creation loop before the global taskwait).
+        if core == 0 && self.main_pos < self.top_level.len() {
+            self.leave_idle_polling(core);
+            self.mark_busy(core);
+            let upto = (self.main_pos + CREATE_BATCH).min(self.top_level.len());
+            let ids: Vec<usize> = self.top_level[self.main_pos..upto].to_vec();
+            self.main_pos = upto;
+            let t_create = if self.opt.variant == RuntimeKind::GompLike {
+                c.t_create_gomp_ns
+            } else {
+                c.t_create_ns
+            };
+            let mut dur = 0u64;
+            for &id in &ids {
+                dur += t_create;
+                dur += self.submit_action(core, id, self.now + dur);
+            }
+            // NOTE: submit effects for Sync/GOMP were applied immediately
+            // (the lock reservations are time-accurate); for DDAST the
+            // messages are already in the queue. The batch just occupies
+            // the main thread for `dur`.
+            self.cores[core].pending = Pending::Decide;
+            self.wake(core, self.now + dur);
+            return;
+        }
+
+        // Centralized DAST: the last core is the dedicated manager; it
+        // never executes application tasks.
+        if self.opt.variant == RuntimeKind::CentralDast && core == self.opt.threads - 1 {
+            match self.manager_pass(core) {
+                Some((msgs, dur)) => {
+                    self.pollute(core, dur);
+                    self.cores[core].pending = Pending::ManagerPass { msgs, started: self.now };
+                    self.wake(core, self.now + dur);
+                }
+                None => {
+                    self.stats.idle_polls += 1;
+                    self.cores[core].pending = Pending::Decide;
+                    self.wake(core, self.now + c.t_msg_pop_ns.max(100));
+                }
+            }
+            return;
+        }
+
+        // Worker decision: ready task first.
+        if let Some(task) = self.pop_ready(core) {
+            self.exit_manager(core);
+            self.leave_idle_polling(core);
+            self.cores[core].backoff = c.t_idle_poll_ns;
+            self.mark_busy(core);
+            let pickup = if self.opt.variant == RuntimeKind::GompLike {
+                // Central-queue pop under the inflated global lock.
+                let infl = self.gomp_infl();
+                let hold = (c.t_central_ns as f64 * infl) as u64;
+                let (completion, waited) = self.central_lock.acquire(self.now, hold);
+                self.stats.lock_wait_ns += waited;
+                completion - self.now
+            } else {
+                c.t_sched_ns
+            };
+            self.start_task(core, task, self.now + pickup);
+            return;
+        }
+
+        // DDAST: idle thread -> Functionality Dispatcher -> manager.
+        if self.opt.variant == RuntimeKind::Ddast && self.try_manager(core) {
+            return;
+        }
+
+        // Nothing to do: back off. GOMP idle threads hammer the central
+        // queue while *hot* (their count inflates everyone's critical
+        // sections — §6.1's collapse), but like libgomp's spin-then-sleep
+        // wait policy they cool down after a while and stop contending.
+        // Sync/DDAST idle threads poll locally.
+        self.stats.idle_polls += 1;
+        let b = self.cores[core].backoff;
+        self.mark_idle(core);
+        if self.opt.variant == RuntimeKind::GompLike {
+            // libgomp's spin-then-sleep wait policy: hot spinning (and
+            // therefore contending on the central line) for the spin
+            // window, then parked on the futex. N-Body's ~100 µs task
+            // gaps keep pollers hot (→ the Fig 11a collapse); SparseLU's
+            // millisecond droughts let them cool.
+            const GOMP_SPIN_WINDOW_NS: u64 = 500_000;
+            if self.now - self.cores[core].idle_since < GOMP_SPIN_WINDOW_NS {
+                if !self.cores[core].idle_polling {
+                    self.cores[core].idle_polling = true;
+                    self.idle_pollers += 1;
+                }
+            } else {
+                self.leave_idle_polling(core);
+            }
+        } else {
+            self.cores[core].backoff = (b * 2).min(c.t_idle_poll_ns * 16);
+        }
+        self.cores[core].pending = Pending::Decide;
+        self.wake(core, self.now + b);
+    }
+
+    fn pop_ready(&mut self, core: usize) -> Option<usize> {
+        if self.ready_count == 0 {
+            return None;
+        }
+        let nq = self.ready_queues.len();
+        let me = core % nq;
+        if let Some(t) = self.ready_queues[me].pop_front() {
+            self.ready_count -= 1;
+            return Some(t);
+        }
+        // Steal: scan from a random start (DBF policy).
+        let start = self.rng.next_below(nq as u64) as usize;
+        for k in 0..nq {
+            let v = (start + k) % nq;
+            if v == me {
+                continue;
+            }
+            if let Some(t) = self.ready_queues[v].pop_back() {
+                self.ready_count -= 1;
+                self.stats.steals += 1;
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn step(&mut self, core: usize) {
+        let pending = std::mem::replace(&mut self.cores[core].pending, Pending::Decide);
+        match pending {
+            Pending::Decide => self.decide(core),
+            Pending::CreatorStep { creator, ids, next } => {
+                // Create the next batch of children.
+                let c = self.machine.costs;
+                let t_create = if self.opt.variant == RuntimeKind::GompLike {
+                    c.t_create_gomp_ns
+                } else {
+                    c.t_create_ns
+                };
+                let upto = (next + CREATOR_BATCH).min(ids.len());
+                let mut dur = 0u64;
+                for &id in &ids[next..upto] {
+                    dur += t_create;
+                    dur += self.submit_action(core, id, self.now + dur);
+                }
+                if upto < ids.len() {
+                    self.cores[core].pending = Pending::CreatorStep { creator, ids, next: upto };
+                    self.wake(core, self.now + dur);
+                } else {
+                    // All children created; the creator taskwaits. The core
+                    // is released; the creator's body "ends" when the last
+                    // child is done-processed (see apply_done).
+                    self.tasks[creator].creating_done = true;
+                    if let Some(tr) = &mut self.trace {
+                        tr.spans[core].push((self.now, self.now + dur, "creator"));
+                    }
+                    if self.tasks[creator].children_left == 0 {
+                        self.finish_task_inline(core, creator);
+                    }
+                    self.cores[core].pending = Pending::Decide;
+                    self.wake(core, self.now + dur);
+                }
+            }
+            Pending::TaskEnd { task, started } => {
+                if let Some(tr) = &mut self.trace {
+                    tr.spans[core].push((started, self.now, self.spec.tasks[task].label));
+                }
+                self.end_task(core, task, self.now);
+            }
+            Pending::DoneApplied { task } => {
+                self.apply_done(core, task);
+                self.decide(core);
+            }
+            Pending::ManagerPass { msgs, started } => {
+                for m in msgs {
+                    match m {
+                        Msg::Submit(t) => self.apply_submit(core, t),
+                        Msg::Done(t) => self.apply_done(core, t),
+                    }
+                }
+                if let Some(tr) = &mut self.trace {
+                    tr.spans[core].push((started, self.now, "mgr"));
+                }
+                self.decide(core);
+            }
+        }
+    }
+
+    /// Run to completion. Panics on deadlock (event queue drained early).
+    pub fn run(mut self) -> SimResult {
+        for core in 0..self.opt.threads {
+            self.wake(core, 0);
+        }
+        let n = self.spec.tasks.len();
+        let mut guard: u64 = 0;
+        while self.done_count < n {
+            let Reverse((t, _, core)) = self.events.pop().unwrap_or_else(|| {
+                panic!(
+                    "simulator deadlock: {}/{} done, {} msgs pending, ready={}",
+                    self.done_count, n, self.msgs_pending, self.ready_count
+                )
+            });
+            self.now = t;
+            self.step(core);
+            guard += 1;
+            debug_assert!(guard < 2_000_000_000, "runaway simulation");
+        }
+        let makespan = SimDuration::from_nanos(self.last_done_at);
+        let seq = self.spec.sequential_seconds(self.machine.flops_per_core);
+        let speedup = if makespan.as_nanos() == 0 { 0.0 } else { seq / makespan.as_secs_f64() };
+        SimResult { makespan, speedup, stats: self.stats, trace: self.trace }
+    }
+}
+
+/// Convenience wrapper.
+pub fn simulate(spec: &TaskGraphSpec, machine: &MachineConfig, opt: SimOptions) -> SimResult {
+    Engine::new(spec, machine, opt).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{matmul, nbody, sparselu, synthetic};
+
+    fn knl() -> MachineConfig {
+        MachineConfig::knl()
+    }
+
+    #[test]
+    fn chain_has_no_parallel_speedup() {
+        let spec = synthetic::chain(200, 100_000);
+        for kind in [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::GompLike] {
+            let r = simulate(&spec, &knl(), SimOptions::new(kind, 8));
+            assert_eq!(r.stats.tasks_executed, 200, "{kind:?}");
+            // 200 × 100µs = 20ms of serial work; makespan can't beat it.
+            assert!(r.makespan.as_nanos() >= 20_000_000, "{kind:?} {}", r.makespan);
+        }
+    }
+
+    #[test]
+    fn independent_tasks_scale() {
+        let spec = synthetic::independent(2_000, 200_000);
+        let m = knl();
+        let r1 = simulate(&spec, &m, SimOptions::new(RuntimeKind::Ddast, 1));
+        let r16 = simulate(&spec, &m, SimOptions::new(RuntimeKind::Ddast, 16));
+        let ratio = r1.makespan.as_secs_f64() / r16.makespan.as_secs_f64();
+        assert!(ratio > 8.0, "16 threads should be >8x faster: {ratio:.2}");
+    }
+
+    #[test]
+    fn all_variants_complete_matmul() {
+        let spec = matmul::generate(matmul::MatmulParams { ms: 1024, bs: 128 });
+        for kind in [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::GompLike] {
+            let r = simulate(&spec, &knl(), SimOptions::new(kind, 16));
+            assert_eq!(r.stats.tasks_executed as usize, spec.num_tasks(), "{kind:?}");
+            assert!(r.speedup > 1.0, "{kind:?}: {}", r.speedup);
+        }
+    }
+
+    #[test]
+    fn nested_nbody_completes() {
+        let spec = nbody::generate(nbody::NBodyParams {
+            num_particles: 2048,
+            timesteps: 4,
+            bs: 128,
+        });
+        for kind in [RuntimeKind::Sync, RuntimeKind::Ddast] {
+            let r = simulate(&spec, &knl(), SimOptions::new(kind, 8));
+            assert_eq!(r.stats.tasks_executed as usize, spec.num_tasks(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sparselu_completes_all_variants() {
+        let spec = sparselu::generate(sparselu::SparseLuParams { ms: 2048, bs: 128 });
+        for kind in [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::GompLike] {
+            let r = simulate(&spec, &knl(), SimOptions::new(kind, 12));
+            assert_eq!(r.stats.tasks_executed as usize, spec.num_tasks(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn ddast_bounds_in_graph_sync_balloons() {
+        // Fig 12's roof-vs-pyramid: DDAST keeps far fewer tasks in the
+        // graph than the sync runtime.
+        let spec = matmul::generate(matmul::MatmulParams { ms: 2048, bs: 128 });
+        let m = knl();
+        let sync = simulate(&spec, &m, SimOptions::new(RuntimeKind::Sync, 16));
+        let ddast = simulate(&spec, &m, SimOptions::new(RuntimeKind::Ddast, 16));
+        assert!(
+            ddast.stats.max_in_graph * 4 < sync.stats.max_in_graph,
+            "ddast={} sync={}",
+            ddast.stats.max_in_graph,
+            sync.stats.max_in_graph
+        );
+    }
+
+    #[test]
+    fn mgr_cap_respected_and_used() {
+        let spec = matmul::generate(matmul::MatmulParams { ms: 2048, bs: 128 });
+        let r = simulate(&spec, &knl(), SimOptions::new(RuntimeKind::Ddast, 16));
+        assert!(r.stats.mgr_passes > 0);
+        assert_eq!(r.stats.msgs_processed as usize, 2 * spec.num_tasks());
+    }
+
+    #[test]
+    fn trace_collects_series() {
+        let spec = matmul::generate(matmul::MatmulParams { ms: 1024, bs: 128 });
+        let r = simulate(
+            &spec,
+            &knl(),
+            SimOptions::new(RuntimeKind::Sync, 8).with_trace(1000),
+        );
+        let tr = r.trace.unwrap();
+        assert!(!tr.in_graph.is_empty());
+        assert!(!tr.ready.is_empty());
+        assert!(tr.spans.iter().any(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = sparselu::generate(sparselu::SparseLuParams { ms: 1024, bs: 128 });
+        let a = simulate(&spec, &knl(), SimOptions::new(RuntimeKind::Ddast, 8));
+        let b = simulate(&spec, &knl(), SimOptions::new(RuntimeKind::Ddast, 8));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.stats.msgs_processed, b.stats.msgs_processed);
+    }
+}

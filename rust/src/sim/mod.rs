@@ -1,0 +1,10 @@
+//! Discrete-event simulation of the runtime on the paper's many-core
+//! machines (the documented hardware substitution — DESIGN.md §2).
+
+pub mod calibrate;
+pub mod engine;
+pub mod machine;
+pub mod report;
+
+pub use engine::{simulate, Engine, SimOptions, SimResult, SimStats, SimTrace};
+pub use machine::{CostModel, MachineConfig};

@@ -1,0 +1,152 @@
+//! Result formatting: speedup tables and ASCII series/plots for the
+//! regenerated figures.
+
+use crate::sim::engine::SimTrace;
+
+/// One speedup-vs-threads series (a line in Figures 9–11).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    /// (threads, speedup) points.
+    pub points: Vec<(usize, f64)>,
+}
+
+/// Format several series as the text table the paper's plots encode.
+pub fn speedup_table(title: &str, series: &[Series]) -> String {
+    let mut out = format!("{title}\n");
+    let threads: Vec<usize> = series
+        .first()
+        .map(|s| s.points.iter().map(|p| p.0).collect())
+        .unwrap_or_default();
+    out.push_str(&format!("{:<14}", "threads"));
+    for t in &threads {
+        out.push_str(&format!("{t:>9}"));
+    }
+    out.push('\n');
+    for s in series {
+        out.push_str(&format!("{:<14}", s.label));
+        for (_, v) in &s.points {
+            out.push_str(&format!("{v:>9.2}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// ASCII sparkline plot of a gauge series (Figures 12/14 style).
+pub fn ascii_series(label: &str, series: &[(u64, u64)], width: usize, height: usize) -> String {
+    if series.is_empty() {
+        return format!("{label}: <empty>\n");
+    }
+    let t0 = series.first().unwrap().0;
+    let t1 = series.last().unwrap().0.max(t0 + 1);
+    let vmax = series.iter().map(|p| p.1).max().unwrap().max(1);
+    // Resample to `width` buckets (max value per bucket).
+    let mut buckets = vec![0u64; width];
+    for &(t, v) in series {
+        let b = (((t - t0) as u128 * (width as u128 - 1)) / (t1 - t0) as u128) as usize;
+        buckets[b] = buckets[b].max(v);
+    }
+    // Carry last value forward through empty buckets for readability.
+    for i in 1..width {
+        if buckets[i] == 0 {
+            buckets[i] = buckets[i - 1];
+        }
+    }
+    let mut rows = vec![String::new(); height];
+    for (_, row) in rows.iter_mut().enumerate() {
+        row.reserve(width);
+    }
+    for b in buckets.iter() {
+        let level = ((b * height as u64) + vmax - 1) / vmax; // ceil
+        for (r, row) in rows.iter_mut().enumerate() {
+            let threshold = (height - r) as u64;
+            row.push(if level >= threshold { '#' } else { ' ' });
+        }
+    }
+    let mut out = format!("{label} (max={vmax}, duration={:.3}s)\n", (t1 - t0) as f64 * 1e-9);
+    for row in rows {
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out
+}
+
+/// Render per-core busy spans as an ASCII Paraver-like timeline
+/// (Figure 13/15 style): one row per core, `#` = task, `m` = manager work,
+/// `c` = creator, ` ` = idle.
+pub fn ascii_timeline(trace: &SimTrace, width: usize) -> String {
+    let t1 = trace
+        .spans
+        .iter()
+        .flat_map(|s| s.iter().map(|&(_, e, _)| e))
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let mut out = String::new();
+    for (core, spans) in trace.spans.iter().enumerate() {
+        let mut row = vec![' '; width];
+        for &(s, e, label) in spans {
+            let b0 = (s as u128 * (width as u128 - 1) / t1 as u128) as usize;
+            let b1 = (e as u128 * (width as u128 - 1) / t1 as u128) as usize;
+            let ch = match label {
+                "mgr" => 'm',
+                "creator" => 'c',
+                _ => '#',
+            };
+            for slot in row.iter_mut().take(b1 + 1).skip(b0) {
+                *slot = ch;
+            }
+        }
+        out.push_str(&format!("{core:>3} |"));
+        out.extend(row);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_table_format() {
+        let s = vec![
+            Series { label: "Nanos++".into(), points: vec![(1, 1.0), (2, 1.9)] },
+            Series { label: "DDAST".into(), points: vec![(1, 1.0), (2, 2.0)] },
+        ];
+        let t = speedup_table("Fig X", &s);
+        assert!(t.contains("Fig X"));
+        assert!(t.contains("Nanos++"));
+        assert!(t.contains("1.90"));
+        assert_eq!(t.lines().count(), 4);
+    }
+
+    #[test]
+    fn ascii_series_renders() {
+        let series: Vec<(u64, u64)> = (0..100).map(|i| (i * 1000, i % 17)).collect();
+        let p = ascii_series("ready", &series, 40, 8);
+        assert_eq!(p.lines().count(), 9);
+        assert!(p.contains('#'));
+    }
+
+    #[test]
+    fn ascii_series_empty() {
+        assert!(ascii_series("x", &[], 10, 4).contains("<empty>"));
+    }
+
+    #[test]
+    fn timeline_renders_labels() {
+        let tr = SimTrace {
+            in_graph: vec![],
+            ready: vec![],
+            spans: vec![
+                vec![(0, 500, "matmul_block"), (600, 900, "mgr")],
+                vec![(100, 800, "creator")],
+            ],
+        };
+        let t = ascii_timeline(&tr, 60);
+        assert!(t.contains('#') && t.contains('m') && t.contains('c'));
+        assert_eq!(t.lines().count(), 2);
+    }
+}

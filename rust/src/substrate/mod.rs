@@ -1,0 +1,22 @@
+//! Low-level building blocks shared by the real runtime and the simulator.
+//!
+//! These are the "substrates" the paper's system depends on: the per-worker
+//! single-producer queues the messages travel through (§3.1), the spin locks
+//! that guard dependence domains in the baseline runtime (§2.2.1), the
+//! region keys dependence tracking hashes on, deterministic RNG for
+//! reproducible stealing/workload generation, virtual-time newtypes for the
+//! discrete-event simulator and cheap atomic statistics.
+
+pub mod spsc;
+pub mod spinlock;
+pub mod region;
+pub mod rng;
+pub mod vtime;
+pub mod stats;
+
+pub use region::{RegionKey, RegionSet};
+pub use rng::XorShift64;
+pub use spinlock::{SpinLock, SpinLockGuard};
+pub use spsc::{ConsumerGuard, SpscQueue};
+pub use stats::{Counter, Histogram};
+pub use vtime::{SimDuration, SimTime};

@@ -1,0 +1,196 @@
+//! Run a [`TaskGraphSpec`] on the *real* threaded runtime.
+//!
+//! Bodies are synthesized from the spec's cost class (busy-spin of the
+//! scaled duration, or nothing for pure graph-overhead runs); creator tasks
+//! spawn their children and `taskwait` exactly like the N-Body benchmark's
+//! top-level tasks. An [`ExecutionLog`] with global start/end sequence
+//! numbers per task is returned — the serial-equivalence property tests
+//! check every dependence edge against it (DESIGN.md invariant #1).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::TaskSystem;
+use crate::workloads::spec::{CostClass, TaskGraphSpec};
+
+/// Per-task observation: global sequence numbers at body start/end.
+/// `u64::MAX` = never ran.
+#[derive(Debug)]
+pub struct ExecutionLog {
+    pub start: Vec<AtomicU64>,
+    pub end: Vec<AtomicU64>,
+    clock: AtomicU64,
+}
+
+impl ExecutionLog {
+    fn new(n: usize) -> Arc<Self> {
+        Arc::new(ExecutionLog {
+            start: (0..n).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            end: (0..n).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            clock: AtomicU64::new(0),
+        })
+    }
+
+    #[inline]
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Did every task run exactly once (start and end recorded)?
+    pub fn all_ran(&self) -> bool {
+        self.start.iter().all(|s| s.load(Ordering::SeqCst) != u64::MAX)
+            && self.end.iter().all(|e| e.load(Ordering::SeqCst) != u64::MAX)
+    }
+
+    /// Check every (pred, succ) edge: pred must *end* before succ *starts*.
+    /// Returns the violating edges.
+    pub fn dependence_violations(&self, preds: &[Vec<usize>]) -> Vec<(usize, usize)> {
+        let mut bad = Vec::new();
+        for (succ, ps) in preds.iter().enumerate() {
+            let s_start = self.start[succ].load(Ordering::SeqCst);
+            for &p in ps {
+                let p_end = self.end[p].load(Ordering::SeqCst);
+                if !(p_end < s_start) {
+                    bad.push((p, succ));
+                }
+            }
+        }
+        bad
+    }
+}
+
+/// Execution options.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOptions {
+    /// Nanoseconds of busy-spin per flop (0 = skip compute, pure overhead
+    /// measurement). 1 Gflop/s/core ⇒ 1.0; this box ≈ 0.25 for f32 scalar.
+    pub ns_per_flop: f64,
+    /// Cap on any single task's spin (keeps tests fast).
+    pub max_task_ns: u64,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { ns_per_flop: 0.0, max_task_ns: 50_000 }
+    }
+}
+
+#[inline]
+fn spin_for(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let start = std::time::Instant::now();
+    while (start.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+fn task_ns(cost: &CostClass, opt: &ExecOptions) -> u64 {
+    let ns = match cost {
+        CostClass::Flops(f) | CostClass::Creator(f) => (f * opt.ns_per_flop) as u64,
+        CostClass::FixedNs(ns) => *ns,
+    };
+    ns.min(opt.max_task_ns)
+}
+
+fn spawn_task(ts: &TaskSystem, spec: &Arc<TaskGraphSpec>, log: &Arc<ExecutionLog>, id: usize, opt: ExecOptions) {
+    let t = &spec.tasks[id];
+    let ts2 = ts.clone();
+    let spec2 = Arc::clone(spec);
+    let log2 = Arc::clone(log);
+    let ns = task_ns(&t.cost, &opt);
+    let children = t.children.clone();
+    ts.spawn_full(t.deps.clone(), t.label, move || {
+        log2.start[id].store(log2.tick(), Ordering::SeqCst);
+        spin_for(ns);
+        if !children.is_empty() {
+            for c in &children {
+                spawn_task(&ts2, &spec2, &log2, *c, opt);
+            }
+            // The creator waits for its children (N-Body's inner taskwait):
+            // its own dependences are released only afterwards.
+            ts2.taskwait();
+        }
+        log2.end[id].store(log2.tick(), Ordering::SeqCst);
+    });
+}
+
+/// Execute `spec` to completion on `ts`. Returns the execution log.
+pub fn run_spec(ts: &TaskSystem, spec: &Arc<TaskGraphSpec>, opt: ExecOptions) -> Arc<ExecutionLog> {
+    let log = ExecutionLog::new(spec.tasks.len());
+    for id in spec.top_level() {
+        spawn_task(ts, spec, &log, id, opt);
+    }
+    ts.taskwait();
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RuntimeKind;
+    use crate::workloads::synthetic;
+
+    fn run(kind: RuntimeKind, spec: TaskGraphSpec, threads: usize) {
+        let spec = Arc::new(spec);
+        let ts = TaskSystem::builder().kind(kind).num_threads(threads).build();
+        let log = run_spec(&ts, &spec, ExecOptions::default());
+        ts.shutdown();
+        assert!(log.all_ran(), "{}: not all tasks ran", spec.name);
+        let preds = spec.predecessor_edges();
+        let bad = log.dependence_violations(&preds);
+        assert!(bad.is_empty(), "{}: violations {bad:?}", spec.name);
+    }
+
+    #[test]
+    fn chain_respects_order_all_kinds() {
+        for kind in [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::GompLike] {
+            run(kind, synthetic::chain(50, 0), 2);
+        }
+    }
+
+    #[test]
+    fn diamonds_all_kinds() {
+        for kind in [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::GompLike] {
+            run(kind, synthetic::diamonds(8, 5, 0), 3);
+        }
+    }
+
+    #[test]
+    fn random_dags_ddast() {
+        for seed in 1..=5 {
+            run(RuntimeKind::Ddast, synthetic::random_dag(200, 13, seed), 4);
+        }
+    }
+
+    #[test]
+    fn nested_creators() {
+        for kind in [RuntimeKind::Sync, RuntimeKind::Ddast] {
+            run(kind, synthetic::nested(4, 10, 0), 2);
+        }
+    }
+
+    #[test]
+    fn small_matmul_executes_correct_order() {
+        let p = crate::workloads::matmul::MatmulParams { ms: 512, bs: 128 };
+        run(RuntimeKind::Ddast, crate::workloads::matmul::generate(p), 4);
+    }
+
+    #[test]
+    fn small_sparselu_executes_correct_order() {
+        let p = crate::workloads::sparselu::SparseLuParams { ms: 512, bs: 64 };
+        run(RuntimeKind::Ddast, crate::workloads::sparselu::generate(p), 4);
+    }
+
+    #[test]
+    fn small_nbody_nested_executes() {
+        let p = crate::workloads::nbody::NBodyParams {
+            num_particles: 512,
+            timesteps: 3,
+            bs: 128,
+        };
+        run(RuntimeKind::Ddast, crate::workloads::nbody::generate(p), 4);
+        run(RuntimeKind::Sync, crate::workloads::nbody::generate(p), 2);
+    }
+}

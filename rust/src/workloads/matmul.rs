@@ -1,0 +1,126 @@
+//! Blocked Matrix Multiply workload (paper §4.2.1, Table 2).
+//!
+//! `C[i][j] += A[i][k] * B[k][j]` over `nb = MS/BS` blocks per dimension:
+//! `nb³` tasks in several independent chains — one chain per output block
+//! (all tasks with the same `C[i][j]` form an `inout` chain; different
+//! output blocks are independent). Matches the paper's task counts:
+//! KNL CG (8192/512) → 4 096 tasks, FG (8192/256) → 32 768, ThunderX
+//! (4096/128) → 32 768, FG (4096/64) → 262 144.
+
+use crate::coordinator::dep::{DepMode, Dependence};
+use crate::substrate::region::block_addr;
+use crate::substrate::RegionKey;
+use crate::workloads::spec::{CostClass, TaskGraphSpec, TaskSpec};
+
+/// Matrix ids for region keys.
+const MAT_A: u8 = 0;
+const MAT_B: u8 = 1;
+const MAT_C: u8 = 2;
+
+/// Table 2 arguments.
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulParams {
+    /// Matrix dimension (elements).
+    pub ms: usize,
+    /// Block dimension (elements).
+    pub bs: usize,
+}
+
+impl MatmulParams {
+    pub fn blocks(&self) -> usize {
+        assert!(self.ms % self.bs == 0, "MS must be a multiple of BS");
+        self.ms / self.bs
+    }
+
+    /// Flops of one block GEMM task (C += A·B on BS×BS blocks).
+    pub fn flops_per_task(&self) -> f64 {
+        2.0 * (self.bs as f64).powi(3)
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.blocks().pow(3)
+    }
+}
+
+/// Generate the task graph.
+pub fn generate(p: MatmulParams) -> TaskGraphSpec {
+    let nb = p.blocks();
+    let flops = p.flops_per_task();
+    let mut tasks = Vec::with_capacity(nb * nb * nb);
+    // Loop order (i, j, k): the k-chains per output block are created
+    // back-to-back, the regular pattern the paper describes.
+    for i in 0..nb as u64 {
+        for j in 0..nb as u64 {
+            for k in 0..nb as u64 {
+                let deps = vec![
+                    Dependence::new(RegionKey::addr(block_addr(MAT_A, i, k)), DepMode::In),
+                    Dependence::new(RegionKey::addr(block_addr(MAT_B, k, j)), DepMode::In),
+                    Dependence::new(RegionKey::addr(block_addr(MAT_C, i, j)), DepMode::Inout),
+                ];
+                tasks.push(TaskSpec {
+                    id: tasks.len(),
+                    label: "matmul_block",
+                    deps,
+                    cost: CostClass::Flops(flops),
+                    children: vec![],
+                });
+            }
+        }
+    }
+    let total = flops * tasks.len() as f64;
+    TaskGraphSpec { name: format!("matmul-ms{}-bs{}", p.ms, p.bs), tasks, total_flops: total }
+}
+
+/// Paper presets (Table 2). `coarse == true` selects the CG column.
+pub fn table2_params(machine: &str, coarse: bool) -> MatmulParams {
+    match (machine, coarse) {
+        ("knl", true) => MatmulParams { ms: 8192, bs: 512 },
+        ("knl", false) => MatmulParams { ms: 8192, bs: 256 },
+        ("thunderx", true) => MatmulParams { ms: 4096, bs: 128 },
+        ("thunderx", false) => MatmulParams { ms: 4096, bs: 64 },
+        // Power8+ and Power9 share a row in Table 2.
+        ("power8" | "power9", true) => MatmulParams { ms: 8192, bs: 512 },
+        ("power8" | "power9", false) => MatmulParams { ms: 8192, bs: 256 },
+        _ => panic!("unknown machine {machine}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_counts_match_table2() {
+        assert_eq!(generate(table2_params("knl", true)).num_tasks(), 4_096);
+        assert_eq!(generate(table2_params("knl", false)).num_tasks(), 32_768);
+        assert_eq!(generate(table2_params("thunderx", true)).num_tasks(), 32_768);
+        assert_eq!(table2_params("thunderx", false).num_tasks(), 262_144);
+        assert_eq!(generate(table2_params("power9", true)).num_tasks(), 4_096);
+    }
+
+    #[test]
+    fn spec_validates() {
+        let s = generate(MatmulParams { ms: 512, bs: 128 });
+        assert!(s.validate().is_ok());
+        assert_eq!(s.num_tasks(), 64);
+    }
+
+    #[test]
+    fn chains_per_output_block() {
+        // With nb=2: tasks on C[0][0] are ids 0 and 1 (k=0,1) and must chain.
+        let s = generate(MatmulParams { ms: 256, bs: 128 });
+        let preds = s.predecessor_edges();
+        assert!(preds[0].is_empty());
+        assert_eq!(preds[1], vec![0], "k-chain on same output block");
+        // First task of the next output block is independent.
+        assert!(preds[2].is_empty());
+    }
+
+    #[test]
+    fn total_flops_matches_dense_gemm() {
+        let p = MatmulParams { ms: 1024, bs: 256 };
+        let s = generate(p);
+        let expect = 2.0 * 1024f64.powi(3);
+        assert!((s.total_flops - expect).abs() / expect < 1e-12);
+    }
+}

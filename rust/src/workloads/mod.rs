@@ -1,0 +1,15 @@
+//! Benchmark workload generators (paper §4.2, Tables 2–4) and the executor
+//! that runs them on the real runtime. The same specs feed the simulator.
+
+pub mod executor;
+pub mod matmul;
+pub mod nbody;
+pub mod sparselu;
+pub mod spec;
+pub mod synthetic;
+
+pub use executor::{run_spec, ExecOptions, ExecutionLog};
+pub use spec::{CostClass, TaskGraphSpec, TaskSpec};
+
+/// The machines of Table 1 by canonical name.
+pub const MACHINES: [&str; 4] = ["knl", "thunderx", "power8", "power9"];

@@ -1,0 +1,190 @@
+//! N-Body workload (paper §4.2.2, Table 3) — the *nested tasks* benchmark.
+//!
+//! Particles are grouped in blocks of `BS`. Each timestep consists of:
+//!
+//! * one top-level **creator** task `calc_forces(t)` whose body creates
+//!   `nb²` child `force(i, j)` tasks (block i receives force contributions
+//!   from block j) and taskwaits on them;
+//! * one top-level `update(t)` task integrating the particles.
+//!
+//! Total: `timesteps × (nb² + 2)` tasks — exactly the Table 3 counts
+//! (KNL/ThunderX CG: 16 × (128² + 2) = 262 176; FG: 16 × (256² + 2) =
+//! 1 048 608; Power CG: 16 × (64² + 2) = 65 568).
+//!
+//! The nesting is what makes this benchmark hard for DDAST (§4.2.2): the
+//! creator's Submit Task Messages gate all the parallelism of the timestep,
+//! and task creation throughput becomes the bottleneck at fine grain
+//! (§6.1's Fig 11 discussion).
+
+use crate::coordinator::dep::{DepMode, Dependence};
+use crate::substrate::region::block_addr;
+use crate::substrate::RegionKey;
+use crate::workloads::spec::{CostClass, TaskGraphSpec, TaskSpec};
+
+/// Region-key matrix ids: particle positions (per block) and forces
+/// (per block).
+const POS: u8 = 4;
+const FRC: u8 = 5;
+
+/// Table 3 arguments.
+#[derive(Clone, Copy, Debug)]
+pub struct NBodyParams {
+    pub num_particles: usize,
+    pub timesteps: usize,
+    pub bs: usize,
+}
+
+impl NBodyParams {
+    pub fn blocks(&self) -> usize {
+        assert!(self.num_particles % self.bs == 0);
+        self.num_particles / self.bs
+    }
+
+    /// Pairwise force kernel cost for one (i, j) block pair, in
+    /// *GEMM-normalized* flops: BS² interactions × ~20 flops each (softened
+    /// gravity), scaled ×6 because the scalar/divide-heavy force kernel
+    /// sustains ~1/6 of the machines' GEMM rate (the simulator and the
+    /// sequential-time denominator both use GEMM-rate normalization, so
+    /// speedups are internally consistent).
+    pub fn force_task_flops(&self) -> f64 {
+        6.0 * 20.0 * (self.bs as f64) * (self.bs as f64)
+    }
+
+    /// Integration cost for the whole particle set (same normalization).
+    pub fn update_task_flops(&self) -> f64 {
+        6.0 * 12.0 * self.num_particles as f64
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.timesteps * (self.blocks() * self.blocks() + 2)
+    }
+}
+
+pub fn generate(p: NBodyParams) -> TaskGraphSpec {
+    let nb = p.blocks();
+    let mut tasks: Vec<TaskSpec> = Vec::new();
+    let mut total = 0.0f64;
+    let pos = |i: usize| RegionKey::addr(block_addr(POS, i as u64, 0));
+    let frc = |i: usize| RegionKey::addr(block_addr(FRC, i as u64, 0));
+
+    for _t in 0..p.timesteps {
+        // Creator: reads all positions, (re)writes all forces. Its children
+        // are the nb² force tasks (filled below).
+        let creator_id = tasks.len();
+        let mut creator_deps = Vec::with_capacity(2 * nb);
+        for b in 0..nb {
+            creator_deps.push(Dependence::new(pos(b), DepMode::In));
+            creator_deps.push(Dependence::new(frc(b), DepMode::Out));
+        }
+        tasks.push(TaskSpec {
+            id: creator_id,
+            label: "calc_forces",
+            deps: creator_deps,
+            cost: CostClass::Creator(0.0),
+            children: Vec::with_capacity(nb * nb),
+        });
+        // Children: force(i, j) accumulates contributions of block j on
+        // block i. Siblings within the creator's domain; the inout on
+        // frc(i) chains the j-contributions per target block.
+        for i in 0..nb {
+            for j in 0..nb {
+                let id = tasks.len();
+                total += p.force_task_flops();
+                tasks.push(TaskSpec {
+                    id,
+                    label: "force",
+                    deps: vec![
+                        Dependence::new(pos(i), DepMode::In),
+                        Dependence::new(pos(j), DepMode::In),
+                        Dependence::new(frc(i), DepMode::Inout),
+                    ],
+                    cost: CostClass::Flops(p.force_task_flops()),
+                    children: vec![],
+                });
+                tasks[creator_id].children.push(id);
+            }
+        }
+        // Update: integrates positions from forces — one task, as in the
+        // BAR benchmark's outer level.
+        let id = tasks.len();
+        let mut update_deps = Vec::with_capacity(2 * nb);
+        for b in 0..nb {
+            update_deps.push(Dependence::new(frc(b), DepMode::In));
+            update_deps.push(Dependence::new(pos(b), DepMode::Inout));
+        }
+        total += p.update_task_flops();
+        tasks.push(TaskSpec {
+            id,
+            label: "update",
+            deps: update_deps,
+            cost: CostClass::Flops(p.update_task_flops()),
+            children: vec![],
+        });
+    }
+    TaskGraphSpec {
+        name: format!("nbody-n{}-ts{}-bs{}", p.num_particles, p.timesteps, p.bs),
+        tasks,
+        total_flops: total,
+    }
+}
+
+/// Paper presets (Table 3).
+pub fn table3_params(machine: &str, coarse: bool) -> NBodyParams {
+    let bs = match (machine, coarse) {
+        ("knl" | "thunderx", true) => 128,
+        ("knl" | "thunderx", false) => 64,
+        ("power8" | "power9", true) => 256,
+        ("power8" | "power9", false) => 128,
+        _ => panic!("unknown machine {machine}"),
+    };
+    NBodyParams { num_particles: 16_384, timesteps: 16, bs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_counts_match_table3() {
+        assert_eq!(table3_params("knl", true).num_tasks(), 262_176);
+        assert_eq!(table3_params("knl", false).num_tasks(), 1_048_608);
+        assert_eq!(table3_params("power9", true).num_tasks(), 65_568);
+        assert_eq!(table3_params("power9", false).num_tasks(), 262_176);
+        let s = generate(NBodyParams { num_particles: 1024, timesteps: 2, bs: 256 });
+        assert_eq!(s.num_tasks(), 2 * (16 + 2));
+    }
+
+    #[test]
+    fn spec_validates_and_nests() {
+        let s = generate(NBodyParams { num_particles: 512, timesteps: 2, bs: 128 });
+        assert!(s.validate().is_ok());
+        // Top level: creator + update per timestep.
+        assert_eq!(s.top_level().len(), 4);
+        let creators: Vec<_> = s.tasks.iter().filter(|t| t.label == "calc_forces").collect();
+        assert_eq!(creators.len(), 2);
+        assert_eq!(creators[0].children.len(), 16);
+    }
+
+    #[test]
+    fn timesteps_chain_through_positions() {
+        let s = generate(NBodyParams { num_particles: 256, timesteps: 2, bs: 128 });
+        let preds = s.predecessor_edges();
+        let top = s.top_level();
+        // top = [c0, u0, c1, u1]; c1 must depend on u0 (positions).
+        let (u0, c1) = (top[1], top[2]);
+        assert!(preds[c1].contains(&u0), "creator t+1 waits for update t");
+        // update t depends on creator t (forces out).
+        assert!(preds[top[1]].contains(&top[0]));
+    }
+
+    #[test]
+    fn force_tasks_chain_per_target_block() {
+        let s = generate(NBodyParams { num_particles: 256, timesteps: 1, bs: 128 });
+        let preds = s.predecessor_edges();
+        // Children of creator 0: ids 1..=4 (2 blocks -> 4 force tasks).
+        // force(0,0)=1, force(0,1)=2 share frc(0): 2 depends on 1.
+        assert!(preds[2].contains(&1));
+        // force(1,0)=3 targets frc(1): independent of 1 and 2.
+        assert!(!preds[3].contains(&1) && !preds[3].contains(&2));
+    }
+}

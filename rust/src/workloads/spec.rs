@@ -1,0 +1,238 @@
+//! Portable task-graph descriptions.
+//!
+//! A [`TaskGraphSpec`] captures a benchmark run as data: every task with its
+//! dependences, cost class and (for N-Body) nesting structure. The same spec
+//! drives the *real* runtime (bodies synthesized from the cost, or real PJRT
+//! compute) and the *simulator* (costs consumed as virtual time), so the two
+//! substrates execute identical graphs — DESIGN.md invariant #6.
+
+use crate::coordinator::dep::Dependence;
+
+/// Cost class of a task — resolved to wall/virtual time by the executor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CostClass {
+    /// Leaf compute of `flops` floating point operations (e.g. one block
+    /// GEMM). The simulator divides by the machine's per-core flop rate;
+    /// the real runtime either spins for a calibrated duration or invokes
+    /// the PJRT artifact.
+    Flops(f64),
+    /// Fixed duration in nanoseconds (creation-dominated workloads).
+    FixedNs(u64),
+    /// A *creator* task: its body spawns the tasks in `children` of the
+    /// owning spec (N-Body's nested top-level tasks). The f64 is the
+    /// creator's own compute in flops.
+    Creator(f64),
+}
+
+/// One task in a spec.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    /// Index into [`TaskGraphSpec::tasks`].
+    pub id: usize,
+    pub label: &'static str,
+    pub deps: Vec<Dependence>,
+    pub cost: CostClass,
+    /// For `CostClass::Creator`: ids of the child tasks this task spawns
+    /// when it runs. Empty otherwise.
+    pub children: Vec<usize>,
+}
+
+/// A whole benchmark instance.
+#[derive(Clone, Debug)]
+pub struct TaskGraphSpec {
+    pub name: String,
+    /// All tasks. Tasks *not* listed in any `children` vector are
+    /// *top-level*: created by the main thread in `tasks` order (the
+    /// program order the submit queues must preserve).
+    pub tasks: Vec<TaskSpec>,
+    /// Total useful flops (for speedup-vs-sequential accounting).
+    pub total_flops: f64,
+}
+
+impl TaskGraphSpec {
+    /// Ids of top-level tasks in creation order.
+    pub fn top_level(&self) -> Vec<usize> {
+        let mut is_child = vec![false; self.tasks.len()];
+        for t in &self.tasks {
+            for &c in &t.children {
+                is_child[c] = true;
+            }
+        }
+        (0..self.tasks.len()).filter(|&i| !is_child[i]).collect()
+    }
+
+    /// Validate internal consistency (ids, children, dep sanity).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.id != i {
+                return Err(format!("task {i} has id {}", t.id));
+            }
+            for &c in &t.children {
+                if c >= self.tasks.len() {
+                    return Err(format!("task {i} child {c} out of range"));
+                }
+                if c == i {
+                    return Err(format!("task {i} is its own child"));
+                }
+            }
+            if matches!(t.cost, CostClass::Creator(_)) != !t.children.is_empty() {
+                return Err(format!(
+                    "task {i}: Creator cost class iff non-empty children"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Sequential execution time at `flops_per_sec`, in seconds — the
+    /// "speedup over the sequential version" denominator of Figures 9–11.
+    pub fn sequential_seconds(&self, flops_per_sec: f64) -> f64 {
+        let mut fixed_ns = 0u64;
+        for t in &self.tasks {
+            if let CostClass::FixedNs(ns) = t.cost {
+                fixed_ns += ns;
+            }
+        }
+        self.total_flops / flops_per_sec + fixed_ns as f64 * 1e-9
+    }
+
+    /// Build the explicit predecessor lists implied by the dependences,
+    /// replaying submission in program order (top-level order, with
+    /// children inserted where their creator would spawn them). Used by
+    /// the simulator and by the serial-equivalence property tests.
+    pub fn predecessor_edges(&self) -> Vec<Vec<usize>> {
+        use crate::coordinator::depgraph::DepDomain;
+        use crate::coordinator::wd::{TaskId, Wd, WdState};
+        use std::collections::HashMap;
+        use std::sync::{Arc, Weak};
+
+        // Replay the exact graph algorithm with inert bodies, then read the
+        // edges back from the successor lists. Nested tasks are submitted
+        // into their parent's domain in a correct program order
+        // approximation: creator first, then its children immediately
+        // (depth-first), which matches how the real run submits when the
+        // creator executes before later top-level tasks are created.
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); self.tasks.len()];
+        // domain per "parent scope": top-level scope = usize::MAX.
+        let mut domains: HashMap<usize, DepDomain> = HashMap::new();
+        let mut wds: Vec<Option<Arc<Wd>>> = vec![None; self.tasks.len()];
+        let mut order: Vec<(usize, usize)> = Vec::new(); // (scope, task)
+        for &t in &self.top_level() {
+            order.push((usize::MAX, t));
+            // Depth-first insertion of nested children.
+            let mut stack = vec![t];
+            while let Some(c) = stack.pop() {
+                for &ch in &self.tasks[c].children {
+                    order.push((c, ch));
+                    stack.push(ch);
+                }
+            }
+        }
+        for &(scope, tid) in &order {
+            let spec = &self.tasks[tid];
+            let wd = Wd::new(
+                TaskId(tid as u64 + 1),
+                spec.deps.clone(),
+                spec.label,
+                Weak::new(),
+                Box::new(|| {}),
+            );
+            let domain = domains.entry(scope).or_default();
+            domain.submit(&wd);
+            wds[tid] = Some(wd);
+        }
+        // Read back edges: successor lists live on the predecessor side.
+        for (tid, wd) in wds.iter().enumerate() {
+            let wd = wd.as_ref().unwrap();
+            for succ in wd.successors.lock().iter() {
+                preds[succ.id.0 as usize - 1].push(tid);
+            }
+        }
+        // Leave the replay WDs in a consistent state (they are dropped).
+        for wd in wds.into_iter().flatten() {
+            wd.set_state(WdState::Ready);
+        }
+        preds
+    }
+
+    /// Count of tasks (paper's "#Tasks" column in Tables 2–4 counts every
+    /// created task, including creators).
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dep::{dep_in, dep_out};
+
+    fn tiny() -> TaskGraphSpec {
+        TaskGraphSpec {
+            name: "tiny".into(),
+            tasks: vec![
+                TaskSpec {
+                    id: 0,
+                    label: "a",
+                    deps: vec![dep_out(1)],
+                    cost: CostClass::Flops(1.0),
+                    children: vec![],
+                },
+                TaskSpec {
+                    id: 1,
+                    label: "b",
+                    deps: vec![dep_in(1), dep_out(2)],
+                    cost: CostClass::Flops(1.0),
+                    children: vec![],
+                },
+                TaskSpec {
+                    id: 2,
+                    label: "c",
+                    deps: vec![dep_in(2)],
+                    cost: CostClass::Flops(1.0),
+                    children: vec![],
+                },
+            ],
+            total_flops: 3.0,
+        }
+    }
+
+    #[test]
+    fn validate_ok_and_top_level() {
+        let s = tiny();
+        assert!(s.validate().is_ok());
+        assert_eq!(s.top_level(), vec![0, 1, 2]);
+        assert_eq!(s.num_tasks(), 3);
+    }
+
+    #[test]
+    fn predecessor_edges_chain() {
+        let s = tiny();
+        let p = s.predecessor_edges();
+        assert!(p[0].is_empty());
+        assert_eq!(p[1], vec![0]);
+        assert_eq!(p[2], vec![1]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_ids() {
+        let mut s = tiny();
+        s.tasks[1].id = 5;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_creator_mismatch() {
+        let mut s = tiny();
+        s.tasks[0].children = vec![1];
+        assert!(s.validate().is_err(), "children require Creator class");
+        s.tasks[0].cost = CostClass::Creator(0.0);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn sequential_time() {
+        let s = tiny();
+        assert!((s.sequential_seconds(3.0) - 1.0).abs() < 1e-12);
+    }
+}

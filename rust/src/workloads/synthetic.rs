@@ -1,0 +1,198 @@
+//! Synthetic task graphs for tests, microbenches and property checks:
+//! chains, independent fans, diamonds, and seeded random DAGs.
+
+use crate::coordinator::dep::{DepMode, Dependence};
+use crate::substrate::{RegionKey, XorShift64};
+use crate::workloads::spec::{CostClass, TaskGraphSpec, TaskSpec};
+
+/// One dependent chain of `n` tasks (worst case for parallelism, best case
+/// for graph-op locality).
+pub fn chain(n: usize, cost_ns: u64) -> TaskGraphSpec {
+    let tasks = (0..n)
+        .map(|i| TaskSpec {
+            id: i,
+            label: "chain",
+            deps: vec![Dependence::new(RegionKey::addr(0xC0), DepMode::Inout)],
+            cost: CostClass::FixedNs(cost_ns),
+            children: vec![],
+        })
+        .collect();
+    TaskGraphSpec { name: format!("chain-{n}"), tasks, total_flops: 0.0 }
+}
+
+/// `n` fully independent tasks (best case for parallelism, maximal
+/// submit-queue pressure).
+pub fn independent(n: usize, cost_ns: u64) -> TaskGraphSpec {
+    let tasks = (0..n)
+        .map(|i| TaskSpec {
+            id: i,
+            label: "indep",
+            deps: vec![Dependence::new(RegionKey::addr(0x1000 + i as u64), DepMode::Out)],
+            cost: CostClass::FixedNs(cost_ns),
+            children: vec![],
+        })
+        .collect();
+    TaskGraphSpec { name: format!("indep-{n}"), tasks, total_flops: 0.0 }
+}
+
+/// Diamonds: `w` parallel chains between a fork and a join, repeated
+/// `reps` times. Exercises fan-out/fan-in edges.
+pub fn diamonds(w: usize, reps: usize, cost_ns: u64) -> TaskGraphSpec {
+    let mut tasks: Vec<TaskSpec> = Vec::new();
+    let join_key = |r: usize| RegionKey::addr(0xD000 + r as u64);
+    let mid_key = |r: usize, i: usize| RegionKey::addr(0xE000 + (r * w + i) as u64);
+    for r in 0..reps {
+        // Fork task writes all mid keys.
+        let mut fork_deps: Vec<Dependence> =
+            (0..w).map(|i| Dependence::new(mid_key(r, i), DepMode::Out)).collect();
+        if r > 0 {
+            fork_deps.push(Dependence::new(join_key(r - 1), DepMode::In));
+        }
+        tasks.push(TaskSpec {
+            id: tasks.len(),
+            label: "fork",
+            deps: fork_deps,
+            cost: CostClass::FixedNs(cost_ns),
+            children: vec![],
+        });
+        // Middle tasks.
+        for i in 0..w {
+            tasks.push(TaskSpec {
+                id: tasks.len(),
+                label: "mid",
+                deps: vec![Dependence::new(mid_key(r, i), DepMode::Inout)],
+                cost: CostClass::FixedNs(cost_ns),
+                children: vec![],
+            });
+        }
+        // Join task reads all mid keys, writes the join key.
+        let mut join_deps: Vec<Dependence> =
+            (0..w).map(|i| Dependence::new(mid_key(r, i), DepMode::In)).collect();
+        join_deps.push(Dependence::new(join_key(r), DepMode::Out));
+        tasks.push(TaskSpec {
+            id: tasks.len(),
+            label: "join",
+            deps: join_deps,
+            cost: CostClass::FixedNs(cost_ns),
+            children: vec![],
+        });
+    }
+    TaskGraphSpec { name: format!("diamonds-{w}x{reps}"), tasks, total_flops: 0.0 }
+}
+
+/// Seeded random DAG over `n` tasks and `regions` region keys. Each task
+/// takes 1..=3 dependences with random modes — adversarial input for the
+/// serial-equivalence property tests.
+pub fn random_dag(n: usize, regions: u64, seed: u64) -> TaskGraphSpec {
+    let mut rng = XorShift64::new(seed);
+    let tasks = (0..n)
+        .map(|i| {
+            let ndeps = 1 + rng.next_below(3) as usize;
+            let mut deps = Vec::with_capacity(ndeps);
+            let mut used = Vec::new();
+            for _ in 0..ndeps {
+                let r = rng.next_below(regions.max(1));
+                if used.contains(&r) {
+                    continue;
+                }
+                used.push(r);
+                let mode = match rng.next_below(3) {
+                    0 => DepMode::In,
+                    1 => DepMode::Out,
+                    _ => DepMode::Inout,
+                };
+                deps.push(Dependence::new(RegionKey::addr(0xF000 + r), mode));
+            }
+            TaskSpec {
+                id: i,
+                label: "rand",
+                deps,
+                cost: CostClass::FixedNs(rng.next_below(2_000)),
+                children: vec![],
+            }
+        })
+        .collect();
+    TaskGraphSpec { name: format!("random-{n}-s{seed}"), tasks, total_flops: 0.0 }
+}
+
+/// Two-level nested graph: `outer` creators each spawning `inner`
+/// independent children (N-Body-shaped, for nesting tests).
+pub fn nested(outer: usize, inner: usize, cost_ns: u64) -> TaskGraphSpec {
+    let mut tasks: Vec<TaskSpec> = Vec::new();
+    for o in 0..outer {
+        let creator_id = tasks.len();
+        tasks.push(TaskSpec {
+            id: creator_id,
+            label: "creator",
+            deps: vec![Dependence::new(RegionKey::addr(0xAB00 + o as u64), DepMode::Out)],
+            cost: CostClass::Creator(0.0),
+            children: Vec::with_capacity(inner),
+        });
+        for i in 0..inner {
+            let id = tasks.len();
+            tasks.push(TaskSpec {
+                id,
+                label: "leaf",
+                deps: vec![Dependence::new(
+                    RegionKey::addr(0xBC00 + (o * inner + i) as u64),
+                    DepMode::Out,
+                )],
+                cost: CostClass::FixedNs(cost_ns),
+                children: vec![],
+            });
+            tasks[creator_id].children.push(id);
+        }
+    }
+    TaskGraphSpec { name: format!("nested-{outer}x{inner}"), tasks, total_flops: 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_is_a_chain() {
+        let s = chain(10, 100);
+        assert!(s.validate().is_ok());
+        let p = s.predecessor_edges();
+        for i in 1..10 {
+            assert_eq!(p[i], vec![i - 1]);
+        }
+    }
+
+    #[test]
+    fn independent_has_no_edges() {
+        let s = independent(50, 100);
+        assert!(s.validate().is_ok());
+        assert!(s.predecessor_edges().iter().all(|p| p.is_empty()));
+    }
+
+    #[test]
+    fn diamond_fan_out_in() {
+        let s = diamonds(4, 2, 100);
+        assert!(s.validate().is_ok());
+        let p = s.predecessor_edges();
+        // join of rep 0 is task 5; it depends on the 4 mids.
+        assert_eq!(p[5].len(), 4);
+        // fork of rep 1 (task 6) depends on join of rep 0.
+        assert_eq!(p[6], vec![5]);
+    }
+
+    #[test]
+    fn random_dag_is_deterministic() {
+        let a = random_dag(100, 10, 7);
+        let b = random_dag(100, 10, 7);
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.deps, y.deps);
+        }
+        assert!(a.validate().is_ok());
+    }
+
+    #[test]
+    fn nested_structure() {
+        let s = nested(3, 5, 10);
+        assert!(s.validate().is_ok());
+        assert_eq!(s.top_level().len(), 3);
+        assert_eq!(s.num_tasks(), 3 * 6);
+    }
+}

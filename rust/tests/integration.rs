@@ -1,0 +1,374 @@
+//! Integration tests: the whole runtime stack across organizations,
+//! thread counts and workloads (DESIGN.md §6 invariants #1–#5).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use ddast::coordinator::{DdastParams, DepMode, RuntimeKind, TaskSystem, WdState};
+use ddast::workloads::{executor, matmul, nbody, sparselu, synthetic};
+
+const ALL_KINDS: [RuntimeKind; 3] =
+    [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::GompLike];
+
+fn check_spec(
+    kind: RuntimeKind,
+    threads: usize,
+    spec: ddast::workloads::TaskGraphSpec,
+) -> Arc<ddast::coordinator::RuntimeShared> {
+    let spec = Arc::new(spec);
+    let ts = TaskSystem::builder().kind(kind).num_threads(threads).build();
+    let log = executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+    let rt = ts.runtime().clone();
+    ts.shutdown();
+    assert!(log.all_ran(), "{}/{kind:?}: not all tasks ran", spec.name);
+    let violations = log.dependence_violations(&spec.predecessor_edges());
+    assert!(violations.is_empty(), "{}/{kind:?}: {violations:?}", spec.name);
+    assert!(rt.quiescent(), "{}/{kind:?}: runtime not quiescent", spec.name);
+    assert_eq!(rt.stats.tasks_created.get(), spec.num_tasks() as u64);
+    assert_eq!(rt.stats.tasks_executed.get(), spec.num_tasks() as u64);
+    rt
+}
+
+#[test]
+fn matmul_all_kinds_and_thread_counts() {
+    for kind in ALL_KINDS {
+        for threads in [1, 2, 4] {
+            check_spec(kind, threads, matmul::generate(matmul::MatmulParams { ms: 512, bs: 64 }));
+        }
+    }
+}
+
+#[test]
+fn sparselu_all_kinds() {
+    for kind in ALL_KINDS {
+        check_spec(kind, 4, sparselu::generate(sparselu::SparseLuParams { ms: 512, bs: 64 }));
+    }
+}
+
+#[test]
+fn nbody_nested_all_kinds() {
+    let p = nbody::NBodyParams { num_particles: 1024, timesteps: 3, bs: 128 };
+    for kind in ALL_KINDS {
+        check_spec(kind, 3, nbody::generate(p));
+    }
+}
+
+#[test]
+fn ddast_uses_managers_sync_does_not() {
+    let rt = check_spec(RuntimeKind::Ddast, 4, synthetic::diamonds(8, 50, 0));
+    assert!(rt.stats.mgr_activations.get() > 0);
+    assert_eq!(rt.queues.pending(), 0);
+    let rt = check_spec(RuntimeKind::Sync, 4, synthetic::diamonds(8, 50, 0));
+    assert_eq!(rt.stats.mgr_activations.get(), 0, "sync never dispatches managers");
+}
+
+#[test]
+fn max_ddast_threads_cap_is_respected() {
+    for cap in [1usize, 2] {
+        let spec = Arc::new(synthetic::independent(5_000, 0));
+        let ts = TaskSystem::builder()
+            .kind(RuntimeKind::Ddast)
+            .num_threads(4)
+            .params(DdastParams {
+                max_ddast_threads: cap,
+                max_spins: 2,
+                max_ops_thread: 4,
+                min_ready_tasks: 2,
+            })
+            .build();
+        executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+        let rt = ts.runtime().clone();
+        ts.shutdown();
+        let peak = rt.stats.mgr_peak.get();
+        assert!(peak <= cap as u64, "peak {peak} exceeded cap {cap}");
+        assert!(peak >= 1, "managers must have run");
+    }
+}
+
+#[test]
+fn taskwait_waits_for_exactly_current_children() {
+    let ts = TaskSystem::new_ddast(3);
+    let counter = Arc::new(AtomicU64::new(0));
+    let ts2 = ts.clone();
+    let c2 = Arc::clone(&counter);
+    ts.spawn(&[], move || {
+        for _ in 0..50 {
+            let c = Arc::clone(&c2);
+            ts2.spawn(&[], move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        ts2.taskwait();
+        // All 50 children of *this* task done; outer tasks may still run.
+        assert_eq!(c2.load(Ordering::SeqCst) % 1000, 50);
+        c2.fetch_add(1000, Ordering::SeqCst);
+    });
+    ts.taskwait();
+    assert_eq!(counter.load(Ordering::SeqCst), 1050);
+    ts.shutdown();
+}
+
+#[test]
+fn dependent_chain_result_equals_sequential() {
+    // A computation whose result is order-sensitive: x = (((1*2)+3)*2)+3...
+    for kind in ALL_KINDS {
+        let ts = TaskSystem::builder().kind(kind).num_threads(4).build();
+        let x = Arc::new(AtomicU64::new(1));
+        for step in 0..40 {
+            let x = Arc::clone(&x);
+            ts.spawn(&[(0xAA, DepMode::Inout)], move || {
+                let _ = x.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                    Some(if step % 2 == 0 { v * 2 } else { v + 3 })
+                });
+            });
+        }
+        ts.taskwait();
+        // Sequential reference.
+        let mut want = 1u64;
+        for step in 0..40 {
+            want = if step % 2 == 0 { want * 2 } else { want + 3 };
+        }
+        assert_eq!(x.load(Ordering::SeqCst), want, "{kind:?}");
+        ts.shutdown();
+    }
+}
+
+#[test]
+fn deletion_protocol_terminal_states() {
+    let ts = TaskSystem::new_ddast(2);
+    let spec = Arc::new(synthetic::nested(3, 8, 0));
+    executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+    let rt = ts.runtime().clone();
+    ts.shutdown();
+    assert_eq!(rt.stats.tasks_outstanding.get(), 0);
+    // Root never finishes (it is the program), but it must have no live
+    // children and an empty graph.
+    assert_eq!(rt.root.children_live(), 0);
+    assert_eq!(rt.root.child_domain_opt().map_or(0, |d| d.tasks_in_graph()), 0);
+}
+
+#[test]
+fn readers_run_concurrently_after_writer() {
+    let ts = TaskSystem::new_ddast(4);
+    let writer_done = Arc::new(AtomicU64::new(0));
+    let w = Arc::clone(&writer_done);
+    ts.spawn(&[(0xBB, DepMode::Out)], move || {
+        w.store(1, Ordering::SeqCst);
+    });
+    let reads_ok = Arc::new(AtomicU64::new(0));
+    for _ in 0..20 {
+        let w = Arc::clone(&writer_done);
+        let r = Arc::clone(&reads_ok);
+        ts.spawn(&[(0xBB, DepMode::In)], move || {
+            assert_eq!(w.load(Ordering::SeqCst), 1, "reader ran before writer");
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    ts.taskwait();
+    assert_eq!(reads_ok.load(Ordering::SeqCst), 20);
+    ts.shutdown();
+}
+
+#[test]
+fn initial_vs_tuned_params_both_complete() {
+    for params in [DdastParams::initial(), DdastParams::tuned(4)] {
+        let spec = Arc::new(synthetic::random_dag(2_000, 17, 99));
+        let ts = TaskSystem::builder()
+            .kind(RuntimeKind::Ddast)
+            .num_threads(4)
+            .params(params)
+            .build();
+        let log = executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+        ts.shutdown();
+        assert!(log.all_ran());
+        assert!(log.dependence_violations(&spec.predecessor_edges()).is_empty());
+    }
+}
+
+#[test]
+fn tracing_records_consistent_task_spans() {
+    let spec = Arc::new(synthetic::independent(200, 1_000));
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(2)
+        .tracing(true)
+        .build();
+    executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+    let rt = ts.runtime().clone();
+    ts.shutdown();
+    let events = rt.tracer.as_ref().unwrap().merged();
+    let starts = events
+        .iter()
+        .filter(|e| matches!(e.kind, ddast::coordinator::TraceKind::TaskStart { .. }))
+        .count();
+    let ends = events
+        .iter()
+        .filter(|e| matches!(e.kind, ddast::coordinator::TraceKind::TaskEnd { .. }))
+        .count();
+    assert_eq!(starts, 200);
+    assert_eq!(ends, 200);
+}
+
+#[test]
+fn wd_states_progress_to_deletable() {
+    // Directly observe a WD through the life cycle (paper §2.2.1 + §3.1).
+    let ts = TaskSystem::new_sync(1);
+    let rt = ts.runtime().clone();
+    let root = Arc::clone(&rt.root);
+    let wd = rt.spawn_from(0, &root, vec![ddast::coordinator::dep_out(0xCC)], "t", Box::new(|| {}));
+    ts.taskwait();
+    assert_eq!(wd.state(), WdState::Deletable);
+    ts.shutdown();
+}
+
+#[test]
+fn central_dast_variant_runs_workloads() {
+    // The authors' earlier centralized design [7]: dedicated manager thread.
+    let rt = check_spec(
+        RuntimeKind::CentralDast,
+        3,
+        matmul::generate(matmul::MatmulParams { ms: 512, bs: 64 }),
+    );
+    assert!(rt.stats.mgr_activations.get() > 0, "the DAS thread must have drained");
+    let rt = check_spec(RuntimeKind::CentralDast, 2, synthetic::nested(4, 10, 0));
+    assert_eq!(rt.queues.pending(), 0);
+}
+
+#[test]
+fn autotuner_raises_managers_under_backlog() {
+    // Force a pathological configuration (1 manager, deep backlog) and let
+    // the §8 auto-tuner fix it.
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(4)
+        .params(DdastParams {
+            max_ddast_threads: 1,
+            max_spins: 1,
+            max_ops_thread: 2,
+            min_ready_tasks: 1,
+        })
+        .autotune(true)
+        .autotune_interval(std::time::Duration::from_micros(200))
+        .build();
+    let spec = Arc::new(synthetic::independent(50_000, 0));
+    let log = executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+    let tuner = ts.autotuner().expect("enabled").clone();
+    let rt = ts.runtime().clone();
+    ts.shutdown();
+    assert!(log.all_ran());
+    assert!(
+        tuner.raises.get() > 0,
+        "backlog of 50k messages should trigger at least one raise"
+    );
+    assert!(rt.tunables().snapshot().max_ddast_threads > 1);
+}
+
+#[test]
+fn manager_affinity_restricts_which_workers_manage() {
+    // big.LITTLE adaptation (§8): only worker 1 may become a manager.
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(3)
+        .manager_affinity(vec![1])
+        .tracing(true)
+        .build();
+    let spec = Arc::new(synthetic::independent(2_000, 0));
+    let log = executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+    let rt = ts.runtime().clone();
+    ts.shutdown();
+    assert!(log.all_ran());
+    assert!(rt.stats.mgr_activations.get() > 0);
+    // Trace must show manager states only on worker 1.
+    let managers: std::collections::HashSet<usize> = rt
+        .tracer
+        .as_ref()
+        .unwrap()
+        .merged()
+        .iter()
+        .filter_map(|e| match e.kind {
+            ddast::coordinator::TraceKind::State {
+                worker,
+                state: ddast::coordinator::ThreadState::Manager,
+                ..
+            } => Some(worker),
+            _ => None,
+        })
+        .collect();
+    assert!(!managers.is_empty());
+    assert!(managers.iter().all(|&w| w == 1), "managers on {managers:?}");
+}
+
+#[test]
+fn ranged_plugin_orders_overlapping_regions() {
+    use ddast::coordinator::Dependence;
+    use ddast::substrate::RegionKey;
+    // Writer on [0, 100), reader on [50, 150): exact-match would MISS this
+    // conflict; the ranged plugin must order them.
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(3)
+        .ranged_deps(true)
+        .build();
+    let flag = Arc::new(AtomicU64::new(0));
+    let f = Arc::clone(&flag);
+    ts.spawn_full(
+        vec![Dependence::new(RegionKey::new(0, 100), DepMode::Out)],
+        "writer",
+        move || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            f.store(1, Ordering::SeqCst);
+        },
+    );
+    let f = Arc::clone(&flag);
+    let seen = Arc::new(AtomicU64::new(0));
+    let s = Arc::clone(&seen);
+    ts.spawn_full(
+        vec![Dependence::new(RegionKey::new(50, 100), DepMode::In)],
+        "reader",
+        move || s.store(f.load(Ordering::SeqCst), Ordering::SeqCst),
+    );
+    ts.taskwait();
+    assert_eq!(seen.load(Ordering::SeqCst), 1, "overlap ordering violated");
+    ts.shutdown();
+}
+
+#[test]
+fn ranged_plugin_allows_disjoint_parallelism() {
+    use ddast::coordinator::Dependence;
+    use ddast::substrate::RegionKey;
+    let ts = TaskSystem::builder().kind(RuntimeKind::Sync).num_threads(2).ranged_deps(true).build();
+    let count = Arc::new(AtomicU64::new(0));
+    for i in 0..50u64 {
+        let c = Arc::clone(&count);
+        ts.spawn_full(
+            vec![Dependence::new(RegionKey::new(i * 100, 100), DepMode::Inout)],
+            "disjoint",
+            move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            },
+        );
+    }
+    ts.taskwait();
+    assert_eq!(count.load(Ordering::SeqCst), 50);
+    ts.shutdown();
+}
+
+#[test]
+fn ranged_plugin_agrees_with_exact_on_addr_keys() {
+    // On address-only keys the two plugins must produce identical orders.
+    for ranged in [false, true] {
+        let spec = Arc::new(synthetic::random_dag(500, 11, 4242));
+        let ts = TaskSystem::builder()
+            .kind(RuntimeKind::Ddast)
+            .num_threads(3)
+            .ranged_deps(ranged)
+            .build();
+        let log = executor::run_spec(&ts, &spec, executor::ExecOptions::default());
+        ts.shutdown();
+        assert!(log.all_ran(), "ranged={ranged}");
+        assert!(
+            log.dependence_violations(&spec.predecessor_edges()).is_empty(),
+            "ranged={ranged}"
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! Executable versions of the paper's qualitative claims (EXPERIMENTS.md):
+//! each test pins one evaluation-section shape on reduced-size workloads so
+//! regressions in the runtime or the cost model are caught by `cargo test`.
+
+use ddast::coordinator::{DdastParams, RuntimeKind};
+use ddast::sim::engine::{simulate, SimOptions};
+use ddast::sim::machine::MachineConfig;
+use ddast::workloads::{matmul, nbody, sparselu};
+
+fn speedup(
+    spec: &ddast::workloads::TaskGraphSpec,
+    m: &MachineConfig,
+    kind: RuntimeKind,
+    threads: usize,
+) -> f64 {
+    simulate(spec, m, SimOptions::new(kind, threads)).speedup
+}
+
+/// Fig 9a/9b: DDAST outperforms the Nanos++ baseline on fine-grain Matmul
+/// at the full KNL thread count (paper: ~40 %; we accept ≥ 15 % at reduced
+/// problem size).
+#[test]
+fn fig9_ddast_beats_nanos_on_knl_matmul_fg() {
+    let m = MachineConfig::knl();
+    let spec = matmul::generate(matmul::MatmulParams { ms: 4096, bs: 256 });
+    let sync = speedup(&spec, &m, RuntimeKind::Sync, 64);
+    let ddast = speedup(&spec, &m, RuntimeKind::Ddast, 64);
+    assert!(
+        ddast > sync * 1.15,
+        "DDAST {ddast:.2} should beat Nanos++ {sync:.2} by >15%"
+    );
+}
+
+/// Fig 9d–f: coarse grain at low thread counts — all runtimes similar
+/// (within 25 %).
+#[test]
+fn fig9_cg_low_threads_similar() {
+    let m = MachineConfig::power9();
+    let spec = matmul::generate(matmul::MatmulParams { ms: 4096, bs: 512 });
+    let s = speedup(&spec, &m, RuntimeKind::Sync, 8);
+    let d = speedup(&spec, &m, RuntimeKind::Ddast, 8);
+    let g = speedup(&spec, &m, RuntimeKind::GompLike, 8);
+    for (name, v) in [("ddast", d), ("gomp", g)] {
+        let ratio = v / s;
+        assert!((0.75..1.6).contains(&ratio), "{name} ratio {ratio:.2} vs sync");
+    }
+}
+
+/// Fig 10: SparseLU — DDAST achieves performance similar to (or better
+/// than) Nanos++ despite the irregular graph.
+#[test]
+fn fig10_sparselu_ddast_not_worse() {
+    let m = MachineConfig::thunderx();
+    let spec = sparselu::generate(sparselu::SparseLuParams { ms: 4096, bs: 128 });
+    let sync = speedup(&spec, &m, RuntimeKind::Sync, 48);
+    let ddast = speedup(&spec, &m, RuntimeKind::Ddast, 48);
+    assert!(ddast > sync * 0.9, "DDAST {ddast:.2} vs Nanos++ {sync:.2}");
+}
+
+/// Fig 11a: N-Body FG on KNL — Nanos++ performance stands still between
+/// 16 and 64 threads while DDAST maintains or increases it.
+#[test]
+fn fig11_nbody_fg_knl_standstill_vs_ddast() {
+    let m = MachineConfig::knl();
+    let spec = nbody::generate(nbody::NBodyParams {
+        num_particles: 16_384,
+        timesteps: 4, // reduced from 16: same per-timestep structure
+        bs: 64,
+    });
+    let sync16 = speedup(&spec, &m, RuntimeKind::Sync, 16);
+    let sync64 = speedup(&spec, &m, RuntimeKind::Sync, 64);
+    let ddast64 = speedup(&spec, &m, RuntimeKind::Ddast, 64);
+    assert!(
+        sync64 < sync16 * 1.35,
+        "Nanos++ should roughly flatline: {sync16:.2} -> {sync64:.2}"
+    );
+    assert!(ddast64 > sync64 * 1.2, "DDAST {ddast64:.2} vs Nanos++ {sync64:.2}");
+}
+
+/// Fig 11a: GOMP wins at small thread counts on KNL, then collapses from
+/// idle-worker contention at 64 threads.
+#[test]
+fn fig11_gomp_collapse_on_knl() {
+    let m = MachineConfig::knl();
+    let spec = nbody::generate(nbody::NBodyParams {
+        num_particles: 16_384,
+        timesteps: 4,
+        bs: 64,
+    });
+    let gomp16 = speedup(&spec, &m, RuntimeKind::GompLike, 16);
+    let gomp64 = speedup(&spec, &m, RuntimeKind::GompLike, 64);
+    let ddast64 = speedup(&spec, &m, RuntimeKind::Ddast, 64);
+    assert!(gomp64 < gomp16, "GOMP must collapse: 16t {gomp16:.2} -> 64t {gomp64:.2}");
+    // Paper: DDAST overtakes collapsed GOMP at 64t. Our model gets the
+    // collapse but leaves GOMP marginally ahead (documented deviation in
+    // EXPERIMENTS.md); assert DDAST is at least competitive (>= 90 %).
+    assert!(
+        ddast64 > gomp64 * 0.9,
+        "DDAST {ddast64:.2} must be competitive with collapsed GOMP {gomp64:.2}"
+    );
+}
+
+/// Fig 11e: on ThunderX, GOMP never hits the idle-contention point and
+/// performs better than both Nanos++-based runtimes.
+#[test]
+fn fig11_gomp_wins_on_thunderx() {
+    let m = MachineConfig::thunderx();
+    let spec = nbody::generate(nbody::NBodyParams {
+        num_particles: 16_384,
+        timesteps: 4,
+        bs: 64,
+    });
+    let sync = speedup(&spec, &m, RuntimeKind::Sync, 48);
+    let ddast = speedup(&spec, &m, RuntimeKind::Ddast, 48);
+    let gomp = speedup(&spec, &m, RuntimeKind::GompLike, 48);
+    assert!(gomp > ddast && ddast > sync, "gomp {gomp:.2} > ddast {ddast:.2} > sync {sync:.2}");
+}
+
+/// Fig 12: the in-graph evolution is a pyramid for Nanos++ and a roof for
+/// DDAST (an order of magnitude fewer tasks in the runtime structures).
+#[test]
+fn fig12_pyramid_vs_roof() {
+    // Full paper size: the pyramid needs the real task count to tower.
+    let m = MachineConfig::knl();
+    let spec = matmul::generate(matmul::MatmulParams { ms: 8192, bs: 256 });
+    let sync = simulate(&spec, &m, SimOptions::new(RuntimeKind::Sync, 64));
+    let ddast = simulate(&spec, &m, SimOptions::new(RuntimeKind::Ddast, 64));
+    assert!(
+        sync.stats.max_in_graph > 8 * ddast.stats.max_in_graph,
+        "pyramid {} vs roof {}",
+        sync.stats.max_in_graph,
+        ddast.stats.max_in_graph
+    );
+    assert!(sync.stats.max_ready > 4 * ddast.stats.max_ready);
+}
+
+/// Fig 5 (fine-grain subplots): a single manager thread cannot keep up
+/// with the incoming messages and the effect vanishes above 2–4 managers.
+/// The effect lives where message demand ≈ one manager's capacity — the
+/// paper saw it on its FG runs; in our cost model that is ThunderX FG
+/// Matmul (150 µs tasks × 48 threads).
+#[test]
+fn fig5_one_manager_bottleneck() {
+    let m = MachineConfig::thunderx();
+    let spec = matmul::generate(matmul::MatmulParams { ms: 4096, bs: 64 });
+    let with = |mdt: usize| {
+        let p = DdastParams { max_ddast_threads: mdt, ..DdastParams::initial() };
+        simulate(&spec, &m, SimOptions::new(RuntimeKind::Ddast, 48).with_params(p))
+            .makespan
+            .as_secs_f64()
+    };
+    let one = with(1);
+    let two = with(2);
+    let four = with(4);
+    assert!(one > two * 1.2, "1 manager {one:.3}s should lose badly to 2 {two:.3}s");
+    assert!(
+        (two / four) > 0.9 && (two / four) < 1.1,
+        "2 vs 4 managers should be flat: {two:.3} vs {four:.3}"
+    );
+}
+
+/// Fig 6: MAX_SPINS does not matter (±5 % here; paper ±0.5 % on real HW).
+#[test]
+fn fig6_max_spins_no_effect() {
+    let m = MachineConfig::thunderx();
+    let spec = sparselu::generate(sparselu::SparseLuParams { ms: 2048, bs: 128 });
+    let with = |spins: u32| {
+        let p = DdastParams { max_spins: spins, ..DdastParams::initial() };
+        simulate(&spec, &m, SimOptions::new(RuntimeKind::Ddast, 48).with_params(p))
+            .makespan
+            .as_secs_f64()
+    };
+    let base = with(20);
+    for spins in [1, 4, 64, 128] {
+        let r = with(spins) / base;
+        assert!((0.95..1.05).contains(&r), "MAX_SPINS={spins}: ratio {r:.3}");
+    }
+}
+
+/// §6.1: the paper's measured ~1.5× task-body inflation under the sync
+/// runtime (cache pollution) is what the cost model encodes.
+#[test]
+fn sync_task_bodies_inflated_by_pollution() {
+    let m = MachineConfig::knl();
+    let spec = matmul::generate(matmul::MatmulParams { ms: 2048, bs: 256 });
+    let sync = simulate(&spec, &m, SimOptions::new(RuntimeKind::Sync, 32));
+    let ddast = simulate(&spec, &m, SimOptions::new(RuntimeKind::Ddast, 32));
+    let sync_per_task = sync.stats.task_exec_ns as f64 / sync.stats.tasks_executed as f64;
+    let ddast_per_task = ddast.stats.task_exec_ns as f64 / ddast.stats.tasks_executed as f64;
+    let ratio = sync_per_task / ddast_per_task;
+    assert!(
+        (1.25..1.75).contains(&ratio),
+        "task-time ratio {ratio:.2} (paper measured ~1.5)"
+    );
+}
