@@ -1,9 +1,14 @@
 //! Microbenchmarks of the real runtime structures (calibration source for
-//! the simulator's CostModel — DESIGN.md §7, EXPERIMENTS.md §Perf).
+//! the simulator's CostModel — DESIGN.md §7, EXPERIMENTS.md §Perf), plus
+//! the old-vs-new contention A/B of the lock-free hot paths
+//! (EXPERIMENTS.md §Lock-free hot paths).
 //!
 //! Run: `cargo bench --bench micro_structures`
+//!
+//! Writes `BENCH_contention.json` at the repository root so future PRs have
+//! a machine-readable perf trajectory to compare against.
 
-use ddast::bench_harness::Bencher;
+use ddast::bench_harness::{contention, Bencher};
 use ddast::coordinator::{RuntimeKind, TaskSystem};
 use ddast::sim::calibrate;
 use ddast::workloads::{executor, synthetic};
@@ -12,6 +17,21 @@ use std::sync::Arc;
 fn main() {
     println!("== micro_structures: real-structure op costs ==\n");
     println!("{}", calibrate::report());
+
+    // Old-vs-new contention A/B: the seed's locked ready pools and
+    // single-lock dependence domain vs the Chase–Lev deques and striped
+    // domains, on identical multi-threaded drills.
+    println!("== contention A/B: seed locked structures vs lock-free ==\n");
+    for threads in [2usize, 4, 8] {
+        let report = contention::run_ab(threads, 50_000);
+        println!("{}", contention::render(&report));
+        if threads == 4 {
+            let path = contention::default_json_path();
+            if contention::write_json(&path, &report, "cargo bench --bench micro_structures") {
+                println!("wrote {}\n", path.display());
+            }
+        }
+    }
 
     let mut b = Bencher::new(5, 1);
     // End-to-end task throughput per organization (pure overhead: zero-cost
@@ -31,5 +51,59 @@ fn main() {
             executor::run_spec(&ts, &spec, executor::ExecOptions::default());
             ts.shutdown();
         });
+    }
+
+    // Satellite guard: dependence-domain finish cost must not grow with the
+    // number of unrelated regions (the ranged plugin used to scan them all).
+    finish_cost_guard();
+}
+
+/// Prints ranged-plugin finish visit counts at growing unrelated-region
+/// counts; the per-finish visit count must stay equal to the task's own
+/// dependence count (here: 1) rather than tracking the region total.
+fn finish_cost_guard() {
+    use ddast::coordinator::{DepDomain, TaskId, Wd, WdState};
+    use ddast::substrate::RegionKey;
+    use ddast::DepMode;
+    use std::sync::Weak;
+
+    println!("\n== finish-cost guard: visits per finish vs unrelated regions ==");
+    println!("{:<22}{:>16}", "unrelated regions", "visits/finish (seed: = regions)");
+    for unrelated in [10u64, 100, 1_000, 10_000] {
+        let d = DepDomain::new_ranged();
+        let mut keep = Vec::new();
+        for i in 0..unrelated {
+            let t = Wd::new(
+                TaskId(i + 1),
+                vec![ddast::coordinator::Dependence::new(
+                    RegionKey::new(1_000_000 + 16 * i, 8),
+                    DepMode::Out,
+                )],
+                "bg",
+                Weak::new(),
+                Box::new(|| {}),
+            );
+            d.submit(&t);
+            keep.push(t);
+        }
+        const PROBES: u64 = 64;
+        let before = d.finish_visits();
+        for p in 0..PROBES {
+            let t = Wd::new(
+                TaskId(100_000 + p),
+                vec![ddast::coordinator::Dependence::new(RegionKey::new(0, 8), DepMode::Inout)],
+                "probe",
+                Weak::new(),
+                Box::new(|| {}),
+            );
+            d.submit(&t);
+            t.set_state(WdState::Ready);
+            t.set_state(WdState::Running);
+            t.set_state(WdState::Finished);
+            d.finish(&t);
+        }
+        let per_finish = (d.finish_visits() - before) as f64 / PROBES as f64;
+        println!("{unrelated:<22}{per_finish:>16.1}");
+        assert!(per_finish <= 1.5, "finish visits grew with unrelated regions");
     }
 }

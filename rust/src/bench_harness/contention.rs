@@ -1,0 +1,348 @@
+//! Old-vs-new contention A/B drills for the lock-free hot paths.
+//!
+//! The seed's shared structures (one `SpinLock<VecDeque>` per ready pool,
+//! one spinlock per dependence domain) were replaced by Chase–Lev-style
+//! deques and striped domains (EXPERIMENTS.md §Lock-free hot paths). This
+//! module runs the *same* multi-threaded workload against the seed-era
+//! structures ([`LockedReadyPools`], `DepDomain::with_stripes(1)`) and the
+//! new ones ([`ReadyPools`], `DepDomain::new()`), and reports contended
+//! acquisitions / CAS retries side by side — so the win is measured, not
+//! asserted. `micro_structures` and the `contention_ab` tier-1 test both
+//! drive it and serialize the result to `BENCH_contention.json` for the
+//! perf trajectory of future PRs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Weak};
+use std::time::Instant;
+
+use crate::coordinator::dep::dep_out;
+use crate::coordinator::depgraph::DepDomain;
+use crate::coordinator::ready::{LockedReadyPools, PoolContention, ReadyPools};
+use crate::coordinator::wd::{TaskId, Wd, WdState};
+
+/// One side of an A/B measurement.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SideReport {
+    /// Lock/token acquisitions.
+    pub acquisitions: u64,
+    /// Contended acquisitions (had to spin).
+    pub contended: u64,
+    /// Total spin iterations.
+    pub spin_iters: u64,
+    /// Lock-free CAS attempts (0 for locked structures).
+    pub cas_attempts: u64,
+    /// Lost CAS races (the lock-free contention proxy).
+    pub cas_retries: u64,
+    /// Wall-clock of the drill in nanoseconds.
+    pub elapsed_ns: u64,
+}
+
+impl SideReport {
+    /// Contended events under either regime (spins or lost CAS races) —
+    /// the acceptance metric of the A/B.
+    pub fn contended_events(&self) -> u64 {
+        self.contended + self.cas_retries
+    }
+
+    fn from_pool(stats: PoolContention, elapsed_ns: u64) -> Self {
+        SideReport {
+            acquisitions: stats.acquisitions,
+            contended: stats.contended,
+            spin_iters: stats.spin_iters,
+            cas_attempts: stats.cas_attempts,
+            cas_retries: stats.cas_retries,
+            elapsed_ns,
+        }
+    }
+
+    fn from_lock_stats(stats: (u64, u64, u64), elapsed_ns: u64) -> Self {
+        SideReport {
+            acquisitions: stats.0,
+            contended: stats.1,
+            spin_iters: stats.2,
+            cas_attempts: 0,
+            cas_retries: 0,
+            elapsed_ns,
+        }
+    }
+}
+
+/// A full A/B: seed structure vs lock-free structure on the same workload.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AbReport {
+    pub old: SideReport,
+    pub new: SideReport,
+}
+
+impl AbReport {
+    /// `old.contended_events() / new.contended_events()` (∞ → u64::MAX
+    /// when the new side never contended).
+    pub fn reduction(&self) -> f64 {
+        let new = self.new.contended_events();
+        if new == 0 {
+            f64::INFINITY
+        } else {
+            self.old.contended_events() as f64 / new as f64
+        }
+    }
+}
+
+/// The complete contention A/B (both hot paths) at one thread count.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ContentionReport {
+    pub threads: usize,
+    pub ops_per_thread: u64,
+    pub ready_pools: AbReport,
+    pub dep_domain: AbReport,
+}
+
+fn mk_task(id: u64) -> Arc<Wd> {
+    Wd::new(TaskId(id), Vec::new(), "drill", Weak::new(), Box::new(|| {}))
+}
+
+/// Ready-pool drill: the first half of the threads produce into their own
+/// pools (interleaving occasional own pops, like workers releasing and
+/// running tasks); the second half only consume, which forces them onto the
+/// steal path. Runs until every produced task is consumed.
+fn drill_ready<P, G>(threads: usize, ops: u64, push: P, get: G)
+where
+    P: Fn(usize, Arc<Wd>) + Sync,
+    G: Fn(usize) -> Option<Arc<Wd>> + Sync,
+{
+    let producers = (threads / 2).max(1);
+    let total = producers as u64 * ops;
+    let consumed = AtomicU64::new(0);
+    let push = &push;
+    let get = &get;
+    let consumed = &consumed;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            s.spawn(move || {
+                if t < producers {
+                    for i in 0..ops {
+                        push(t, mk_task(t as u64 * ops + i + 1));
+                        if i % 4 == 0 && get(t).is_some() {
+                            consumed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                // Everyone drains until all tasks are accounted for
+                // (producers included, so the drill never hangs if the
+                // thieves are descheduled).
+                while consumed.load(Ordering::Relaxed) < total {
+                    if get(t).is_some() {
+                        consumed.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Run the ready-pool A/B at `threads` threads, `ops` pushes per producer.
+pub fn ready_pools_ab(threads: usize, ops: u64) -> AbReport {
+    let old = LockedReadyPools::new(threads, 7);
+    let t0 = Instant::now();
+    drill_ready(threads, ops, |t, wd| old.push(t, wd), |t| old.get(t));
+    let old_report =
+        SideReport::from_pool(old.contention_stats(), t0.elapsed().as_nanos() as u64);
+
+    let new = ReadyPools::new(threads, 7);
+    let t0 = Instant::now();
+    drill_ready(threads, ops, |t, wd| new.push(t, wd), |t| new.get(t));
+    let new_report =
+        SideReport::from_pool(new.contention_stats(), t0.elapsed().as_nanos() as u64);
+
+    AbReport { old: old_report, new: new_report }
+}
+
+/// Dependence-domain drill: each thread submits and finishes its own
+/// stream of single-dep tasks over a small private region set — fully
+/// independent regions, so a striped domain should let the threads run
+/// (nearly) without contending, while the single-lock domain serializes
+/// every operation.
+fn drill_domain(domain: &DepDomain, threads: usize, ops: u64) {
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            s.spawn(move || {
+                // 8 private regions per thread, revisited round-robin (the
+                // benchmarks' block-reuse pattern).
+                let base = 1_000_000u64 * (t as u64 + 1);
+                for i in 0..ops {
+                    let wd = Wd::new(
+                        TaskId(t as u64 * ops + i + 1),
+                        vec![dep_out(base + i % 8)],
+                        "drill",
+                        Weak::new(),
+                        Box::new(|| {}),
+                    );
+                    wd.set_state(WdState::Submitted);
+                    domain.submit(&wd);
+                    wd.set_state(WdState::Ready);
+                    wd.set_state(WdState::Running);
+                    wd.set_state(WdState::Finished);
+                    let ready = domain.finish(&wd);
+                    debug_assert!(ready.is_empty(), "streams are independent");
+                }
+            });
+        }
+    });
+}
+
+/// Run the dependence-domain A/B: 1 stripe (the seed's single lock) vs the
+/// default stripe count.
+pub fn dep_domain_ab(threads: usize, ops: u64) -> AbReport {
+    let old = DepDomain::with_stripes(1);
+    let t0 = Instant::now();
+    drill_domain(&old, threads, ops);
+    let old_report =
+        SideReport::from_lock_stats(old.lock_stats(), t0.elapsed().as_nanos() as u64);
+
+    let new = DepDomain::new();
+    let t0 = Instant::now();
+    drill_domain(&new, threads, ops);
+    let new_report =
+        SideReport::from_lock_stats(new.lock_stats(), t0.elapsed().as_nanos() as u64);
+
+    AbReport { old: old_report, new: new_report }
+}
+
+/// Run both A/Bs.
+pub fn run_ab(threads: usize, ops_per_thread: u64) -> ContentionReport {
+    ContentionReport {
+        threads,
+        ops_per_thread,
+        ready_pools: ready_pools_ab(threads, ops_per_thread),
+        dep_domain: dep_domain_ab(threads, ops_per_thread),
+    }
+}
+
+fn side_json(s: &SideReport) -> String {
+    format!(
+        "{{\"acquisitions\": {}, \"contended\": {}, \"spin_iters\": {}, \
+         \"cas_attempts\": {}, \"cas_retries\": {}, \"contended_events\": {}, \
+         \"elapsed_ns\": {}}}",
+        s.acquisitions,
+        s.contended,
+        s.spin_iters,
+        s.cas_attempts,
+        s.cas_retries,
+        s.contended_events(),
+        s.elapsed_ns
+    )
+}
+
+fn ab_json(ab: &AbReport) -> String {
+    let red = ab.reduction();
+    let red = if red.is_finite() { format!("{red:.2}") } else { "null".to_string() };
+    format!(
+        "{{\"old\": {}, \"new\": {}, \"contended_reduction\": {}}}",
+        side_json(&ab.old),
+        side_json(&ab.new),
+        red
+    )
+}
+
+/// Serialize the report (hand-rolled: the offline environment has no serde).
+/// `contended_reduction` is `null` when the new side recorded zero
+/// contended events (an infinite improvement).
+pub fn to_json(r: &ContentionReport, generated_by: &str) -> String {
+    format!(
+        "{{\n  \"generated_by\": \"{}\",\n  \"threads\": {},\n  \"ops_per_thread\": {},\n  \
+         \"ready_pools\": {},\n  \"dep_domain\": {}\n}}\n",
+        generated_by,
+        r.threads,
+        r.ops_per_thread,
+        ab_json(&r.ready_pools),
+        ab_json(&r.dep_domain)
+    )
+}
+
+/// Human-readable table for the bench output.
+pub fn render(r: &ContentionReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Contention A/B — {} threads, {} ops/producer (contended = spins, retries = lost CAS)\n",
+        r.threads, r.ops_per_thread
+    ));
+    out.push_str(&format!(
+        "{:<22}{:>14}{:>12}{:>12}{:>12}{:>12}\n",
+        "structure", "acquisitions", "contended", "cas-retry", "events", "ms"
+    ));
+    for (name, s) in [
+        ("ready: locked (seed)", &r.ready_pools.old),
+        ("ready: ws-deque", &r.ready_pools.new),
+        ("domain: 1 stripe", &r.dep_domain.old),
+        ("domain: striped", &r.dep_domain.new),
+    ] {
+        out.push_str(&format!(
+            "{:<22}{:>14}{:>12}{:>12}{:>12}{:>12.2}\n",
+            name,
+            s.acquisitions,
+            s.contended,
+            s.cas_retries,
+            s.contended_events(),
+            s.elapsed_ns as f64 / 1e6
+        ));
+    }
+    out.push_str(&format!(
+        "reduction in contended events: ready-pools {}, dep-domain {}\n",
+        fmt_reduction(r.ready_pools.reduction()),
+        fmt_reduction(r.dep_domain.reduction())
+    ));
+    out
+}
+
+fn fmt_reduction(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.1}x")
+    } else {
+        "inf (new side uncontended)".to_string()
+    }
+}
+
+/// Default output path: the repository root, next to EXPERIMENTS.md.
+pub fn default_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_contention.json")
+}
+
+/// Write the report to `path` (best-effort; benches must not fail the run
+/// over a read-only checkout).
+pub fn write_json(path: &std::path::Path, r: &ContentionReport, generated_by: &str) -> bool {
+    std::fs::write(path, to_json(r, generated_by)).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ab_runs_and_counts() {
+        let r = run_ab(2, 200);
+        assert_eq!(r.threads, 2);
+        // Every producer push acquired something on both sides.
+        assert!(r.ready_pools.old.acquisitions >= 200);
+        assert!(r.ready_pools.new.acquisitions + r.ready_pools.new.cas_attempts >= 200);
+        assert!(r.dep_domain.old.acquisitions >= 2 * 200 * 2, "submit+finish per op");
+        assert!(r.dep_domain.new.acquisitions >= 2 * 200 * 2);
+    }
+
+    #[test]
+    fn json_shape() {
+        let r = run_ab(1, 50);
+        let j = to_json(&r, "unit test");
+        for key in [
+            "\"generated_by\"",
+            "\"threads\"",
+            "\"ready_pools\"",
+            "\"dep_domain\"",
+            "\"contended_reduction\"",
+            "\"cas_retries\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert!(render(&r).contains("reduction in contended events"));
+    }
+}

@@ -2,7 +2,9 @@
 //! criterion replacement (`bencher`).
 
 pub mod bencher;
+pub mod contention;
 pub mod figures;
 
 pub use bencher::{Bencher, Measurement};
+pub use contention::{AbReport, ContentionReport, SideReport};
 pub use figures::{Bench, FigureOpts};

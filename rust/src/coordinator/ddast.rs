@@ -89,7 +89,9 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
     loop {
         let mut total_cnt: usize = 0;
         for w in 0..rt.queues.num_workers() {
-            // Line 7: early exit when enough parallelism is uncovered.
+            // Line 7: early exit when enough parallelism is uncovered. The
+            // sharded gauge's relaxed sweep is fine here — this is the hot
+            // inner check and MIN_READY_TASKS is a heuristic threshold.
             if rt.ready.ready_count() >= p.min_ready_tasks {
                 break;
             }
@@ -127,8 +129,10 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
         total_processed += total_cnt as u64;
         // Line 24: reset the spin budget on progress, decrement otherwise.
         spins = if total_cnt == 0 { spins.saturating_sub(1) } else { p.max_spins };
-        // Line 25 break conditions.
-        if spins == 0 || rt.ready.ready_count() >= p.min_ready_tasks {
+        // Line 25 break conditions. The loop-exit decision uses the
+        // exact-read fallback so a torn sweep of the sharded counter
+        // cannot make the manager leave early (or linger) spuriously.
+        if spins == 0 || rt.ready.ready_count_exact() >= p.min_ready_tasks {
             break;
         }
     }

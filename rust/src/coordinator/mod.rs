@@ -24,5 +24,6 @@ pub use dep::{dep_in, dep_inout, dep_out, DepMode, Dependence};
 pub use depgraph::DepDomain;
 pub use dispatcher::Dispatcher;
 pub use pool::{RuntimeKind, RuntimeShared};
+pub use ready::{LockedReadyPools, PoolContention, ReadyPools};
 pub use trace::{ThreadState, TraceEvent, TraceKind, Tracer};
 pub use wd::{TaskId, Wd, WdState};

@@ -122,15 +122,21 @@ impl RuntimeShared {
         ranged_deps: bool,
     ) -> Arc<Self> {
         assert!(num_threads >= 1, "need at least the main thread");
-        // GOMP-like: a single central ready queue all threads hit.
-        let ready_queues = if kind == RuntimeKind::GompLike { 1 } else { num_threads };
+        // GOMP-like: a single central *locked* ready queue all threads hit
+        // (the comparator models a centralized contended runtime, so it
+        // deliberately skips the per-thread lock-free deques).
+        let ready = if kind == RuntimeKind::GompLike {
+            ReadyPools::new_central(seed)
+        } else {
+            ReadyPools::new(num_threads, seed)
+        };
         Arc::new(RuntimeShared {
             kind,
             params,
             tunables: Arc::new(crate::coordinator::autotune::TunableParams::new(params)),
             num_threads,
             queues: QueueSystem::new(num_threads),
-            ready: ReadyPools::new(ready_queues, seed),
+            ready,
             dispatcher: Dispatcher::new(),
             root: Wd::root(),
             mgr_count: AtomicUsize::new(0),
@@ -196,11 +202,13 @@ impl RuntimeShared {
         self.shutdown.store(true, Ordering::Release);
     }
 
-    /// All work done and all messages processed?
+    /// All work done and all messages processed? Uses the sharded gauge's
+    /// exact-read fallback — a torn relaxed sweep must not let a worker
+    /// exit its loop while a ready task is still queued.
     pub fn quiescent(&self) -> bool {
         self.stats.tasks_outstanding.get() == 0
             && self.queues.pending() == 0
-            && self.ready.ready_count() == 0
+            && self.ready.ready_count_exact() == 0
     }
 
     // ---- tracing helpers -------------------------------------------------

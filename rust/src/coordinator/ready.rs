@@ -3,47 +3,132 @@
 //! §4 of the paper: "The DBF policy uses a queue of ready tasks for each
 //! thread with a stealing mechanism". Ready tasks are pushed FIFO to the
 //! enqueueing thread's own queue (breadth-first within a thread) and idle
-//! threads steal from victims chosen round-robin from a random start.
+//! threads steal the most recently released (deepest) task from victims
+//! chosen round-robin from a random start.
 //!
 //! A global gauge of ready tasks is maintained because the DDAST callback's
 //! `MIN_READY_TASKS` break condition needs an O(1) read (Listing 2 line 7).
+//!
+//! ## Lock-free hot paths (EXPERIMENTS.md §Lock-free hot paths)
+//!
+//! The seed kept each pool in a `SpinLock<VecDeque>` and the gauge in one
+//! global atomic: every push/pop/steal was a lock round-trip plus a shared
+//! RMW, so at 4+ threads the pools measured our own artificial contention.
+//! Now each per-thread pool is a [`WsDeque`]: the owner's FIFO pop is a
+//! single CAS on the front, pushes are an uncontended token CAS on the
+//! back, thieves take the back under the same token (contending only with
+//! that one victim's pushes), and the gauge is a [`ShardedCounter`] of
+//! per-thread padded cells. Victim selection keeps its per-slot xorshift
+//! state in a padded atomic cell — a relaxed load + store, no RMW.
+//!
+//! The GOMP-like comparator intentionally keeps the seed's single locked
+//! queue (`ReadyPools::new_central`) — it *models* a centralized contended
+//! runtime, so de-contending it would destroy the baseline. The seed's
+//! locked per-thread implementation survives as [`LockedReadyPools`] for
+//! the old-vs-new A/B in `micro_structures`/`BENCH_contention.json`.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::wd::Wd;
-use crate::substrate::{Counter, SpinLock, XorShift64};
+use crate::substrate::{CachePadded, Counter, ShardedCounter, SpinLock, WsDeque, XorShift64};
+
+/// Aggregate contention statistics of a ready-pool implementation, in the
+/// `SpinLock::stats` vocabulary plus the lock-free CAS proxy. Fuel for
+/// `sim::calibrate` and the A/B bench.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolContention {
+    /// Lock/token acquisitions across all queues.
+    pub acquisitions: u64,
+    /// Acquisitions that had to spin at least once.
+    pub contended: u64,
+    /// Total spin iterations.
+    pub spin_iters: u64,
+    /// Front-CAS attempts (lock-free path only; 0 for locked pools).
+    pub cas_attempts: u64,
+    /// Front-CAS lost races (the lock-free contention proxy).
+    pub cas_retries: u64,
+}
+
+impl PoolContention {
+    /// Contended events under either regime: spins on a lock/token, or lost
+    /// CAS races. The A/B acceptance metric compares these.
+    pub fn contended_events(&self) -> u64 {
+        self.contended + self.cas_retries
+    }
+}
+
+enum PoolQueues {
+    /// One work-stealing deque per thread (Sync / DDAST / CentralDast).
+    PerThread(Vec<CachePadded<WsDeque<Arc<Wd>>>>),
+    /// The GOMP-like comparator's single central locked queue.
+    Central(SpinLock<VecDeque<Arc<Wd>>>),
+}
 
 /// Per-thread ready queues with stealing.
 pub struct ReadyPools {
-    queues: Vec<SpinLock<VecDeque<Arc<Wd>>>>,
-    ready_count: Counter,
+    queues: PoolQueues,
+    ready_count: ShardedCounter,
     steals: Counter,
-    /// Per-thread RNG state for victim selection (index = thread id).
-    rngs: Vec<SpinLock<XorShift64>>,
+    /// Per-slot xorshift state for victim selection (index = thread id).
+    /// Only the slot's bound thread draws from it, so a relaxed
+    /// load+store suffices; the atomic keeps the API safe if two threads
+    /// ever share a slot (they'd draw correlated victims, nothing worse).
+    rngs: Vec<CachePadded<AtomicU64>>,
 }
 
 impl ReadyPools {
     pub fn new(num_threads: usize, seed: u64) -> Self {
         ReadyPools {
-            queues: (0..num_threads).map(|_| SpinLock::new(VecDeque::new())).collect(),
-            ready_count: Counter::new(),
+            queues: PoolQueues::PerThread(
+                (0..num_threads).map(|_| CachePadded::new(WsDeque::new())).collect(),
+            ),
+            ready_count: ShardedCounter::new(),
             steals: Counter::new(),
-            rngs: (0..num_threads)
-                .map(|i| SpinLock::new(XorShift64::new(seed ^ (i as u64).wrapping_mul(0xA24BAED4963EE407))))
-                .collect(),
+            rngs: Self::make_rngs(num_threads, seed),
         }
+    }
+
+    /// Single central locked queue — the GOMP-like comparator's
+    /// organization (all threads contend on one lock; `num_threads() == 1`).
+    pub fn new_central(seed: u64) -> Self {
+        ReadyPools {
+            queues: PoolQueues::Central(SpinLock::new(VecDeque::new())),
+            ready_count: ShardedCounter::new(),
+            steals: Counter::new(),
+            rngs: Self::make_rngs(1, seed),
+        }
+    }
+
+    fn make_rngs(n: usize, seed: u64) -> Vec<CachePadded<AtomicU64>> {
+        (0..n)
+            .map(|i| {
+                let s = XorShift64::new(seed ^ (i as u64).wrapping_mul(0xA24BAED4963EE407));
+                CachePadded::new(AtomicU64::new(s.state()))
+            })
+            .collect()
     }
 
     #[inline]
     pub fn num_threads(&self) -> usize {
-        self.queues.len()
+        match &self.queues {
+            PoolQueues::PerThread(qs) => qs.len(),
+            PoolQueues::Central(_) => 1,
+        }
     }
 
-    /// Global number of ready tasks across all queues.
+    /// Global number of ready tasks across all queues (relaxed gauge read).
     #[inline]
     pub fn ready_count(&self) -> u64 {
         self.ready_count.get()
+    }
+
+    /// Exact-read fallback for decisions that must not act on a torn sweep
+    /// (quiescence, the DDAST callback's break conditions).
+    #[inline]
+    pub fn ready_count_exact(&self) -> u64 {
+        self.ready_count.exact()
     }
 
     /// Total successful steals (diagnostics / calibration).
@@ -54,27 +139,182 @@ impl ReadyPools {
 
     /// Push a task that just became ready onto `thread`'s queue.
     pub fn push(&self, thread: usize, task: Arc<Wd>) {
-        self.queues[thread % self.queues.len()].lock().push_back(task);
+        match &self.queues {
+            PoolQueues::PerThread(qs) => qs[thread % qs.len()].push(task),
+            PoolQueues::Central(q) => q.lock().push_back(task),
+        }
         self.ready_count.inc();
     }
 
     /// Push a batch (used by done-message processing which can release
-    /// several successors at once — one lock acquisition).
+    /// several successors at once). On the deque path each push is an
+    /// uncontended token CAS — no global lock to batch under; the gauge is
+    /// still bumped once.
     pub fn push_batch(&self, thread: usize, tasks: Vec<Arc<Wd>>) {
         if tasks.is_empty() {
             return;
         }
         let n = tasks.len() as u64;
-        {
-            let mut q = self.queues[thread % self.queues.len()].lock();
-            for t in tasks {
-                q.push_back(t);
+        match &self.queues {
+            PoolQueues::PerThread(qs) => {
+                let q = &qs[thread % qs.len()];
+                for t in tasks {
+                    q.push(t);
+                }
+            }
+            PoolQueues::Central(q) => {
+                let mut q = q.lock();
+                for t in tasks {
+                    q.push_back(t);
+                }
             }
         }
         self.ready_count.add(n);
     }
 
     /// Get work for `thread`: own queue first (FIFO), then steal.
+    pub fn get(&self, thread: usize) -> Option<Arc<Wd>> {
+        match &self.queues {
+            PoolQueues::PerThread(qs) => {
+                let me = thread % qs.len();
+                if let Some(t) = qs[me].pop_front() {
+                    self.ready_count.dec();
+                    return Some(t);
+                }
+                self.steal(qs, me)
+            }
+            PoolQueues::Central(q) => {
+                let t = q.lock().pop_front();
+                if t.is_some() {
+                    self.ready_count.dec();
+                }
+                t
+            }
+        }
+    }
+
+    /// Try to steal from another thread's queue. Victims are scanned
+    /// round-robin from a random start so steals spread out.
+    fn steal(&self, qs: &[CachePadded<WsDeque<Arc<Wd>>>], me: usize) -> Option<Arc<Wd>> {
+        let n = qs.len();
+        if n <= 1 {
+            return None;
+        }
+        // Fast path: nothing anywhere.
+        if self.ready_count.get() == 0 {
+            return None;
+        }
+        let rng = &self.rngs[me];
+        let (state, draw) = XorShift64::step(rng.load(Ordering::Relaxed));
+        rng.store(state, Ordering::Relaxed);
+        let start = ((draw as u128 * n as u128) >> 64) as usize;
+        for k in 0..n {
+            let v = (start + k) % n;
+            if v == me {
+                continue;
+            }
+            // Steal from the *back* (oldest work stays with the owner's
+            // FIFO front; stealing the back grabs the most recently
+            // released — deepest — work, the classic DBF choice).
+            if let Some(t) = qs[v].steal_back() {
+                self.ready_count.dec();
+                self.steals.inc();
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Drain everything (shutdown path / tests).
+    pub fn drain_all(&self) -> Vec<Arc<Wd>> {
+        let mut out = Vec::new();
+        match &self.queues {
+            PoolQueues::PerThread(qs) => {
+                for q in qs {
+                    while let Some(t) = q.pop_front() {
+                        self.ready_count.dec();
+                        out.push(t);
+                    }
+                }
+            }
+            PoolQueues::Central(q) => {
+                let mut q = q.lock();
+                while let Some(t) = q.pop_front() {
+                    self.ready_count.dec();
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Aggregate contention statistics across all queues.
+    pub fn contention_stats(&self) -> PoolContention {
+        let mut s = PoolContention::default();
+        match &self.queues {
+            PoolQueues::PerThread(qs) => {
+                for q in qs {
+                    let (acq, cont, spins) = q.token_stats();
+                    let (attempts, retries) = q.cas_stats();
+                    s.acquisitions += acq;
+                    s.contended += cont;
+                    s.spin_iters += spins;
+                    s.cas_attempts += attempts;
+                    s.cas_retries += retries;
+                }
+            }
+            PoolQueues::Central(q) => {
+                let (acq, cont, spins) = q.stats();
+                s.acquisitions = acq;
+                s.contended = cont;
+                s.spin_iters = spins;
+            }
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LockedReadyPools — the seed implementation, kept as the A/B baseline
+// ---------------------------------------------------------------------------
+
+/// The seed's locked per-thread pools (one `SpinLock<VecDeque>` per thread,
+/// one global gauge atomic, `SpinLock<XorShift64>` victim RNG). Not used by
+/// the runtime anymore; `micro_structures` drives it head-to-head against
+/// [`ReadyPools`] to *measure* the contention the lock-free rewrite removed
+/// rather than assert it (BENCH_contention.json).
+pub struct LockedReadyPools {
+    queues: Vec<SpinLock<VecDeque<Arc<Wd>>>>,
+    ready_count: Counter,
+    steals: Counter,
+    rngs: Vec<SpinLock<XorShift64>>,
+}
+
+impl LockedReadyPools {
+    pub fn new(num_threads: usize, seed: u64) -> Self {
+        LockedReadyPools {
+            queues: (0..num_threads).map(|_| SpinLock::new(VecDeque::new())).collect(),
+            ready_count: Counter::new(),
+            steals: Counter::new(),
+            rngs: (0..num_threads)
+                .map(|i| {
+                    SpinLock::new(XorShift64::new(
+                        seed ^ (i as u64).wrapping_mul(0xA24BAED4963EE407),
+                    ))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn ready_count(&self) -> u64 {
+        self.ready_count.get()
+    }
+
+    pub fn push(&self, thread: usize, task: Arc<Wd>) {
+        self.queues[thread % self.queues.len()].lock().push_back(task);
+        self.ready_count.inc();
+    }
+
     pub fn get(&self, thread: usize) -> Option<Arc<Wd>> {
         let me = thread % self.queues.len();
         if let Some(t) = self.queues[me].lock().pop_front() {
@@ -84,14 +324,11 @@ impl ReadyPools {
         self.steal(me)
     }
 
-    /// Try to steal from another thread's queue. Victims are scanned
-    /// round-robin from a random start so steals spread out.
     fn steal(&self, me: usize) -> Option<Arc<Wd>> {
         let n = self.queues.len();
         if n <= 1 {
             return None;
         }
-        // Fast path: nothing anywhere.
         if self.ready_count.get() == 0 {
             return None;
         }
@@ -101,9 +338,6 @@ impl ReadyPools {
             if v == me {
                 continue;
             }
-            // Steal from the *back* (oldest work stays with the owner's
-            // FIFO front; stealing the back grabs the most recently
-            // released — deepest — work, the classic DBF choice).
             if let Some(mut q) = self.queues[v].try_lock() {
                 if let Some(t) = q.pop_back() {
                     drop(q);
@@ -116,17 +350,17 @@ impl ReadyPools {
         None
     }
 
-    /// Drain everything (shutdown path / tests).
-    pub fn drain_all(&self) -> Vec<Arc<Wd>> {
-        let mut out = Vec::new();
-        for q in &self.queues {
-            let mut q = q.lock();
-            while let Some(t) = q.pop_front() {
-                self.ready_count.dec();
-                out.push(t);
-            }
+    /// Aggregate lock statistics (queue locks + RNG locks), A/B-comparable
+    /// with [`ReadyPools::contention_stats`].
+    pub fn contention_stats(&self) -> PoolContention {
+        let mut s = PoolContention::default();
+        for q in self.queues.iter().map(SpinLock::stats).chain(self.rngs.iter().map(SpinLock::stats))
+        {
+            s.acquisitions += q.0;
+            s.contended += q.1;
+            s.spin_iters += q.2;
         }
-        out
+        s
     }
 }
 
@@ -207,5 +441,96 @@ mod tests {
         p.push(0, mk(1));
         assert!(p.get(0).is_some());
         assert_eq!(p.steal_count(), 0);
+    }
+
+    #[test]
+    fn central_pool_is_one_fifo_queue() {
+        let p = ReadyPools::new_central(1);
+        assert_eq!(p.num_threads(), 1);
+        p.push(0, mk(1));
+        p.push(3, mk(2)); // any thread id folds onto the single queue
+        assert_eq!(p.ready_count(), 2);
+        assert_eq!(p.get(2).unwrap().id, TaskId(1), "FIFO across all pushers");
+        assert_eq!(p.get(0).unwrap().id, TaskId(2));
+        assert_eq!(p.steal_count(), 0, "nothing to steal from");
+        let stats = p.contention_stats();
+        assert!(stats.acquisitions >= 4, "central path goes through the lock");
+    }
+
+    #[test]
+    fn contention_stats_aggregate_per_thread_queues() {
+        let p = ReadyPools::new(2, 1);
+        p.push(0, mk(1));
+        p.push(1, mk(2));
+        let _ = p.get(0);
+        let _ = p.get(1);
+        let s = p.contention_stats();
+        assert_eq!(s.acquisitions, 2, "two back ops (pushes)");
+        assert_eq!(s.cas_attempts, 2, "two front pops");
+        assert_eq!(s.contended_events(), 0, "single-threaded use never contends");
+    }
+
+    /// Satellite stress: 1 owner releasing tasks vs N thieves; every task
+    /// runs exactly once and the sharded gauge settles to zero.
+    #[test]
+    fn stress_owner_vs_stealers_no_loss_no_dup() {
+        use std::collections::HashSet;
+        use std::sync::atomic::AtomicBool;
+        const TASKS: u64 = 10_000;
+        const THIEVES: usize = 3;
+        let p = Arc::new(ReadyPools::new(THIEVES + 1, 42));
+        let done = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for th in 0..THIEVES {
+            let p = Arc::clone(&p);
+            let done = Arc::clone(&done);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    // Thief slot th+1: own queue always empty -> steals.
+                    match p.get(th + 1) {
+                        Some(t) => got.push(t.id.0),
+                        None => {
+                            if done.load(Ordering::Acquire) && p.ready_count_exact() == 0 {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                got
+            }));
+        }
+        let mut got = Vec::new();
+        for i in 0..TASKS {
+            p.push(0, mk(i + 1));
+            if i % 4 == 0 {
+                if let Some(t) = p.get(0) {
+                    got.push(t.id.0);
+                }
+            }
+        }
+        done.store(true, Ordering::Release);
+        for h in handles {
+            got.extend(h.join().unwrap());
+        }
+        got.extend(p.drain_all().into_iter().map(|t| t.id.0));
+        assert_eq!(got.len() as u64, TASKS, "no task lost or duplicated");
+        let set: HashSet<u64> = got.iter().copied().collect();
+        assert_eq!(set.len() as u64, TASKS);
+        assert_eq!(p.ready_count_exact(), 0, "sharded gauge settles");
+    }
+
+    #[test]
+    fn locked_pools_match_semantics() {
+        // The A/B baseline behaves like the seed: FIFO own queue,
+        // newest-first steal.
+        let p = LockedReadyPools::new(2, 1);
+        p.push(0, mk(1));
+        p.push(0, mk(2));
+        assert_eq!(p.get(1).unwrap().id, TaskId(2));
+        assert_eq!(p.get(0).unwrap().id, TaskId(1));
+        assert_eq!(p.ready_count(), 0);
+        assert!(p.contention_stats().acquisitions > 0);
     }
 }

@@ -46,6 +46,10 @@ pub mod substrate;
 pub mod coordinator;
 pub mod workloads;
 pub mod sim;
+/// PJRT bridge — needs the external `xla`/`anyhow` crates, which the
+/// offline build environment does not vendor. Enable the `pjrt` feature
+/// (and add those dependencies) where they are available.
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod bench_harness;
 

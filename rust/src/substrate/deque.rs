@@ -1,0 +1,781 @@
+//! Lock-free scheduling substrate: a Chase–Lev style work-stealing deque,
+//! a cache-line padding wrapper and a sharded (per-thread-cell) counter.
+//!
+//! §4's DBF policy needs three operations per ready pool: the owner pushes
+//! released tasks at the back, the owner pops its own work FIFO from the
+//! front, and idle threads steal the *newest* task from the back. The seed
+//! implemented all three under one `SpinLock<VecDeque>` per pool plus one
+//! global `ready_count` atomic — every scheduling action was a potential
+//! contended RMW, so the Sync-vs-DDAST curves partly measured our own lock,
+//! not the paper's contention (see EXPERIMENTS.md §Lock-free hot paths).
+//!
+//! [`WsDeque`] splits the ends:
+//!
+//! * **front** (`top`): consumed by a single CAS, Chase–Lev's steal
+//!   operation. Safe from *any* thread; the owner uses it for its FIFO pop.
+//! * **back** (`bottom`): the push/steal-back end. Back movers are
+//!   serialized by a one-bit token (an uncontended CAS in the common case);
+//!   under the token the classic Chase–Lev `pop_bottom` protocol resolves
+//!   the last-element race against concurrent front CASes.
+//!
+//! The token departs from textbook Chase–Lev (whose bottom end is bound to
+//! one owner *thread*) because our runtime has legitimate multi-pusher
+//! slots: the CentralDast DAS thread wraps onto worker 0's pool, and
+//! DBF thieves take from the back. Serializing only the back keeps the hot
+//! owner pop (front CAS) entirely lock-free while making every back op a
+//! single uncontended CAS unless a back-steal is racing the owner — exactly
+//! the contention the `token_stats()` counters expose. The memory ordering
+//! discipline follows Lê, Pop, Cohen & Nardelli, "Correct and Efficient
+//! Work-Stealing for Weakly Ordered Memory Models" (PPoPP'13).
+//!
+//! Counters mirror [`SpinLock::stats`](crate::substrate::SpinLock::stats)
+//! so `sim::calibrate` and the A/B bench read old and new structures with
+//! the same vocabulary: token (acquisitions, contended, spins) for the back
+//! end, CAS (attempts, retries) for the front end.
+
+use std::cell::{Cell, UnsafeCell};
+use std::mem::MaybeUninit;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicIsize, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+
+// ---------------------------------------------------------------------------
+// CachePadded
+// ---------------------------------------------------------------------------
+
+/// Pads and aligns `T` to 128 bytes so neighbouring values never share a
+/// cache line (128 covers the spatial-prefetcher pair on x86 and the 128 B
+/// lines on some POWER/Apple cores — the machines in the paper's Table 1).
+#[derive(Default, Debug)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> Self {
+        CachePadded { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        CachePadded::new(value)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ShardedCounter
+// ---------------------------------------------------------------------------
+
+/// Number of cells in a [`ShardedCounter`]. Power of two; threads map onto
+/// cells by a process-wide round-robin id, so up to 16 threads touch
+/// distinct cache lines (beyond that they share, still far better than one
+/// global line).
+const COUNTER_SHARDS: usize = 16;
+
+static NEXT_SHARD_ID: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SHARD_ID: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+#[inline]
+fn shard_id() -> usize {
+    SHARD_ID.with(|c| {
+        let mut id = c.get();
+        if id == usize::MAX {
+            id = NEXT_SHARD_ID.fetch_add(1, Ordering::Relaxed);
+            c.set(id);
+        }
+        id & (COUNTER_SHARDS - 1)
+    })
+}
+
+/// A gauge counter striped over per-thread cache-padded cells.
+///
+/// `inc`/`dec`/`add`/`sub` touch only the calling thread's cell — no shared
+/// RMW on the hot path, unlike [`Counter`](crate::substrate::Counter) where
+/// every scheduling action bounced one global cache line between cores.
+/// Cells are signed: a task pushed on thread A and popped on thread B leaves
+/// A's cell positive and B's negative; only the *sum* is meaningful.
+///
+/// Reads come in two strengths:
+/// * [`ShardedCounter::get`] — a relaxed sweep; cheap, monotonic enough for
+///   gauges and the `MIN_READY_TASKS` heuristic's inner fast checks;
+/// * [`ShardedCounter::exact`] — a fenced double-sweep that only returns
+///   when two consecutive sweeps agree, for decisions that must not act on
+///   a torn read (`quiescent()`, the DDAST callback's break conditions).
+pub struct ShardedCounter {
+    cells: Box<[CachePadded<AtomicI64>]>,
+}
+
+impl Default for ShardedCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardedCounter {
+    pub fn new() -> Self {
+        ShardedCounter {
+            cells: (0..COUNTER_SHARDS).map(|_| CachePadded::new(AtomicI64::new(0))).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.cells[shard_id()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.cells[shard_id()].fetch_add(n as i64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.cells[shard_id()].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        self.cells[shard_id()].fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
+    /// Relaxed sweep over the cells. Transiently off by in-flight updates;
+    /// never negative (clamped).
+    #[inline]
+    pub fn get(&self) -> u64 {
+        let sum: i64 = self.cells.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        sum.max(0) as u64
+    }
+
+    /// Exact-read fallback: fenced sweeps repeated until two agree (bounded
+    /// retries; returns the freshest sweep if the counter won't settle —
+    /// callers re-poll in loops, so a transient misread self-corrects).
+    pub fn exact(&self) -> u64 {
+        let sweep = || -> i64 {
+            std::sync::atomic::fence(Ordering::SeqCst);
+            self.cells.iter().map(|c| c.load(Ordering::SeqCst)).sum()
+        };
+        let mut prev = sweep();
+        for _ in 0..3 {
+            let cur = sweep();
+            if cur == prev {
+                break;
+            }
+            prev = cur;
+        }
+        prev.max(0) as u64
+    }
+
+    /// Reset all cells (bench harness between A/B phases).
+    pub fn reset(&self) {
+        for c in self.cells.iter() {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl std::fmt::Debug for ShardedCounter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedCounter").field("sum", &self.get()).finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WsDeque
+// ---------------------------------------------------------------------------
+
+/// Growable circular buffer of the deque. Slots are `MaybeUninit`: liveness
+/// is tracked solely by the `top`/`bottom` indices, and retired generations
+/// keep their (bitwise-copied) contents unread-able only through stale
+/// thieves whose CAS then fails.
+struct Buffer<T> {
+    mask: usize,
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+}
+
+impl<T> Buffer<T> {
+    fn alloc(cap: usize) -> *mut Buffer<T> {
+        debug_assert!(cap.is_power_of_two());
+        Box::into_raw(Box::new(Buffer {
+            mask: cap - 1,
+            slots: (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect(),
+        }))
+    }
+
+    #[inline]
+    fn cap(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Bitwise-read index `i`. Caller owns the value only after it wins the
+    /// index race (CAS or token); otherwise it must `mem::forget` the copy.
+    #[inline]
+    unsafe fn read(&self, i: isize) -> T {
+        (*self.slots[i as usize & self.mask].get()).assume_init_read()
+    }
+
+    #[inline]
+    unsafe fn write(&self, i: isize, value: T) {
+        (*self.slots[i as usize & self.mask].get()).write(value);
+    }
+}
+
+/// Result of one [`WsDeque::steal_front`] attempt.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Steal<T> {
+    /// The deque was observed empty.
+    Empty,
+    /// Lost a CAS race with another consumer; retrying may succeed.
+    Retry,
+    /// Won an element.
+    Success(T),
+}
+
+/// Work-stealing deque (see module docs for the design and its relation to
+/// Chase–Lev).
+pub struct WsDeque<T> {
+    /// Front index; grows monotonically, consumed by CAS (`steal_front`).
+    top: CachePadded<AtomicIsize>,
+    /// Back index; moved only under `token`.
+    bottom: CachePadded<AtomicIsize>,
+    /// Current buffer generation. Written under `token` (grow), read by
+    /// thieves with `Acquire`.
+    buffer: AtomicPtr<Buffer<T>>,
+    /// One-bit token serializing back-end movers (push / pop_back /
+    /// steal_back / grow).
+    token: CachePadded<AtomicBool>,
+    /// Retired buffer generations, freed on `Drop` (stale thieves may still
+    /// hold pointers into them, so they stay mapped for the deque's life;
+    /// geometric growth bounds the waste at ~1× the final buffer).
+    retired: UnsafeCell<Vec<*mut Buffer<T>>>,
+    // -- telemetry (mirrors SpinLock::stats vocabulary) --------------------
+    token_acquisitions: AtomicU64,
+    token_contended: AtomicU64,
+    token_spins: AtomicU64,
+    cas_attempts: AtomicU64,
+    cas_retries: AtomicU64,
+}
+
+// SAFETY: `T: Send` values move between threads through the deque; all
+// shared mutable state is behind atomics, the back token, or (for
+// `retired`) the token-holder-only invariant.
+unsafe impl<T: Send> Send for WsDeque<T> {}
+unsafe impl<T: Send> Sync for WsDeque<T> {}
+
+const INITIAL_CAP: usize = 64;
+
+impl<T> Default for WsDeque<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WsDeque<T> {
+    pub fn new() -> Self {
+        WsDeque {
+            top: CachePadded::new(AtomicIsize::new(0)),
+            bottom: CachePadded::new(AtomicIsize::new(0)),
+            buffer: AtomicPtr::new(Buffer::alloc(INITIAL_CAP)),
+            token: CachePadded::new(AtomicBool::new(false)),
+            retired: UnsafeCell::new(Vec::new()),
+            token_acquisitions: AtomicU64::new(0),
+            token_contended: AtomicU64::new(0),
+            token_spins: AtomicU64::new(0),
+            cas_attempts: AtomicU64::new(0),
+            cas_retries: AtomicU64::new(0),
+        }
+    }
+
+    /// Elements currently in the deque (racy snapshot; never negative).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    // -- back token --------------------------------------------------------
+
+    #[inline]
+    fn acquire_token(&self) {
+        let mut spins: u64 = 0;
+        while self
+            .token
+            .compare_exchange_weak(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            spins += 1;
+            std::hint::spin_loop();
+            if spins % 64 == 0 {
+                std::thread::yield_now();
+            }
+        }
+        self.token_acquisitions.fetch_add(1, Ordering::Relaxed);
+        if spins > 0 {
+            self.token_contended.fetch_add(1, Ordering::Relaxed);
+            self.token_spins.fetch_add(spins, Ordering::Relaxed);
+        }
+    }
+
+    /// One-shot token grab. Mirrors `SpinLock::try_lock`: a successful grab
+    /// counts as an acquisition, a failed one counts nothing (the caller
+    /// skips ahead instead of spinning).
+    #[inline]
+    fn try_acquire_token(&self) -> bool {
+        let ok = self
+            .token
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok();
+        if ok {
+            self.token_acquisitions.fetch_add(1, Ordering::Relaxed);
+        }
+        ok
+    }
+
+    #[inline]
+    fn release_token(&self) {
+        self.token.store(false, Ordering::Release);
+    }
+
+    // -- operations --------------------------------------------------------
+
+    /// Push at the back. Constant-time; contends only with a concurrent
+    /// back-steal on the same deque.
+    pub fn push(&self, value: T) {
+        self.acquire_token();
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = self.buffer.load(Ordering::Relaxed);
+        // SAFETY: token held — sole back mover; `buf` is the live generation.
+        unsafe {
+            if (b - t) as usize >= (*buf).cap() {
+                buf = self.grow(buf, t, b);
+            }
+            (*buf).write(b, value);
+        }
+        self.bottom.store(b + 1, Ordering::Release);
+        self.release_token();
+    }
+
+    /// Grow to the next power of two, copying live indices `t..b`. Token
+    /// must be held. The old generation is retired, not freed: thieves may
+    /// hold its pointer; their top CAS validates anything they read from it.
+    unsafe fn grow(&self, old: *mut Buffer<T>, t: isize, b: isize) -> *mut Buffer<T> {
+        let new = Buffer::alloc((*old).cap() * 2);
+        for i in t..b {
+            let slot = (*(*old).slots[i as usize & (*old).mask].get()).as_ptr();
+            (*new).write(i, std::ptr::read(slot));
+        }
+        self.buffer.store(new, Ordering::Release);
+        // SAFETY: token held — only back movers touch `retired` until Drop.
+        (*self.retired.get()).push(old);
+        new
+    }
+
+    /// Pop the newest element from the back (the DBF thief's choice and a
+    /// LIFO/depth-first owner policy). Runs Chase–Lev's `pop_bottom`
+    /// protocol under the token, so it is safe from any thread.
+    pub fn pop_back(&self) -> Option<T> {
+        self.acquire_token();
+        let result = self.pop_back_locked();
+        self.release_token();
+        result
+    }
+
+    /// `pop_back` that refuses to wait: if the back token is busy (the
+    /// owner is mid-push or another thief is mid-steal), returns `None`
+    /// immediately so a DBF thief can move on to the next victim — the
+    /// same skip-ahead the seed got from `SpinLock::try_lock`.
+    pub fn steal_back(&self) -> Option<T> {
+        if !self.try_acquire_token() {
+            return None;
+        }
+        let result = self.pop_back_locked();
+        self.release_token();
+        result
+    }
+
+    /// Chase–Lev `pop_bottom`. The back token must be held.
+    fn pop_back_locked(&self) -> Option<T> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let buf = self.buffer.load(Ordering::Relaxed);
+        self.bottom.store(b, Ordering::Relaxed);
+        // The SeqCst fence orders the `bottom` store before the `top` load
+        // against the symmetric pair in `steal_front` (PPoPP'13 Fig. 1).
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            // SAFETY: index b is outside every front-thief's range (they
+            // only take indices < bottom == b); last-element case re-checked
+            // below by CAS.
+            let value = unsafe { (*buf).read(b) };
+            if t == b {
+                // Last element: race the front CAS for it.
+                if self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_err()
+                {
+                    // A front consumer won; our bitwise copy is dead.
+                    std::mem::forget(value);
+                    self.bottom.store(b + 1, Ordering::Relaxed);
+                    None
+                } else {
+                    self.bottom.store(b + 1, Ordering::Relaxed);
+                    Some(value)
+                }
+            } else {
+                Some(value)
+            }
+        } else {
+            // Empty: restore the canonical bottom.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// One attempt to take the oldest element from the front. Pure CAS —
+    /// no token, callable from any thread (the owner's FIFO pop and the
+    /// drain path both use it).
+    pub fn steal_front(&self) -> Steal<T> {
+        let t = self.top.load(Ordering::Acquire);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        self.cas_attempts.fetch_add(1, Ordering::Relaxed);
+        let buf = self.buffer.load(Ordering::Acquire);
+        // SAFETY: bitwise copy; ownership is established only by the CAS
+        // below, otherwise the copy is forgotten. The buffer generation we
+        // loaded holds index t's bits for as long as t may still win a CAS
+        // (retired generations stay mapped until Drop).
+        let value = unsafe { (*buf).read(t) };
+        if self
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+        {
+            Steal::Success(value)
+        } else {
+            std::mem::forget(value);
+            self.cas_retries.fetch_add(1, Ordering::Relaxed);
+            Steal::Retry
+        }
+    }
+
+    /// Take the oldest element, retrying lost races until success or empty.
+    /// Each lost CAS means another consumer succeeded — globally lock-free.
+    pub fn pop_front(&self) -> Option<T> {
+        loop {
+            match self.steal_front() {
+                Steal::Success(v) => return Some(v),
+                Steal::Empty => return None,
+                Steal::Retry => std::hint::spin_loop(),
+            }
+        }
+    }
+
+    // -- telemetry ---------------------------------------------------------
+
+    /// Back-token statistics: (acquisitions, contended acquisitions, spin
+    /// iterations) — same triple as [`SpinLock::stats`](crate::substrate::SpinLock::stats).
+    pub fn token_stats(&self) -> (u64, u64, u64) {
+        (
+            self.token_acquisitions.load(Ordering::Relaxed),
+            self.token_contended.load(Ordering::Relaxed),
+            self.token_spins.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Front-CAS statistics: (attempts, lost races).
+    pub fn cas_stats(&self) -> (u64, u64) {
+        (self.cas_attempts.load(Ordering::Relaxed), self.cas_retries.load(Ordering::Relaxed))
+    }
+
+    pub fn reset_stats(&self) {
+        self.token_acquisitions.store(0, Ordering::Relaxed);
+        self.token_contended.store(0, Ordering::Relaxed);
+        self.token_spins.store(0, Ordering::Relaxed);
+        self.cas_attempts.store(0, Ordering::Relaxed);
+        self.cas_retries.store(0, Ordering::Relaxed);
+    }
+}
+
+impl<T> Drop for WsDeque<T> {
+    fn drop(&mut self) {
+        // Exclusive access (`&mut self`): drop live elements, then free the
+        // current and retired generations.
+        while self.pop_back().is_some() {}
+        unsafe {
+            drop(Box::from_raw(self.buffer.load(Ordering::Relaxed)));
+            for p in (*self.retired.get()).drain(..) {
+                drop(Box::from_raw(p));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_from_front_lifo_from_back() {
+        let d: WsDeque<u64> = WsDeque::new();
+        d.push(1);
+        d.push(2);
+        d.push(3);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.pop_front(), Some(1), "front is FIFO");
+        assert_eq!(d.pop_back(), Some(3), "back is LIFO");
+        assert_eq!(d.pop_front(), Some(2));
+        assert_eq!(d.pop_front(), None);
+        assert_eq!(d.pop_back(), None);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let d: WsDeque<usize> = WsDeque::new();
+        let n = INITIAL_CAP * 4 + 3;
+        for i in 0..n {
+            d.push(i);
+        }
+        assert_eq!(d.len(), n);
+        for i in 0..n {
+            assert_eq!(d.pop_front(), Some(i), "order survives growth");
+        }
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn grow_interleaved_with_consumption_keeps_order() {
+        let d: WsDeque<usize> = WsDeque::new();
+        let mut expect_front = 0usize;
+        let mut next = 0usize;
+        for round in 0..8 {
+            for _ in 0..(INITIAL_CAP / 2 + round) {
+                d.push(next);
+                next += 1;
+            }
+            for _ in 0..(INITIAL_CAP / 4) {
+                assert_eq!(d.pop_front(), Some(expect_front));
+                expect_front += 1;
+            }
+        }
+        while let Some(v) = d.pop_front() {
+            assert_eq!(v, expect_front);
+            expect_front += 1;
+        }
+        assert_eq!(expect_front, next);
+    }
+
+    #[test]
+    fn drop_releases_remaining_elements() {
+        let marker = Arc::new(());
+        {
+            let d: WsDeque<Arc<()>> = WsDeque::new();
+            for _ in 0..100 {
+                d.push(Arc::clone(&marker));
+            }
+            // d dropped with 100 live elements.
+        }
+        assert_eq!(Arc::strong_count(&marker), 1, "no leak, no double-drop");
+    }
+
+    /// 1 owner pushes + back-pops, N thieves front-steal: every element is
+    /// consumed exactly once (no loss, no duplication).
+    #[test]
+    fn stress_front_stealers_vs_owner() {
+        const PER: u64 = 20_000;
+        const THIEVES: usize = 3;
+        let d: Arc<WsDeque<u64>> = Arc::new(WsDeque::new());
+        let done = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for _ in 0..THIEVES {
+            let d = Arc::clone(&d);
+            let done = Arc::clone(&done);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    match d.steal_front() {
+                        Steal::Success(v) => got.push(v),
+                        Steal::Retry => std::hint::spin_loop(),
+                        Steal::Empty => {
+                            if done.load(Ordering::Acquire) && d.is_empty() {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                got
+            }));
+        }
+        let mut owner_got = Vec::new();
+        for i in 0..PER {
+            d.push(i);
+            if i % 3 == 0 {
+                if let Some(v) = d.pop_back() {
+                    owner_got.push(v);
+                }
+            }
+        }
+        done.store(true, Ordering::Release);
+        let mut all: Vec<u64> = owner_got;
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        while let Some(v) = d.pop_front() {
+            all.push(v);
+        }
+        assert_eq!(all.len() as u64, PER, "every element consumed exactly once");
+        let set: HashSet<u64> = all.iter().copied().collect();
+        assert_eq!(set.len() as u64, PER, "no duplicates");
+    }
+
+    /// Mixed ends under load: thieves use the token'd back-steal while the
+    /// owner front-pops — the ReadyPools configuration.
+    #[test]
+    fn stress_back_stealers_vs_front_owner() {
+        const PER: u64 = 20_000;
+        const THIEVES: usize = 2;
+        let d: Arc<WsDeque<u64>> = Arc::new(WsDeque::new());
+        let done = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for _ in 0..THIEVES {
+            let d = Arc::clone(&d);
+            let done = Arc::clone(&done);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    match d.steal_back() {
+                        Some(v) => got.push(v),
+                        None => {
+                            if done.load(Ordering::Acquire) && d.is_empty() {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                got
+            }));
+        }
+        let mut owner_got = Vec::new();
+        for i in 0..PER {
+            d.push(i);
+            if i % 2 == 0 {
+                if let Some(v) = d.pop_front() {
+                    owner_got.push(v);
+                }
+            }
+        }
+        done.store(true, Ordering::Release);
+        let mut all: Vec<u64> = owner_got;
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        while let Some(v) = d.pop_front() {
+            all.push(v);
+        }
+        assert_eq!(all.len() as u64, PER);
+        let set: HashSet<u64> = all.iter().copied().collect();
+        assert_eq!(set.len() as u64, PER);
+    }
+
+    #[test]
+    fn telemetry_counts_operations() {
+        let d: WsDeque<u32> = WsDeque::new();
+        d.push(1);
+        d.push(2);
+        let _ = d.pop_front();
+        let (acq, _, _) = d.token_stats();
+        assert_eq!(acq, 2, "two back ops (pushes)");
+        let (attempts, retries) = d.cas_stats();
+        assert_eq!(attempts, 1);
+        assert_eq!(retries, 0, "uncontended front pop never retries");
+        d.reset_stats();
+        assert_eq!(d.token_stats(), (0, 0, 0));
+        assert_eq!(d.cas_stats(), (0, 0));
+    }
+
+    #[test]
+    fn sharded_counter_settles_across_threads() {
+        let c = Arc::new(ShardedCounter::new());
+        let mut handles = Vec::new();
+        for k in 0..4u64 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    c.inc();
+                }
+                if k % 2 == 0 {
+                    for _ in 0..10_000 {
+                        c.dec();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.exact(), 20_000);
+        assert_eq!(c.get(), 20_000);
+        c.reset();
+        assert_eq!(c.exact(), 0);
+    }
+
+    #[test]
+    fn sharded_counter_cross_thread_dec_clamps() {
+        // Push on one thread, pop on another: individual cells go negative,
+        // the sum stays correct and `get` never underflows.
+        let c = Arc::new(ShardedCounter::new());
+        c.add(5);
+        let c2 = Arc::clone(&c);
+        std::thread::spawn(move || {
+            c2.sub(5);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(c.exact(), 0);
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn cache_padded_is_big_and_transparent() {
+        assert!(std::mem::size_of::<CachePadded<u8>>() >= 128);
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), 128);
+        let p = CachePadded::new(7u32);
+        assert_eq!(*p, 7);
+        assert_eq!(p.into_inner(), 7);
+    }
+}

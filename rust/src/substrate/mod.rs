@@ -7,6 +7,7 @@
 //! reproducible stealing/workload generation, virtual-time newtypes for the
 //! discrete-event simulator and cheap atomic statistics.
 
+pub mod deque;
 pub mod spsc;
 pub mod spinlock;
 pub mod region;
@@ -14,6 +15,7 @@ pub mod rng;
 pub mod vtime;
 pub mod stats;
 
+pub use deque::{CachePadded, ShardedCounter, Steal, WsDeque};
 pub use region::{RegionKey, RegionSet};
 pub use rng::XorShift64;
 pub use spinlock::{SpinLock, SpinLockGuard};

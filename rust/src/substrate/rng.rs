@@ -17,14 +17,33 @@ impl XorShift64 {
         XorShift64 { state: seed.max(1).wrapping_mul(0x9E3779B97F4A7C15) | 1 }
     }
 
+    /// One xorshift64* step on a raw state word: `(next_state, output)`.
+    /// Lets callers keep the state in an atomic/`Cell` slot (e.g. the ready
+    /// pools' per-slot victim RNG) without constructing a struct per draw.
+    /// `state` must be nonzero (guaranteed for states produced by
+    /// [`XorShift64::new`]/[`XorShift64::state`]: xorshift never reaches 0
+    /// from a nonzero state).
     #[inline]
-    pub fn next_u64(&mut self) -> u64 {
-        let mut x = self.state;
+    pub fn step(state: u64) -> (u64, u64) {
+        debug_assert_ne!(state, 0, "xorshift64 zero fixed point");
+        let mut x = state;
         x ^= x >> 12;
         x ^= x << 25;
         x ^= x >> 27;
-        self.state = x;
-        x.wrapping_mul(0x2545F4914F6CDD1D)
+        (x, x.wrapping_mul(0x2545F4914F6CDD1D))
+    }
+
+    /// The raw state word (seed material for an external `step`-driven slot).
+    #[inline]
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let (state, out) = Self::step(self.state);
+        self.state = state;
+        out
     }
 
     /// Uniform in `[0, n)`. `n` must be > 0.
@@ -60,6 +79,17 @@ mod tests {
         let mut b = XorShift64::new(42);
         for _ in 0..1000 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn step_matches_struct_sequence() {
+        let mut r = XorShift64::new(42);
+        let mut s = XorShift64::new(42).state();
+        for _ in 0..100 {
+            let (next, out) = XorShift64::step(s);
+            s = next;
+            assert_eq!(out, r.next_u64());
         }
     }
 

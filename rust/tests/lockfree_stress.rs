@@ -1,0 +1,125 @@
+//! Multi-thread stress and A/B guards for the lock-free hot paths
+//! (Chase–Lev ready deques, striped dependence domains, sharded counters).
+//!
+//! The `contention_ab_*` test also regenerates `BENCH_contention.json` at
+//! the repository root on every tier-1 run, so the perf trajectory stays
+//! fresh without a separate bench invocation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use ddast::bench_harness::contention;
+use ddast::coordinator::{DdastParams, DepMode, RuntimeKind, TaskSystem};
+
+/// Satellite: 4-thread DDAST end-to-end — quiescence and the manager cap
+/// must hold under the sharded ready-count and the new deques.
+#[test]
+fn ddast_4_threads_quiescent_and_mgr_capped() {
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(4)
+        .params(DdastParams { max_ddast_threads: 2, max_spins: 2, max_ops_thread: 8, min_ready_tasks: 4 })
+        .build();
+    let hits = Arc::new(AtomicU64::new(0));
+    // A mix of 16 inout chains (dependence pressure, spread across domain
+    // stripes) and independent tasks (ready-pool pressure).
+    for i in 0..4_000u64 {
+        let h = Arc::clone(&hits);
+        ts.spawn(&[(i % 16, DepMode::Inout)], move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        if i % 16 == 0 {
+            let h = Arc::clone(&hits);
+            ts.spawn(&[], move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    }
+    ts.taskwait();
+    let rt = ts.runtime().clone();
+    assert_eq!(hits.load(Ordering::Relaxed), 4_000 + 250);
+    assert!(rt.quiescent(), "exact sharded-counter read settles to zero");
+    let peak = rt.stats.mgr_peak.get();
+    assert!(peak <= 2, "mgr_peak {peak} exceeded MAX_DDAST_THREADS=2");
+    ts.shutdown();
+    assert!(rt.quiescent());
+}
+
+/// All organizations drain a steal-heavy workload: one producer thread
+/// spawns everything, so the other workers live on the steal path.
+#[test]
+fn steal_heavy_workload_all_kinds() {
+    for kind in [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::GompLike] {
+        let ts = TaskSystem::builder().kind(kind).num_threads(4).build();
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..5_000u64 {
+            let h = Arc::clone(&hits);
+            ts.spawn(&[], move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        ts.taskwait();
+        assert_eq!(hits.load(Ordering::Relaxed), 5_000, "{kind:?}");
+        let rt = ts.runtime().clone();
+        assert!(rt.quiescent(), "{kind:?}");
+        ts.shutdown();
+    }
+}
+
+/// The contention A/B runs under tier-1 and records its numbers. The hard
+/// ≥2x acceptance ratio is checked by the bench on a real multicore box;
+/// here (possibly a 1-core CI container) we assert the structural
+/// invariants that cannot be timing-dependent, and refresh the JSON.
+#[test]
+fn contention_ab_smoke_and_json() {
+    let report = contention::run_ab(4, 5_000);
+
+    // Both sides completed identical work: every produced task was consumed
+    // exactly once, and every domain op acquired some lock/shard.
+    assert!(report.ready_pools.old.acquisitions > 0);
+    assert!(
+        report.ready_pools.new.cas_attempts > 0,
+        "new pools pop through the front CAS, not a lock"
+    );
+    // submit+finish per op, 4 threads x 5k ops, on both sides.
+    assert!(report.dep_domain.old.acquisitions >= 2 * 4 * 5_000);
+    assert!(report.dep_domain.new.acquisitions >= 2 * 4 * 5_000);
+
+    // The striped domain's drill touches disjoint regions per thread: it
+    // must not contend more than the single lock (the `.max(100)` absorbs
+    // scheduler noise on near-serialized 1-core runners; a broken striping
+    // scheme would show thousands of contended events here).
+    assert!(
+        report.dep_domain.new.contended_events()
+            <= report.dep_domain.old.contended_events().max(100),
+        "striping must not add contention: old={} new={}",
+        report.dep_domain.old.contended_events(),
+        report.dep_domain.new.contended_events()
+    );
+
+    let json = contention::to_json(&report, "cargo test contention_ab_smoke_and_json");
+    assert!(json.contains("\"contended_reduction\""));
+    let path = contention::default_json_path();
+    if contention::write_json(&path, &report, "cargo test contention_ab_smoke_and_json") {
+        eprintln!("refreshed {}", path.display());
+    }
+    eprintln!("{}", contention::render(&report));
+}
+
+/// Sharded ready gauge: hammer push/get from many threads through the
+/// public runtime API and verify the exact read settles (regression guard
+/// for torn relaxed sweeps feeding `quiescent`).
+#[test]
+fn sharded_gauge_settles_under_churn() {
+    for _ in 0..20 {
+        let ts = TaskSystem::builder().kind(RuntimeKind::Ddast).num_threads(3).build();
+        for i in 0..300u64 {
+            ts.spawn(&[(i % 5, DepMode::Inout)], || {});
+        }
+        ts.taskwait();
+        let rt = ts.runtime().clone();
+        assert!(rt.quiescent());
+        assert_eq!(rt.ready.ready_count_exact(), 0);
+        ts.shutdown();
+    }
+}
