@@ -18,19 +18,34 @@ fn main() {
     println!("== micro_structures: real-structure op costs ==\n");
     println!("{}", calibrate::report());
 
-    // Old-vs-new contention A/B: the seed's locked ready pools and
-    // single-lock dependence domain vs the Chase–Lev deques and striped
-    // domains, on identical multi-threaded drills.
+    // Old-vs-new contention A/B: the seed's locked structures (ready
+    // pools, dependence domain, dispatcher registry, trace buffers) vs the
+    // lock-free replacements, on identical multi-threaded drills — plus
+    // the request-plane sparse-traffic sweep at three simulated worker
+    // counts.
     println!("== contention A/B: seed locked structures vs lock-free ==\n");
+    let mut reports = Vec::new();
     for threads in [2usize, 4, 8] {
         let report = contention::run_ab(threads, 50_000);
         println!("{}", contention::render(&report));
-        if threads == 4 {
-            let path = contention::default_json_path();
-            if contention::write_json(&path, &report, "cargo bench --bench micro_structures") {
-                println!("wrote {}\n", path.display());
-            }
-        }
+        reports.push(report);
+    }
+    println!("== request-plane sweep A/B: full sweep vs signal directory ==\n");
+    let mut sweeps = Vec::new();
+    for workers in [8usize, 32, 128] {
+        let sweep = contention::run_sweep(workers, 20_000);
+        print!("{}", contention::render_sweep(&sweep));
+        sweeps.push(sweep);
+    }
+    println!();
+    let path = contention::default_json_path();
+    if contention::write_suite_json(
+        &path,
+        &reports,
+        &sweeps,
+        "cargo bench --bench micro_structures",
+    ) {
+        println!("wrote {}\n", path.display());
     }
 
     let mut b = Bencher::new(5, 1);

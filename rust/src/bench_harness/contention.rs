@@ -2,11 +2,15 @@
 //!
 //! The seed's shared structures (one `SpinLock<VecDeque>` per ready pool,
 //! one spinlock per dependence domain) were replaced by Chase–Lev-style
-//! deques and striped domains (EXPERIMENTS.md §Lock-free hot paths). This
-//! module runs the *same* multi-threaded workload against the seed-era
-//! structures ([`LockedReadyPools`], `DepDomain::with_stripes(1)`) and the
-//! new ones ([`ReadyPools`], `DepDomain::new()`), and reports contended
-//! acquisitions / CAS retries side by side — so the win is measured, not
+//! deques and striped domains (EXPERIMENTS.md §Lock-free hot paths), and
+//! the request plane's remaining shared touches — the all-workers queue
+//! sweep, the dispatcher's locked registry, the tracer's mutexed buffers —
+//! by the signal directory, an RCU snapshot and wait-free rings
+//! (EXPERIMENTS.md §Request plane). This module runs the *same* workload
+//! against the retained seed-era structures ([`LockedReadyPools`],
+//! `DepDomain::with_stripes(1)`, a full queue sweep, [`LockedDispatcher`],
+//! [`LockedTracer`]) and the new ones, and reports contended acquisitions /
+//! CAS retries / token touches side by side — so the win is measured, not
 //! asserted. `micro_structures` and the `contention_ab` tier-1 test both
 //! drive it and serialize the result to `BENCH_contention.json` for the
 //! perf trajectory of future PRs.
@@ -17,7 +21,10 @@ use std::time::Instant;
 
 use crate::coordinator::dep::dep_out;
 use crate::coordinator::depgraph::DepDomain;
+use crate::coordinator::dispatcher::{Dispatcher, LockedDispatcher};
+use crate::coordinator::messages::QueueSystem;
 use crate::coordinator::ready::{LockedReadyPools, PoolContention, ReadyPools};
+use crate::coordinator::trace::{LockedTracer, TraceKind, Tracer};
 use crate::coordinator::wd::{TaskId, Wd, WdState};
 
 /// One side of an A/B measurement.
@@ -87,13 +94,29 @@ impl AbReport {
     }
 }
 
-/// The complete contention A/B (both hot paths) at one thread count.
+/// The complete contention A/B (all instrumented hot paths) at one thread
+/// count.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ContentionReport {
     pub threads: usize,
     pub ops_per_thread: u64,
     pub ready_pools: AbReport,
     pub dep_domain: AbReport,
+    /// Locked-registry vs RCU-snapshot dispatcher poll.
+    pub dispatcher_poll: AbReport,
+    /// Mutexed buffers vs wait-free rings trace append.
+    pub trace_append: AbReport,
+}
+
+/// The sparse-traffic request-plane sweep A/B at one simulated worker
+/// count: old full queue sweep vs signal-directory scan. `acquisitions`
+/// counts queue-token grabs — the metric that goes from O(workers) to
+/// O(dirty) per round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepReport {
+    pub workers: usize,
+    pub rounds: u64,
+    pub ab: AbReport,
 }
 
 fn mk_task(id: u64) -> Arc<Wd> {
@@ -209,13 +232,179 @@ pub fn dep_domain_ab(threads: usize, ops: u64) -> AbReport {
     AbReport { old: old_report, new: new_report }
 }
 
-/// Run both A/Bs.
+/// Dispatcher-poll drill: `threads` threads each poll `ops` times against
+/// a registry of three no-op callbacks (the DDAST + autotuner shape). Old:
+/// the seed's `SpinLock<Vec>` registry, snapshot-cloned per poll. New: the
+/// RCU snapshot, one acquire load per poll.
+pub fn dispatcher_poll_ab(threads: usize, ops: u64) -> AbReport {
+    fn drill<P: Fn(usize) + Sync>(threads: usize, ops: u64, poll: P) -> u64 {
+        let poll = &poll;
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                s.spawn(move || {
+                    for _ in 0..ops {
+                        poll(t);
+                    }
+                });
+            }
+        });
+        t0.elapsed().as_nanos() as u64
+    }
+
+    let old = LockedDispatcher::new();
+    old.register("a", Box::new(|_| false));
+    old.register("b", Box::new(|_| false));
+    old.register("c", Box::new(|_| true));
+    let elapsed = drill(threads, ops, |t| {
+        old.poll_idle(t);
+    });
+    let old_report = SideReport::from_lock_stats(old.lock_stats(), elapsed);
+
+    let new = Dispatcher::new();
+    new.register("a", Box::new(|_| false));
+    new.register("b", Box::new(|_| false));
+    new.register("c", Box::new(|_| true));
+    let elapsed = drill(threads, ops, |t| {
+        new.poll_idle(t);
+    });
+    // The RCU poll path takes no lock and loses no CAS races (reads are
+    // plain loads); only the wall clock and the zeroed counters speak.
+    let new_report = SideReport { elapsed_ns: elapsed, ..SideReport::default() };
+
+    AbReport { old: old_report, new: new_report }
+}
+
+/// Trace-append drill: `threads` threads each record `ops` events into
+/// their own slot. Old: the seed's `Mutex<Vec>` per buffer — one lock
+/// round-trip per event even uncontended. New: wait-free single-writer
+/// rings. `acquisitions` on the old side counts the per-event locks.
+pub fn trace_append_ab(threads: usize, ops: u64) -> AbReport {
+    let old = LockedTracer::new(threads);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let old = &old;
+            s.spawn(move || {
+                for i in 0..ops {
+                    old.record(t, TraceKind::InGraph(i));
+                }
+            });
+        }
+    });
+    let old_report = SideReport {
+        acquisitions: threads as u64 * ops, // one Mutex lock per record
+        elapsed_ns: t0.elapsed().as_nanos() as u64,
+        ..SideReport::default()
+    };
+    assert_eq!(old.merged().len() as u64, threads as u64 * ops);
+
+    let new = Tracer::with_capacity(threads, ops as usize);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let new = &new;
+            s.spawn(move || {
+                for i in 0..ops {
+                    new.record(t, TraceKind::InGraph(i));
+                }
+            });
+        }
+    });
+    let new_report = SideReport {
+        elapsed_ns: t0.elapsed().as_nanos() as u64,
+        ..SideReport::default()
+    };
+    assert_eq!(new.merged().len() as u64, threads as u64 * ops, "no event lost");
+    assert_eq!(new.dropped(), 0);
+
+    AbReport { old: old_report, new: new_report }
+}
+
+/// Drain one worker's queue pair (both sweep variants must do identical
+/// per-worker work or the A/B acquisition counts stop being comparable).
+fn drain_pair(qs: &QueueSystem, worker: usize) -> u64 {
+    let wq = &qs.workers[worker];
+    let mut processed = 0u64;
+    if let Some(mut g) = wq.submit.try_acquire() {
+        while g.pop().is_some() {
+            qs.message_processed();
+            processed += 1;
+        }
+    }
+    if let Some(mut g) = wq.done.try_acquire() {
+        while g.pop().is_some() {
+            qs.message_processed();
+            processed += 1;
+        }
+    }
+    processed
+}
+
+/// One old-style manager round: try-acquire **every** worker's queue pair
+/// (the pre-refactor DDAST sweep, Listing 2 lines 5–6 over all threads).
+fn sweep_all(qs: &QueueSystem) -> u64 {
+    (0..qs.num_workers()).map(|w| drain_pair(qs, w)).sum()
+}
+
+/// One directory-driven manager round: claim and drain only raised workers.
+fn sweep_signaled(qs: &QueueSystem) -> u64 {
+    qs.signals().scan_rotor().map(|w| drain_pair(qs, w)).sum()
+}
+
+/// Sparse-traffic sweep drill: `workers` queue-pair slots, but only two
+/// slots ever produce (alternating, a burst every fourth round) — the
+/// "one worker is producing, the manager still sweeps everyone" pathology.
+/// Deterministic single-thread interleaving so the acquisition counts are
+/// exact: old side = `2 * workers` token grabs per round regardless of
+/// traffic; new side = grabs only on claimed (dirty) workers.
+pub fn signal_sweep_ab(workers: usize, rounds: u64) -> AbReport {
+    fn run(workers: usize, rounds: u64, new_side: bool) -> (SideReport, u64) {
+        let qs = QueueSystem::new(workers);
+        let t0 = Instant::now();
+        let mut processed = 0u64;
+        for r in 0..rounds {
+            if r % 4 == 0 {
+                let producer = (((r / 4) as usize) % 2).min(workers - 1);
+                for b in 0..3u64 {
+                    qs.push_submit(producer, mk_task(r * 8 + b + 1));
+                }
+            }
+            processed += if new_side { sweep_signaled(&qs) } else { sweep_all(&qs) };
+        }
+        let acq: u64 = qs
+            .workers
+            .iter()
+            .map(|wq| wq.submit.acquire_count() + wq.done.acquire_count())
+            .sum();
+        let report = SideReport {
+            acquisitions: acq,
+            elapsed_ns: t0.elapsed().as_nanos() as u64,
+            ..SideReport::default()
+        };
+        (report, processed)
+    }
+
+    let (old, old_processed) = run(workers, rounds, false);
+    let (new, new_processed) = run(workers, rounds, true);
+    assert_eq!(old_processed, new_processed, "both sweeps drain the same traffic");
+    AbReport { old, new }
+}
+
+/// Run the sparse-traffic sweep A/B at one simulated worker count.
+pub fn run_sweep(workers: usize, rounds: u64) -> SweepReport {
+    SweepReport { workers, rounds, ab: signal_sweep_ab(workers, rounds) }
+}
+
+/// Run all per-thread-count A/Bs.
 pub fn run_ab(threads: usize, ops_per_thread: u64) -> ContentionReport {
     ContentionReport {
         threads,
         ops_per_thread,
         ready_pools: ready_pools_ab(threads, ops_per_thread),
         dep_domain: dep_domain_ab(threads, ops_per_thread),
+        dispatcher_poll: dispatcher_poll_ab(threads, ops_per_thread),
+        trace_append: trace_append_ab(threads, ops_per_thread),
     }
 }
 
@@ -245,18 +434,57 @@ fn ab_json(ab: &AbReport) -> String {
     )
 }
 
-/// Serialize the report (hand-rolled: the offline environment has no serde).
-/// `contended_reduction` is `null` when the new side recorded zero
-/// contended events (an infinite improvement).
+/// Serialize one report (hand-rolled: the offline environment has no
+/// serde). Delegates to the same serializer the suite uses, so the two can
+/// never drift. `contended_reduction` is `null` when the new side recorded
+/// zero contended events (an infinite improvement).
 pub fn to_json(r: &ContentionReport, generated_by: &str) -> String {
     format!(
-        "{{\n  \"generated_by\": \"{}\",\n  \"threads\": {},\n  \"ops_per_thread\": {},\n  \
-         \"ready_pools\": {},\n  \"dep_domain\": {}\n}}\n",
+        "{{\n  \"generated_by\": \"{}\",\n  \"report\": {}\n}}\n",
         generated_by,
+        report_json_inline(r)
+    )
+}
+
+fn report_json_inline(r: &ContentionReport) -> String {
+    format!(
+        "{{\"threads\": {}, \"ops_per_thread\": {}, \"ready_pools\": {}, \
+         \"dep_domain\": {}, \"dispatcher_poll\": {}, \"trace_append\": {}}}",
         r.threads,
         r.ops_per_thread,
         ab_json(&r.ready_pools),
-        ab_json(&r.dep_domain)
+        ab_json(&r.dep_domain),
+        ab_json(&r.dispatcher_poll),
+        ab_json(&r.trace_append)
+    )
+}
+
+fn sweep_json_inline(s: &SweepReport) -> String {
+    format!(
+        "{{\"workers\": {}, \"rounds\": {}, \"ab\": {}}}",
+        s.workers,
+        s.rounds,
+        ab_json(&s.ab)
+    )
+}
+
+/// Serialize the full suite: per-thread-count reports plus the
+/// sparse-traffic sweep series — the shape `BENCH_contention.json` carries.
+pub fn suite_to_json(
+    reports: &[ContentionReport],
+    sweeps: &[SweepReport],
+    generated_by: &str,
+) -> String {
+    let reports_json: Vec<String> =
+        reports.iter().map(|r| format!("    {}", report_json_inline(r))).collect();
+    let sweeps_json: Vec<String> =
+        sweeps.iter().map(|s| format!("    {}", sweep_json_inline(s))).collect();
+    format!(
+        "{{\n  \"generated_by\": \"{}\",\n  \"reports\": [\n{}\n  ],\n  \
+         \"signal_sweep\": [\n{}\n  ]\n}}\n",
+        generated_by,
+        reports_json.join(",\n"),
+        sweeps_json.join(",\n")
     )
 }
 
@@ -276,6 +504,10 @@ pub fn render(r: &ContentionReport) -> String {
         ("ready: ws-deque", &r.ready_pools.new),
         ("domain: 1 stripe", &r.dep_domain.old),
         ("domain: striped", &r.dep_domain.new),
+        ("dispatch: locked", &r.dispatcher_poll.old),
+        ("dispatch: rcu", &r.dispatcher_poll.new),
+        ("trace: mutexed", &r.trace_append.old),
+        ("trace: ring", &r.trace_append.new),
     ] {
         out.push_str(&format!(
             "{:<22}{:>14}{:>12}{:>12}{:>12}{:>12.2}\n",
@@ -303,15 +535,35 @@ fn fmt_reduction(x: f64) -> String {
     }
 }
 
+/// Human-readable line for one sweep A/B.
+pub fn render_sweep(s: &SweepReport) -> String {
+    format!(
+        "signal sweep — {:>4} simulated workers, {} rounds: queue-token grabs \
+         old {} vs new {} ({:.1}x fewer), {:.2} ms vs {:.2} ms\n",
+        s.workers,
+        s.rounds,
+        s.ab.old.acquisitions,
+        s.ab.new.acquisitions,
+        s.ab.old.acquisitions as f64 / s.ab.new.acquisitions.max(1) as f64,
+        s.ab.old.elapsed_ns as f64 / 1e6,
+        s.ab.new.elapsed_ns as f64 / 1e6
+    )
+}
+
 /// Default output path: the repository root, next to EXPERIMENTS.md.
 pub fn default_json_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_contention.json")
 }
 
-/// Write the report to `path` (best-effort; benches must not fail the run
+/// Write the suite to `path` (best-effort; benches must not fail the run
 /// over a read-only checkout).
-pub fn write_json(path: &std::path::Path, r: &ContentionReport, generated_by: &str) -> bool {
-    std::fs::write(path, to_json(r, generated_by)).is_ok()
+pub fn write_suite_json(
+    path: &std::path::Path,
+    reports: &[ContentionReport],
+    sweeps: &[SweepReport],
+    generated_by: &str,
+) -> bool {
+    std::fs::write(path, suite_to_json(reports, sweeps, generated_by)).is_ok()
 }
 
 #[cfg(test)]
@@ -338,11 +590,39 @@ mod tests {
             "\"threads\"",
             "\"ready_pools\"",
             "\"dep_domain\"",
+            "\"dispatcher_poll\"",
+            "\"trace_append\"",
             "\"contended_reduction\"",
             "\"cas_retries\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
         assert!(render(&r).contains("reduction in contended events"));
+    }
+
+    #[test]
+    fn suite_json_shape() {
+        let reports = [run_ab(1, 20), run_ab(2, 20)];
+        let sweeps = [run_sweep(8, 40), run_sweep(32, 40)];
+        let j = suite_to_json(&reports, &sweeps, "unit test");
+        for key in ["\"reports\"", "\"signal_sweep\"", "\"workers\": 32", "\"threads\": 2"] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert!(render_sweep(&sweeps[0]).contains("simulated workers"));
+    }
+
+    #[test]
+    fn sparse_sweep_touches_only_dirty_queues() {
+        // 64 simulated workers, 2 producers: the directory-driven sweep
+        // must grab far fewer queue tokens than the full sweep (which pays
+        // 2 * workers per round no matter what).
+        let s = run_sweep(64, 200);
+        assert_eq!(s.ab.old.acquisitions, 2 * 64 * 200, "old sweep is O(workers)");
+        assert!(
+            s.ab.new.acquisitions < s.ab.old.acquisitions / 10,
+            "directory sweep should be O(dirty): old={} new={}",
+            s.ab.old.acquisitions,
+            s.ab.new.acquisitions
+        );
     }
 }

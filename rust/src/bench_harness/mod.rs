@@ -6,5 +6,5 @@ pub mod contention;
 pub mod figures;
 
 pub use bencher::{Bencher, Measurement};
-pub use contention::{AbReport, ContentionReport, SideReport};
+pub use contention::{AbReport, ContentionReport, SideReport, SweepReport};
 pub use figures::{Bench, FigureOpts};

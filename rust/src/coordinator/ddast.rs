@@ -55,7 +55,24 @@ impl Default for DdastParams {
     }
 }
 
-/// The DDAST callback — a faithful transcription of the paper's Listing 2.
+/// The DDAST callback — the paper's Listing 2 with one structural change:
+/// instead of sweeping **all** worker queue pairs per round (lines 5–6
+/// iterate every thread), the manager walks the
+/// [`SignalDirectory`](crate::substrate::SignalDirectory) and visits only
+/// workers that actually enqueued requests since the last visit. The
+/// Listing 2 semantics are preserved:
+///
+/// * `MAX_DDAST_THREADS` gate on entry (line 1, CAS so the cap is exact);
+/// * per-worker `MAX_OPS_THREAD` budget, Submit before Done (lines 8–20) —
+///   a worker left with messages (budget exhausted, or its queue token held
+///   by another manager) is re-raised so the next round revisits it;
+/// * `MIN_READY_TASKS` early exit checked before each worker (line 7) — a
+///   claimed-but-unvisited worker keeps its directory mark;
+/// * spin budget reset on progress, decrement on an empty round, exit at
+///   zero (lines 24–25).
+///
+/// The directory's rotor starts successive scans at successive workers, so
+/// one noisy producer cannot starve the others of manager attention.
 ///
 /// Returns `true` if at least one message was satisfied (the Functionality
 /// Dispatcher uses this for its idle accounting).
@@ -83,18 +100,27 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
     rt.stats.mgr_activations.inc();
     rt.trace_manager_enter(me);
 
+    let dir = rt.queues.signals();
     let mut spins = p.max_spins;
     let mut total_processed: u64 = 0;
-    // Listing 2 lines 4..25.
+    // Listing 2 lines 4..25, with the line 5–6 all-workers sweep replaced
+    // by a claiming scan over the signal directory.
     loop {
         let mut total_cnt: usize = 0;
-        for w in 0..rt.queues.num_workers() {
+        let mut scan = dir.scan_rotor();
+        loop {
             // Line 7: early exit when enough parallelism is uncovered. The
             // sharded gauge's relaxed sweep is fine here — this is the hot
             // inner check and MIN_READY_TASKS is a heuristic threshold.
+            // Checked *before* claiming, so unvisited workers keep their
+            // directory marks.
             if rt.ready.ready_count() >= p.min_ready_tasks {
                 break;
             }
+            let w = match scan.next() {
+                Some(w) => w,
+                None => break,
+            };
             let wq = &rt.queues.workers[w];
             // Lines 8–16: Submit Task Messages first (prioritized), under
             // the exclusive consumer token — one manager per submit queue.
@@ -123,6 +149,12 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
                         }
                     }
                 }
+            }
+            // Budget exhausted — or the queue token was held by another
+            // manager — with messages left: hand the worker back to the
+            // directory so a later round revisits it.
+            if wq.pending() > 0 {
+                dir.raise(w);
             }
             total_cnt += cnt;
         }

@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::wd::Wd;
-use crate::substrate::{Counter, SpscQueue};
+use crate::substrate::{ShardedCounter, SignalDirectory, SpscQueue};
 
 /// Request to insert a created task into the dependence graph.
 #[derive(Debug)]
@@ -56,20 +56,28 @@ impl WorkerQueues {
     }
 }
 
-/// All workers' queues plus a global pending gauge for quiescence checks.
+/// All workers' queues, the work-signal directory managers scan instead of
+/// sweeping every queue pair, and a sharded pending gauge for quiescence.
 pub struct QueueSystem {
     pub workers: Vec<WorkerQueues>,
     /// Messages pushed and not yet fully *processed* (not merely popped):
     /// the counter is decremented after the graph mutation completes, so
     /// `pending() == 0` means the runtime structures are up to date.
-    pending: Counter,
+    /// Sharded: every push/process touches only the calling thread's cell
+    /// (the seed's single `Counter` was a global RMW per message); gauges
+    /// read the relaxed sweep, `quiescent()` the exact fallback.
+    pending: ShardedCounter,
+    /// Which workers have unclaimed requests — the DDAST sweep walks this
+    /// instead of all queue pairs (O(dirty), not O(workers)).
+    signals: SignalDirectory,
 }
 
 impl QueueSystem {
     pub fn new(num_workers: usize) -> Self {
         QueueSystem {
             workers: (0..num_workers).map(|_| WorkerQueues::new()).collect(),
-            pending: Counter::new(),
+            pending: ShardedCounter::new(),
+            signals: SignalDirectory::new(num_workers.max(1)),
         }
     }
 
@@ -78,16 +86,26 @@ impl QueueSystem {
         self.workers.len()
     }
 
+    /// The work-signal directory (manager-side scans, re-raises).
+    #[inline]
+    pub fn signals(&self) -> &SignalDirectory {
+        &self.signals
+    }
+
     /// Push a Submit Task Message from `worker` (its own queue only).
+    /// Enqueue first, raise second — the directory's no-lost-wakeup
+    /// protocol requires the message to precede its signal.
     pub fn push_submit(&self, worker: usize, task: Arc<Wd>) {
         self.pending.inc();
         self.workers[worker].submit.push(SubmitTaskMsg { task });
+        self.signals.raise(worker);
     }
 
     /// Push a Done Task Message from `worker`.
     pub fn push_done(&self, worker: usize, task: Arc<Wd>) {
         self.pending.inc();
         self.workers[worker].done.push(DoneTaskMsg { task, worker });
+        self.signals.raise(worker);
     }
 
     /// Mark one popped message as fully processed.
@@ -96,10 +114,40 @@ impl QueueSystem {
         self.pending.dec();
     }
 
-    /// Messages pushed but not yet fully processed.
+    /// Messages pushed but not yet fully processed (relaxed sweep — gauge
+    /// strength, may be transiently off while pushes are in flight).
     #[inline]
     pub fn pending(&self) -> u64 {
         self.pending.get()
+    }
+
+    /// Exact pending read for decisions that must not act on a torn sweep
+    /// (`quiescent()`).
+    #[inline]
+    pub fn pending_exact(&self) -> u64 {
+        self.pending.exact()
+    }
+
+    /// Quiescence cross-check against the directory: no worker may hold a
+    /// raised signal *and* queued messages. Stale raises (the producer's
+    /// raise landed just after the draining manager's claim) are reclaimed
+    /// here — with the claim-then-recheck protocol — so shutdown converges.
+    pub fn signals_quiescent(&self) -> bool {
+        let mut from = 0;
+        while let Some(w) = self.signals.first_raised_from(from) {
+            if self.workers[w].pending() > 0 {
+                return false;
+            }
+            self.signals.try_claim(w);
+            if self.workers[w].pending() > 0 {
+                // A message raced in behind our emptiness check: hand the
+                // signal back and report non-quiescent.
+                self.signals.raise(w);
+                return false;
+            }
+            from = w + 1;
+        }
+        true
     }
 }
 
@@ -148,6 +196,25 @@ mod tests {
         let mut g = qs.workers[2].done.try_acquire().unwrap();
         let m = g.pop().unwrap();
         assert_eq!(m.worker, 2);
+    }
+
+    #[test]
+    fn pushes_raise_signals_and_quiescence_cross_checks() {
+        let qs = QueueSystem::new(4);
+        assert!(qs.signals_quiescent());
+        qs.push_submit(2, mk(1));
+        assert!(qs.signals().is_raised(2));
+        assert!(!qs.signals_quiescent(), "queued message blocks quiescence");
+        // Drain + process: the raised flag becomes stale and the
+        // cross-check self-heals it.
+        {
+            let mut g = qs.workers[2].submit.try_acquire().unwrap();
+            g.pop().unwrap();
+        }
+        qs.message_processed();
+        assert!(qs.signals_quiescent());
+        assert!(!qs.signals().is_raised(2), "stale raise reclaimed");
+        assert_eq!(qs.pending_exact(), 0);
     }
 
     #[test]

@@ -22,8 +22,8 @@ pub use autotune::{AutoTuner, TunableParams};
 pub use ddast::DdastParams;
 pub use dep::{dep_in, dep_inout, dep_out, DepMode, Dependence};
 pub use depgraph::DepDomain;
-pub use dispatcher::Dispatcher;
+pub use dispatcher::{Dispatcher, LockedDispatcher};
 pub use pool::{RuntimeKind, RuntimeShared};
 pub use ready::{LockedReadyPools, PoolContention, ReadyPools};
-pub use trace::{ThreadState, TraceEvent, TraceKind, Tracer};
+pub use trace::{LockedTracer, ThreadState, TraceEvent, TraceKind, Tracer};
 pub use wd::{TaskId, Wd, WdState};

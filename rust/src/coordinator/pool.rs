@@ -130,6 +130,12 @@ impl RuntimeShared {
         } else {
             ReadyPools::new(num_threads, seed)
         };
+        // Trace rings are sized by the *actual* number of recording
+        // contexts: the centralized design's DAS thread records from an
+        // extra slot beyond the workers. (The seed's tracer wrapped that
+        // slot onto worker 0's buffer via `worker % buffers.len()`,
+        // silently merging two threads' streams.)
+        let trace_slots = num_threads + usize::from(kind == RuntimeKind::CentralDast);
         Arc::new(RuntimeShared {
             kind,
             params,
@@ -141,7 +147,7 @@ impl RuntimeShared {
             root: Wd::root(),
             mgr_count: AtomicUsize::new(0),
             stats: RtStats::default(),
-            tracer: if tracing { Some(Tracer::new(num_threads)) } else { None },
+            tracer: if tracing { Some(Tracer::new(trace_slots)) } else { None },
             ranged_deps,
             shutdown: AtomicBool::new(false),
             next_task_id: AtomicU64::new(1),
@@ -202,13 +208,16 @@ impl RuntimeShared {
         self.shutdown.store(true, Ordering::Release);
     }
 
-    /// All work done and all messages processed? Uses the sharded gauge's
-    /// exact-read fallback — a torn relaxed sweep must not let a worker
-    /// exit its loop while a ready task is still queued.
+    /// All work done and all messages processed? Uses the sharded gauges'
+    /// exact-read fallbacks — a torn relaxed sweep must not let a worker
+    /// exit its loop while a ready task is still queued — and cross-checks
+    /// the exact pending gauge against the work-signal directory ("no dirty
+    /// workers"), reclaiming stale raises along the way.
     pub fn quiescent(&self) -> bool {
         self.stats.tasks_outstanding.get() == 0
-            && self.queues.pending() == 0
+            && self.queues.pending_exact() == 0
             && self.ready.ready_count_exact() == 0
+            && self.queues.signals_quiescent()
     }
 
     // ---- tracing helpers -------------------------------------------------
@@ -412,6 +421,16 @@ impl RuntimeShared {
             let mut processed: u64 = 0;
             for w in 0..self.queues.num_workers() {
                 let wq = &self.queues.workers[w];
+                // The DAS thread keeps its historical full sweep (the
+                // design being compared against predates the directory) but
+                // still consumes raised signals so the directory stays
+                // consistent for the quiescence cross-check. Guarded by a
+                // plain load: the spin loop must not pay two shared RMWs
+                // per worker per sweep when nothing is raised.
+                let signals = self.queues.signals();
+                if signals.is_raised(w) {
+                    signals.try_claim(w);
+                }
                 if let Some(mut g) = wq.submit.try_acquire() {
                     while let Some(m) = g.pop() {
                         self.process_submit(worker_slot, m.task);

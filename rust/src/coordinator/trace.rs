@@ -5,9 +5,36 @@
 //! (Fig 13a/13c/15b). Per-thread buffers keep recording off the hot path's
 //! shared state; `dump_csv` and the ASCII renderers in `bench_harness`
 //! consume the merged stream.
+//!
+//! ## Wait-free rings
+//!
+//! The seed kept each thread's buffer in a `Mutex<Vec>` — one lock
+//! round-trip (and occasionally a reallocation) per event, on the task
+//! start/end hot path. Each buffer is now a [`TraceRing`]: an append-only
+//! segmented buffer owned by one recording thread. The owner writes the
+//! slot and publishes it with a single release store of the ring's length;
+//! `merged`/`dump_csv` read the published length with an acquire load and
+//! walk the prefix. A full ring **drops** the event and counts it
+//! ([`Tracer::dropped`]) instead of blocking or reallocating — tracing must
+//! never add a lock or an unbounded stall to the runtime being measured.
+//!
+//! Rings are sized by the *actual* number of recording contexts (workers
+//! plus the CentralDast DAS slot). The seed indexed buffers with
+//! `worker % buffers.len()`, which silently merged the DAS thread's stream
+//! into worker 0's; `record` now debug-asserts the slot is in range and, in
+//! release builds, accounts an out-of-range event as dropped rather than
+//! corrupting another thread's stream.
+//!
+//! The seed implementation survives as [`LockedTracer`] for the
+//! `trace_append` contention A/B.
 
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::substrate::CachePadded;
 
 /// What a thread is doing (Fig 13's color legend).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -42,18 +69,167 @@ pub enum TraceKind {
     TaskEnd { worker: usize, id: u64 },
 }
 
+// The rings store events as `MaybeUninit` and free segments without
+// running destructors; that is only sound while events own no heap.
+const _: () = assert!(!std::mem::needs_drop::<TraceEvent>());
+
+/// Events per ring segment (~160 KiB of events; segments allocate lazily).
+const SEG_EVENTS: usize = 4096;
+
+/// Default per-thread ring capacity: 128 segments ≈ 524k events.
+const DEFAULT_RING_CAP: usize = SEG_EVENTS * 128;
+
+struct TraceSeg {
+    slots: Box<[UnsafeCell<MaybeUninit<TraceEvent>>]>,
+}
+
+fn alloc_seg() -> *mut TraceSeg {
+    Box::into_raw(Box::new(TraceSeg {
+        slots: (0..SEG_EVENTS).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect(),
+    }))
+}
+
+/// Append-only wait-free trace buffer. **Single writer**: only the thread
+/// that owns the slot appends (the same contract as
+/// [`SpscQueue::push`](crate::substrate::SpscQueue::push)); any thread may
+/// read the published prefix concurrently.
+struct TraceRing {
+    /// Lazily allocated segments. Stored with release before the length
+    /// that publishes their first slot.
+    segs: Box<[AtomicPtr<TraceSeg>]>,
+    /// Published event count: slots `0..len` are initialized and immutable.
+    len: CachePadded<AtomicUsize>,
+    /// Single-writer guard. Normally uncontended (only the owning thread
+    /// appends); if a second thread ever races in — e.g. an unbound thread
+    /// falling back to worker 0's context — its event degrades to a counted
+    /// drop instead of an unsynchronized slot write.
+    busy: AtomicBool,
+    /// Events discarded: ring full, out-of-range slot (release builds), or
+    /// a second writer racing the owner.
+    dropped: CachePadded<AtomicU64>,
+    cap: usize,
+}
+
+// SAFETY: the single-writer protocol serializes slot writes; readers only
+// touch slots below the release-published `len`. `TraceEvent` is `Send`.
+unsafe impl Send for TraceRing {}
+unsafe impl Sync for TraceRing {}
+
+impl TraceRing {
+    fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        TraceRing {
+            segs: (0..cap.div_ceil(SEG_EVENTS))
+                .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+                .collect(),
+            len: CachePadded::new(AtomicUsize::new(0)),
+            busy: AtomicBool::new(false),
+            dropped: CachePadded::new(AtomicU64::new(0)),
+            cap,
+        }
+    }
+
+    /// Owner append: one uncontended CAS on the guard, the slot write, two
+    /// plain stores. Wait-free — the CAS is a single bounded attempt (a
+    /// loss means a second writer is misusing the ring; the event is
+    /// dropped and counted, never blocked on and never a data race).
+    fn push(&self, ev: TraceEvent) {
+        if self
+            .busy
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            debug_assert!(false, "trace ring has two concurrent writers");
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let n = self.len.load(Ordering::Relaxed);
+        if n >= self.cap {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            self.busy.store(false, Ordering::Release);
+            return;
+        }
+        let si = n / SEG_EVENTS;
+        let mut seg = self.segs[si].load(Ordering::Relaxed);
+        if seg.is_null() {
+            seg = alloc_seg();
+            // Publication order is carried by the `len` release store
+            // below; the pointer store itself needs no ordering, but
+            // release keeps it obviously safe for raw-pointer readers.
+            self.segs[si].store(seg, Ordering::Release);
+        }
+        // SAFETY: the `busy` guard serializes writers; slot `n` is
+        // unpublished (readers stop at `len`), so this write races with
+        // nothing.
+        unsafe {
+            (*(*seg).slots[n % SEG_EVENTS].get()).write(ev);
+        }
+        self.len.store(n + 1, Ordering::Release);
+        self.busy.store(false, Ordering::Release);
+    }
+
+    /// Copy the published prefix into `out` (any thread).
+    fn snapshot_into(&self, out: &mut Vec<TraceEvent>) {
+        let n = self.len.load(Ordering::Acquire);
+        out.reserve(n);
+        let mut i = 0;
+        while i < n {
+            let si = i / SEG_EVENTS;
+            let seg = self.segs[si].load(Ordering::Acquire);
+            debug_assert!(!seg.is_null(), "published slot in unallocated segment");
+            if seg.is_null() {
+                break;
+            }
+            let upto = ((si + 1) * SEG_EVENTS).min(n);
+            while i < upto {
+                // SAFETY: `i < len` — the acquire read of `len` orders
+                // after the owner's slot write and segment publication.
+                out.push(unsafe { (*(*seg).slots[i % SEG_EVENTS].get()).assume_init_ref().clone() });
+                i += 1;
+            }
+        }
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for TraceRing {
+    fn drop(&mut self) {
+        for s in self.segs.iter() {
+            let p = s.load(Ordering::Relaxed);
+            if !p.is_null() {
+                // SAFETY: exclusive access; events need no drop (const
+                // assert above), so freeing the segment storage suffices.
+                unsafe { drop(Box::from_raw(p)) };
+            }
+        }
+    }
+}
+
 /// Trace collector. One instance per runtime; cheap enough to keep on for
-/// the trace figures, `None`d out for throughput benches.
+/// the trace figures, `None`d out for throughput benches. `record` is
+/// wait-free (see the module docs); one ring per recording thread.
 pub struct Tracer {
     start: Instant,
-    buffers: Vec<Mutex<Vec<TraceEvent>>>,
+    rings: Vec<TraceRing>,
 }
 
 impl Tracer {
+    /// A tracer with one ring per recording context and the default
+    /// per-ring capacity. `num_threads` must count *every* slot that will
+    /// record — workers plus any extra service-thread slots.
     pub fn new(num_threads: usize) -> Self {
+        Self::with_capacity(num_threads, DEFAULT_RING_CAP)
+    }
+
+    /// [`Tracer::new`] with an explicit per-ring event capacity (tests and
+    /// memory-constrained runs; events past capacity are dropped+counted).
+    pub fn with_capacity(num_threads: usize, events_per_thread: usize) -> Self {
         Tracer {
             start: Instant::now(),
-            buffers: (0..num_threads.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+            rings: (0..num_threads.max(1)).map(|_| TraceRing::new(events_per_thread)).collect(),
         }
     }
 
@@ -62,17 +238,40 @@ impl Tracer {
         self.start.elapsed().as_nanos() as u64
     }
 
+    /// Append an event to `worker`'s ring. Must be called by the thread
+    /// that owns slot `worker` (single-writer rings). The slot must be in
+    /// range — rings are sized by the actual thread count; an out-of-range
+    /// slot debug-asserts, and in release builds the event is accounted as
+    /// dropped instead of silently aliasing another thread's stream (the
+    /// seed's `worker % len` merged the DAS manager's stream into
+    /// worker 0's).
     #[inline]
     pub fn record(&self, worker: usize, kind: TraceKind) {
         let ev = TraceEvent { t_ns: self.now_ns(), kind };
-        self.buffers[worker % self.buffers.len()].lock().unwrap().push(ev);
+        debug_assert!(
+            worker < self.rings.len(),
+            "trace slot {worker} out of range ({} rings) — size the tracer by the actual \
+             thread count",
+            self.rings.len()
+        );
+        match self.rings.get(worker) {
+            Some(ring) => ring.push(ev),
+            None => {
+                self.rings[0].dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Events discarded across all rings (full ring or out-of-range slot).
+    pub fn dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
     }
 
     /// Merge all per-thread buffers, sorted by time.
     pub fn merged(&self) -> Vec<TraceEvent> {
         let mut all: Vec<TraceEvent> = Vec::new();
-        for b in &self.buffers {
-            all.extend(b.lock().unwrap().iter().cloned());
+        for r in &self.rings {
+            r.snapshot_into(&mut all);
         }
         all.sort_by_key(|e| e.t_ns);
         all
@@ -173,6 +372,38 @@ impl Tracer {
     }
 }
 
+/// The seed's tracer: one `Mutex<Vec>` per thread, a lock round-trip per
+/// event, `worker % len` slot aliasing. Retained (not wired into the
+/// runtime) as the old side of the `trace_append` contention A/B.
+pub struct LockedTracer {
+    start: Instant,
+    buffers: Vec<Mutex<Vec<TraceEvent>>>,
+}
+
+impl LockedTracer {
+    pub fn new(num_threads: usize) -> Self {
+        LockedTracer {
+            start: Instant::now(),
+            buffers: (0..num_threads.max(1)).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, worker: usize, kind: TraceKind) {
+        let ev = TraceEvent { t_ns: self.start.elapsed().as_nanos() as u64, kind };
+        self.buffers[worker % self.buffers.len()].lock().unwrap().push(ev);
+    }
+
+    pub fn merged(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<TraceEvent> = Vec::new();
+        for b in &self.buffers {
+            all.extend(b.lock().unwrap().iter().cloned());
+        }
+        all.sort_by_key(|e| e.t_ns);
+        all
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,6 +417,7 @@ mod tests {
         let m = t.merged();
         assert_eq!(m.len(), 3);
         assert!(m.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        assert_eq!(t.dropped(), 0);
     }
 
     #[test]
@@ -223,5 +455,51 @@ mod tests {
         t.record(0, TraceKind::InGraph(6));
         assert_eq!(t.gauge_series(true).len(), 2);
         assert_eq!(t.gauge_series(false).len(), 1);
+    }
+
+    #[test]
+    fn ring_crosses_segments() {
+        let t = Tracer::with_capacity(1, SEG_EVENTS * 2 + 10);
+        let n = SEG_EVENTS + 17;
+        for i in 0..n {
+            t.record(0, TraceKind::InGraph(i as u64));
+        }
+        let m = t.merged();
+        assert_eq!(m.len(), n);
+        // Append order preserved within a ring (monotonic gauge values).
+        let vals: Vec<u64> = m
+            .iter()
+            .filter_map(|e| match e.kind {
+                TraceKind::InGraph(v) => Some(v),
+                _ => None,
+            })
+            .collect();
+        assert!(vals.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_and_counts() {
+        let t = Tracer::with_capacity(2, 100);
+        for i in 0..150u64 {
+            t.record(0, TraceKind::InGraph(i));
+        }
+        for i in 0..40u64 {
+            t.record(1, TraceKind::Ready(i));
+        }
+        assert_eq!(t.dropped(), 50, "ring 0 dropped the overflow");
+        assert_eq!(t.merged().len(), 140);
+        assert_eq!(t.gauge_series(true).len(), 100);
+        assert_eq!(t.gauge_series(false).len(), 40);
+    }
+
+    #[test]
+    fn locked_baseline_matches_merge_behavior() {
+        let t = LockedTracer::new(2);
+        t.record(0, TraceKind::InGraph(1));
+        t.record(1, TraceKind::Ready(2));
+        let m = t.merged();
+        assert_eq!(m.len(), 2);
+        assert!(m.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
     }
 }

@@ -8,6 +8,8 @@
 //! discrete-event simulator and cheap atomic statistics.
 
 pub mod deque;
+pub mod rcu;
+pub mod signal;
 pub mod spsc;
 pub mod spinlock;
 pub mod region;
@@ -16,8 +18,10 @@ pub mod vtime;
 pub mod stats;
 
 pub use deque::{CachePadded, ShardedCounter, Steal, WsDeque};
+pub use rcu::RcuCell;
 pub use region::{RegionKey, RegionSet};
 pub use rng::XorShift64;
+pub use signal::{ScanClaim, SignalDirectory};
 pub use spinlock::{SpinLock, SpinLockGuard};
 pub use spsc::{ConsumerGuard, SpscQueue};
 pub use stats::{Counter, Histogram};

@@ -1,0 +1,195 @@
+//! Dependency-free RCU-style snapshot cell (the arc-swap idiom, hand-rolled
+//! for the offline build).
+//!
+//! A read-mostly registry — the Functionality Dispatcher's callback list —
+//! wants reads that cost one atomic load and writes that may be arbitrarily
+//! expensive. [`RcuCell`] stores the current snapshot behind an
+//! `AtomicPtr`; readers do a single `Acquire` load and use the snapshot in
+//! place (no clone, no refcount bump, no lock), writers clone the snapshot,
+//! modify the clone and install it with a CAS.
+//!
+//! ## Reclamation
+//!
+//! The classic RCU problem — when may a replaced snapshot be freed? — is
+//! resolved the same way [`WsDeque`](crate::substrate::WsDeque) retires its
+//! grown buffers: **never before drop**. Replaced snapshots go on a retired
+//! list freed when the cell itself is dropped, so a reader's borrowed
+//! snapshot stays valid for as long as it can hold it (the borrow is tied
+//! to the cell's lifetime). Memory cost is one snapshot per update, which
+//! suits registries written a handful of times per process (callback
+//! registration happens "during runtime initialization or the application
+//! execution" — §3.2 — but is never per-event). Do not use this cell for
+//! high-frequency writes.
+//!
+//! Deferred reclamation also kills ABA on the install CAS: a retired
+//! snapshot's address is never handed back to the allocator while the cell
+//! lives, so the CAS cannot mistake a recycled pointer for the snapshot it
+//! read.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+use crate::substrate::spinlock::SpinLock;
+use crate::substrate::stats::Counter;
+
+/// Read-mostly snapshot cell. See the module docs for the cost model.
+pub struct RcuCell<T> {
+    current: AtomicPtr<T>,
+    /// Replaced snapshots, freed on drop (writers only; cold path).
+    retired: SpinLock<Vec<*mut T>>,
+    updates: Counter,
+    update_retries: Counter,
+}
+
+// SAFETY: the cell hands out `&T` to any thread (readers) and moves `T`
+// values in from writer threads, so both `Send` and `Sync` on `T` are
+// required; all shared mutable state is the atomic pointer and the
+// spin-locked retired list.
+unsafe impl<T: Send + Sync> Send for RcuCell<T> {}
+unsafe impl<T: Send + Sync> Sync for RcuCell<T> {}
+
+impl<T> RcuCell<T> {
+    pub fn new(value: T) -> Self {
+        RcuCell {
+            current: AtomicPtr::new(Box::into_raw(Box::new(value))),
+            retired: SpinLock::new(Vec::new()),
+            updates: Counter::new(),
+            update_retries: Counter::new(),
+        }
+    }
+
+    /// The current snapshot: one `Acquire` load, no lock, no allocation.
+    /// The reference stays valid for the borrow of `self` (snapshots are
+    /// retired, not freed — module docs), but is a *snapshot*: concurrent
+    /// updates will not be visible through it.
+    #[inline]
+    pub fn read(&self) -> &T {
+        // SAFETY: `current` always points at a live allocation; no snapshot
+        // is freed before `Drop` takes `&mut self`, which cannot coexist
+        // with this `&self` borrow.
+        unsafe { &*self.current.load(Ordering::Acquire) }
+    }
+
+    /// Clone-and-CAS update. `f` receives the current snapshot and returns
+    /// the replacement plus a result passed back to the caller; it may run
+    /// several times if concurrent writers race (keep it side-effect-free).
+    pub fn update<R, F: FnMut(&T) -> (T, R)>(&self, mut f: F) -> R {
+        loop {
+            let cur = self.current.load(Ordering::Acquire);
+            // SAFETY: live allocation (see `read`).
+            let (next, result) = f(unsafe { &*cur });
+            let next_ptr = Box::into_raw(Box::new(next));
+            match self.current.compare_exchange(
+                cur,
+                next_ptr,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    // Readers may still hold `cur`: retire it, free on drop.
+                    self.retired.lock().push(cur);
+                    self.updates.inc();
+                    return result;
+                }
+                Err(_) => {
+                    // Lost to a concurrent writer. `next_ptr` was never
+                    // published, so it is exclusively ours to free.
+                    // SAFETY: just allocated above, unpublished.
+                    drop(unsafe { Box::from_raw(next_ptr) });
+                    self.update_retries.inc();
+                }
+            }
+        }
+    }
+
+    /// (successful updates, lost install races, retired snapshots).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.updates.get(), self.update_retries.get(), self.retired.lock().len() as u64)
+    }
+}
+
+impl<T> Drop for RcuCell<T> {
+    fn drop(&mut self) {
+        // Exclusive access: free the live snapshot and every retired one.
+        // SAFETY: all pointers were created by `Box::into_raw` and are
+        // distinct (retired list never holds the current pointer).
+        unsafe {
+            drop(Box::from_raw(self.current.load(Ordering::Relaxed)));
+            for p in self.retired.lock().drain(..) {
+                drop(Box::from_raw(p));
+            }
+        }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for RcuCell<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RcuCell").field("current", self.read()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn read_sees_initial_and_updated() {
+        let c = RcuCell::new(vec![1, 2]);
+        assert_eq!(c.read(), &vec![1, 2]);
+        let idx = c.update(|v| {
+            let mut v2 = v.clone();
+            v2.push(3);
+            (v2, v.len())
+        });
+        assert_eq!(idx, 2, "update returns the closure's result");
+        assert_eq!(c.read(), &vec![1, 2, 3]);
+        let (updates, retries, retired) = c.stats();
+        assert_eq!(updates, 1);
+        assert_eq!(retries, 0);
+        assert_eq!(retired, 1);
+    }
+
+    #[test]
+    fn snapshot_survives_concurrent_update() {
+        let c = RcuCell::new(String::from("old"));
+        let snap = c.read();
+        c.update(|_| (String::from("new"), ()));
+        // The old snapshot is retired, not freed: still readable.
+        assert_eq!(snap, "old");
+        assert_eq!(c.read(), "new");
+    }
+
+    #[test]
+    fn concurrent_updates_all_land() {
+        const THREADS: usize = 4;
+        const PER: usize = 500;
+        let c = Arc::new(RcuCell::new(0u64));
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..PER {
+                        c.update(|v| (v + 1, ()));
+                    }
+                });
+            }
+        });
+        assert_eq!(*c.read(), (THREADS * PER) as u64);
+        let (updates, _retries, retired) = c.stats();
+        assert_eq!(updates, (THREADS * PER) as u64);
+        assert_eq!(retired, updates, "one retired snapshot per update");
+    }
+
+    #[test]
+    fn drop_frees_all_generations() {
+        let marker = Arc::new(());
+        {
+            let c = RcuCell::new(Arc::clone(&marker));
+            for _ in 0..10 {
+                c.update(|v| (Arc::clone(v), ()));
+            }
+            assert_eq!(Arc::strong_count(&marker), 12, "current + 10 retired + local");
+        }
+        assert_eq!(Arc::strong_count(&marker), 1, "drop freed every snapshot");
+    }
+}

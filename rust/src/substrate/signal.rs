@@ -1,0 +1,390 @@
+//! Work-signal directory: a per-worker "dirty" flag directory with a
+//! hierarchical summary bitmap, so managers visit only the workers that
+//! actually produced requests.
+//!
+//! Before this module, the DDAST callback (paper Listing 2) swept *every*
+//! worker's queue pair per round — an O(workers) walk plus one queue-token
+//! CAS pair per worker even when a single worker was producing. The
+//! directory turns that into O(dirty): workers mark themselves dirty with
+//! one cheap atomic on their own cache line when they enqueue a request,
+//! and managers scan a 64-way summary bitmap to find (and claim) only the
+//! marked workers. The direction follows Álvarez et al., *Advanced
+//! Synchronization Techniques for Task-based Runtime Systems*
+//! (arXiv:2105.07902), which removes exactly these residual shared-structure
+//! touches from Nanos6's manager paths.
+//!
+//! ## Structure
+//!
+//! Three levels, ground truth at the bottom:
+//!
+//! 1. **flags** — one cache-padded `AtomicBool` per worker. The worker's
+//!    [`raise`](SignalDirectory::raise) is a single `swap` on a line nobody
+//!    else writes in steady state (managers touch it only to claim).
+//! 2. **words** — a `u64` bitmap, bit = worker, 64 workers per word.
+//!    Written only on a flag *transition* (clean → dirty), so a worker
+//!    spamming requests RMWs its own flag line, not the shared word.
+//! 3. **summary** — one `u64`, bit = word with (possibly) dirty bits.
+//!
+//! ## No-lost-wakeup protocol
+//!
+//! Producer: enqueue the message, then `raise` (set flag, propagate up on
+//! transition). Manager: `claim` (clear word bit, then clear flag), then
+//! drain the queue. All flag/word operations are `AcqRel` RMWs, so on each
+//! level the two sides are totally ordered by cache coherence:
+//!
+//! * claim's flag-swap before raise's flag-swap → raise sees `false`,
+//!   re-propagates, and the *next* scan observes the worker;
+//! * raise's flag-swap before claim's → claim reads the raise's write,
+//!   which synchronizes-with it, so the drain that follows the claim sees
+//!   the enqueued message.
+//!
+//! The summary level is maintained conservatively: a scanner that observes
+//! an empty word clears the summary bit and *re-checks* the word, restoring
+//! the bit if a racing raise re-populated it. A summary bit may therefore
+//! be transiently stale in either direction; scans tolerate false positives
+//! (they just load an empty word) and false negatives last at most one
+//! in-flight raise (the raiser re-sets the bit before its `raise` returns).
+//!
+//! ## Fairness
+//!
+//! [`scan_rotor`](SignalDirectory::scan_rotor) starts each scan at a
+//! rotating worker index (shared atomic rotor), so a noisy low-numbered
+//! worker cannot starve higher slots of manager attention.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+use crate::substrate::deque::{CachePadded, ShardedCounter};
+use crate::substrate::stats::Counter;
+
+const WORD_BITS: usize = 64;
+
+/// Per-worker dirty directory with a hierarchical summary bitmap.
+/// See the module docs for the protocol.
+pub struct SignalDirectory {
+    /// Ground truth: worker w is (possibly) dirty while `flags[w]` is set.
+    flags: Box<[CachePadded<AtomicBool>]>,
+    /// Bitmap hint: bit `w % 64` of `words[w / 64]` mirrors `flags[w]`,
+    /// maintained on transitions only.
+    words: Box<[CachePadded<AtomicU64>]>,
+    /// Bitmap hint over `words` (conservative; see module docs).
+    summary: CachePadded<AtomicU64>,
+    /// Fairness rotor: successive scans start at successive workers.
+    rotor: CachePadded<AtomicUsize>,
+    /// Raises (worker-side; sharded so the hot path stays on private cells).
+    raises: ShardedCounter,
+    /// Raises that transitioned clean → dirty and touched the shared word.
+    promotions: ShardedCounter,
+    /// Successful claims (manager-side).
+    claims: Counter,
+}
+
+impl SignalDirectory {
+    /// A directory for `n` worker slots (1 ..= 4096).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "directory needs at least one worker slot");
+        assert!(n <= WORD_BITS * WORD_BITS, "summary bitmap covers 4096 slots");
+        let nwords = n.div_ceil(WORD_BITS);
+        SignalDirectory {
+            flags: (0..n).map(|_| CachePadded::new(AtomicBool::new(false))).collect(),
+            words: (0..nwords).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            summary: CachePadded::new(AtomicU64::new(0)),
+            rotor: CachePadded::new(AtomicUsize::new(0)),
+            raises: ShardedCounter::new(),
+            promotions: ShardedCounter::new(),
+            claims: Counter::new(),
+        }
+    }
+
+    /// Worker slots covered.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.flags.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.flags.is_empty()
+    }
+
+    /// Mark `worker` dirty. Callable from any thread (re-raising a worker
+    /// whose budgeted drain left messages behind is done by managers); the
+    /// hot path — the worker signalling its own enqueue — is one `AcqRel`
+    /// swap on the worker's private flag line plus a sharded stat bump.
+    #[inline]
+    pub fn raise(&self, worker: usize) {
+        debug_assert!(worker < self.flags.len());
+        self.raises.inc();
+        if !self.flags[worker].swap(true, Ordering::AcqRel) {
+            // Clean → dirty transition: propagate up the hierarchy.
+            self.promotions.inc();
+            let wi = worker / WORD_BITS;
+            let bit = 1u64 << (worker % WORD_BITS);
+            if self.words[wi].fetch_or(bit, Ordering::AcqRel) == 0 {
+                self.summary.fetch_or(1u64 << wi, Ordering::AcqRel);
+            }
+        }
+    }
+
+    /// Is `worker` currently marked dirty? (Racy peek, for telemetry and
+    /// quiescence sweeps.)
+    #[inline]
+    pub fn is_raised(&self, worker: usize) -> bool {
+        self.flags[worker].load(Ordering::Acquire)
+    }
+
+    /// Claim `worker`'s dirty mark: clears its word bit, then its flag
+    /// (top-down, so a concurrent raise re-propagates — module docs).
+    /// Returns `true` if the flag was set, i.e. the caller now owes the
+    /// worker a queue drain.
+    pub fn try_claim(&self, worker: usize) -> bool {
+        debug_assert!(worker < self.flags.len());
+        let wi = worker / WORD_BITS;
+        let bit = 1u64 << (worker % WORD_BITS);
+        self.words[wi].fetch_and(!bit, Ordering::AcqRel);
+        if self.flags[worker].swap(false, Ordering::AcqRel) {
+            self.claims.inc();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// One scan over the directory starting at `start`, claiming each dirty
+    /// worker as it is yielded. The iterator visits every slot position at
+    /// most once (one full rotation), touching only words the summary marks.
+    pub fn scan_from(&self, start: usize) -> ScanClaim<'_> {
+        let n = self.flags.len();
+        let start = start % n;
+        ScanClaim {
+            dir: self,
+            start_word: start / WORD_BITS,
+            start_bit: start % WORD_BITS,
+            nwords: self.words.len(),
+            visit: 0,
+            cur_word: 0,
+            cur_mask: 0,
+        }
+    }
+
+    /// [`scan_from`](SignalDirectory::scan_from) at the shared fairness
+    /// rotor; each call advances the rotor by one slot.
+    pub fn scan_rotor(&self) -> ScanClaim<'_> {
+        let start = self.rotor.fetch_add(1, Ordering::Relaxed) % self.flags.len();
+        self.scan_from(start)
+    }
+
+    /// First raised worker at index ≥ `start` (flag sweep — the exact
+    /// ground truth, for quiescence cross-checks; O(n), off the hot path).
+    pub fn first_raised_from(&self, start: usize) -> Option<usize> {
+        (start..self.flags.len()).find(|&w| self.flags[w].load(Ordering::Acquire))
+    }
+
+    /// (raises, clean→dirty promotions, successful claims).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.raises.get(), self.promotions.get(), self.claims.get())
+    }
+}
+
+/// Claiming scan over a [`SignalDirectory`] (see
+/// [`scan_from`](SignalDirectory::scan_from)). Yields each claimed worker;
+/// dirty workers it does *not* reach (caller stopped early) keep their
+/// marks for the next scan.
+pub struct ScanClaim<'a> {
+    dir: &'a SignalDirectory,
+    start_word: usize,
+    start_bit: usize,
+    nwords: usize,
+    /// Word visits performed. Visit 0 is the start word masked to bits ≥
+    /// `start_bit`; visits 1..nwords walk the remaining words in rotation;
+    /// visit nwords revisits the start word's low bits (in-word rotation).
+    visit: usize,
+    cur_word: usize,
+    cur_mask: u64,
+}
+
+impl Iterator for ScanClaim<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            while self.cur_mask != 0 {
+                let b = self.cur_mask.trailing_zeros() as usize;
+                self.cur_mask &= self.cur_mask - 1;
+                let w = self.cur_word * WORD_BITS + b;
+                if w < self.dir.len() && self.dir.try_claim(w) {
+                    return Some(w);
+                }
+                // Bit already claimed by a racing manager (or a slot past
+                // the directory end in the last partial word): skip.
+            }
+            if self.visit > self.nwords {
+                return None;
+            }
+            let low_mask = (1u64 << self.start_bit).wrapping_sub(1);
+            let (wi, filter) = if self.visit == 0 {
+                (self.start_word, !low_mask)
+            } else if self.visit == self.nwords {
+                (self.start_word, low_mask)
+            } else {
+                ((self.start_word + self.visit) % self.nwords, u64::MAX)
+            };
+            self.visit += 1;
+            if filter == 0 {
+                continue;
+            }
+            let sbit = 1u64 << wi;
+            if self.dir.summary.load(Ordering::Acquire) & sbit == 0 {
+                continue;
+            }
+            let val = self.dir.words[wi].load(Ordering::Acquire);
+            if val == 0 {
+                // Word drained: drop the summary hint, then re-check for a
+                // raise that landed in between and restore the hint.
+                self.dir.summary.fetch_and(!sbit, Ordering::AcqRel);
+                if self.dir.words[wi].load(Ordering::Acquire) != 0 {
+                    self.dir.summary.fetch_or(sbit, Ordering::AcqRel);
+                }
+                continue;
+            }
+            self.cur_mask = val & filter;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as StdAtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn raise_then_scan_claims_once() {
+        let dir = SignalDirectory::new(8);
+        assert_eq!(dir.scan_from(0).next(), None);
+        dir.raise(5);
+        dir.raise(5); // idempotent while dirty
+        let got: Vec<usize> = dir.scan_from(0).collect();
+        assert_eq!(got, vec![5]);
+        assert_eq!(dir.scan_from(0).next(), None, "claim consumed the mark");
+        let (raises, promotions, claims) = dir.stats();
+        assert_eq!(raises, 2);
+        assert_eq!(promotions, 1, "second raise saw the flag already set");
+        assert_eq!(claims, 1);
+    }
+
+    #[test]
+    fn spans_multiple_words() {
+        let dir = SignalDirectory::new(130);
+        for w in [0usize, 63, 64, 129] {
+            dir.raise(w);
+        }
+        let mut got: Vec<usize> = dir.scan_from(0).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 63, 64, 129]);
+        assert!(dir.first_raised_from(0).is_none());
+    }
+
+    #[test]
+    fn raise_after_scan_is_seen_by_next_scan() {
+        let dir = SignalDirectory::new(70);
+        assert_eq!(dir.scan_from(0).next(), None);
+        dir.raise(69);
+        assert_eq!(dir.scan_from(0).collect::<Vec<_>>(), vec![69]);
+        // Re-raise after the claim (the budgeted-drain leftover case).
+        dir.raise(69);
+        assert_eq!(dir.scan_from(0).collect::<Vec<_>>(), vec![69]);
+    }
+
+    #[test]
+    fn scan_rotation_orders_from_start() {
+        let dir = SignalDirectory::new(8);
+        for w in 0..8 {
+            dir.raise(w);
+        }
+        let got: Vec<usize> = dir.scan_from(5).collect();
+        assert_eq!(got, vec![5, 6, 7, 0, 1, 2, 3, 4], "in-word rotation");
+    }
+
+    #[test]
+    fn rotor_advances_between_scans() {
+        let dir = SignalDirectory::new(4);
+        dir.raise(0);
+        dir.raise(1);
+        let first: Vec<usize> = dir.scan_rotor().collect();
+        dir.raise(0);
+        dir.raise(1);
+        let second: Vec<usize> = dir.scan_rotor().collect();
+        // Both scans see both workers; the rotor shifted the start.
+        let mut f = first.clone();
+        let mut s = second.clone();
+        f.sort_unstable();
+        s.sort_unstable();
+        assert_eq!(f, vec![0, 1]);
+        assert_eq!(s, vec![0, 1]);
+        assert_ne!(first, second, "fairness rotor rotates the visit order");
+    }
+
+    #[test]
+    fn concurrent_raise_claim_loses_nothing() {
+        const N: usize = 96;
+        const PER: u64 = 20_000;
+        const PRODUCERS: usize = 3;
+        let dir = Arc::new(SignalDirectory::new(N));
+        let pending: Arc<Vec<StdAtomicU64>> =
+            Arc::new((0..N).map(|_| StdAtomicU64::new(0)).collect());
+        let drained = Arc::new(StdAtomicU64::new(0));
+        let live = Arc::new(StdAtomicU64::new(PRODUCERS as u64));
+        let total = PER * PRODUCERS as u64;
+        std::thread::scope(|s| {
+            for p in 0..PRODUCERS {
+                let dir = Arc::clone(&dir);
+                let pending = Arc::clone(&pending);
+                let live = Arc::clone(&live);
+                s.spawn(move || {
+                    for i in 0..PER {
+                        let w = ((i.wrapping_mul(2654435761) >> 3) as usize + p * 31) % N;
+                        pending[w].fetch_add(1, Ordering::Release);
+                        dir.raise(w);
+                    }
+                    live.fetch_sub(1, Ordering::AcqRel);
+                });
+            }
+            let dir2 = Arc::clone(&dir);
+            let pending2 = Arc::clone(&pending);
+            let drained2 = Arc::clone(&drained);
+            let live2 = Arc::clone(&live);
+            s.spawn(move || {
+                let mut empty_after_done = 0u32;
+                loop {
+                    let mut got = 0u64;
+                    for w in dir2.scan_rotor() {
+                        got += pending2[w].swap(0, Ordering::AcqRel);
+                    }
+                    let d = drained2.fetch_add(got, Ordering::AcqRel) + got;
+                    if d >= total {
+                        break;
+                    }
+                    if got == 0 {
+                        if live2.load(Ordering::Acquire) == 0 {
+                            empty_after_done += 1;
+                            // Bounded, so a lost wakeup fails fast instead
+                            // of hanging the suite.
+                            assert!(
+                                empty_after_done < 10_000,
+                                "directory lost a wakeup: drained {d}/{total}"
+                            );
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        });
+        assert_eq!(drained.load(Ordering::Acquire), total);
+        // Any leftover raised flag must be stale (its pending already 0).
+        let leftovers: Vec<usize> = dir.scan_from(0).collect();
+        for w in leftovers {
+            assert_eq!(pending[w].load(Ordering::Acquire), 0, "worker {w} left behind");
+        }
+        assert!(dir.first_raised_from(0).is_none());
+    }
+}

@@ -58,6 +58,9 @@ pub struct SpscQueue<T> {
     head: AtomicUsize,
     /// Consumer token: true while a manager holds the pop side.
     consumer_held: AtomicBool,
+    /// Successful consumer-token grabs (telemetry: the request-plane A/B
+    /// counts how many queue tokens a manager sweep touches).
+    acquires: AtomicUsize,
 }
 
 // SAFETY: T must be Send to cross threads; the protocol (single producer,
@@ -82,6 +85,7 @@ impl<T> SpscQueue<T> {
             tail: AtomicUsize::new(0),
             head: AtomicUsize::new(0),
             consumer_held: AtomicBool::new(false),
+            acquires: AtomicUsize::new(0),
         }
     }
 
@@ -125,10 +129,19 @@ impl<T> SpscQueue<T> {
             .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
             .is_ok()
         {
+            self.acquires.fetch_add(1, Ordering::Relaxed);
             Some(ConsumerGuard { q: self })
         } else {
             None
         }
+    }
+
+    /// Successful [`try_acquire`](SpscQueue::try_acquire) grabs so far. The
+    /// DDAST A/B uses this to verify a manager sweep touches only signaled
+    /// workers' queues.
+    #[inline]
+    pub fn acquire_count(&self) -> u64 {
+        self.acquires.load(Ordering::Relaxed) as u64
     }
 
     /// Pop the oldest message. Only callable through a [`ConsumerGuard`].

@@ -66,44 +66,304 @@ fn steal_heavy_workload_all_kinds() {
     }
 }
 
-/// The contention A/B runs under tier-1 and records its numbers. The hard
+/// The contention A/B suite runs under tier-1 and records its numbers at
+/// three thread counts plus three simulated-worker sweep sizes. The hard
 /// ≥2x acceptance ratio is checked by the bench on a real multicore box;
 /// here (possibly a 1-core CI container) we assert the structural
 /// invariants that cannot be timing-dependent, and refresh the JSON.
 #[test]
 fn contention_ab_smoke_and_json() {
-    let report = contention::run_ab(4, 5_000);
+    let thread_counts = [2usize, 4, 8];
+    let ops: u64 = 2_000;
+    let reports: Vec<_> =
+        thread_counts.iter().map(|&t| contention::run_ab(t, ops)).collect();
 
-    // Both sides completed identical work: every produced task was consumed
-    // exactly once, and every domain op acquired some lock/shard.
-    assert!(report.ready_pools.old.acquisitions > 0);
+    for report in &reports {
+        let threads = report.threads as u64;
+        // Both sides completed identical work: every produced task was
+        // consumed exactly once, and every domain op acquired some
+        // lock/shard.
+        assert!(report.ready_pools.old.acquisitions > 0);
+        assert!(
+            report.ready_pools.new.cas_attempts > 0,
+            "new pools pop through the front CAS, not a lock"
+        );
+        // submit+finish per op, on both sides.
+        assert!(report.dep_domain.old.acquisitions >= 2 * threads * ops);
+        assert!(report.dep_domain.new.acquisitions >= 2 * threads * ops);
+
+        // The striped domain's drill touches disjoint regions per thread:
+        // it must not contend more than the single lock (the `.max(100)`
+        // absorbs scheduler noise on near-serialized 1-core runners; a
+        // broken striping scheme would show thousands of contended events
+        // here).
+        assert!(
+            report.dep_domain.new.contended_events()
+                <= report.dep_domain.old.contended_events().max(100),
+            "striping must not add contention: old={} new={}",
+            report.dep_domain.old.contended_events(),
+            report.dep_domain.new.contended_events()
+        );
+
+        // The locked dispatcher pays one registry-lock acquisition per
+        // poll; the RCU poll path pays none (its SideReport only carries
+        // wall clock).
+        assert!(report.dispatcher_poll.old.acquisitions >= threads * ops);
+        assert_eq!(report.dispatcher_poll.new.acquisitions, 0);
+        assert_eq!(report.dispatcher_poll.new.contended_events(), 0);
+        // Same shape for the tracer: one mutex per recorded event vs none.
+        assert!(report.trace_append.old.acquisitions >= threads * ops);
+        assert_eq!(report.trace_append.new.acquisitions, 0);
+    }
+
+    // Sparse-traffic request-plane sweep at 8/32/128 simulated workers:
+    // the old sweep's token grabs scale with the worker count, the
+    // directory scan's with the (fixed) traffic.
+    let sweeps: Vec<_> = [8usize, 32, 128]
+        .iter()
+        .map(|&w| contention::run_sweep(w, 2_000))
+        .collect();
+    for s in &sweeps {
+        assert_eq!(
+            s.ab.old.acquisitions,
+            2 * s.workers as u64 * s.rounds,
+            "old sweep is O(workers) per round"
+        );
+        assert!(
+            s.ab.new.acquisitions < s.ab.old.acquisitions / 4,
+            "directory sweep must be O(dirty): workers={} old={} new={}",
+            s.workers,
+            s.ab.old.acquisitions,
+            s.ab.new.acquisitions
+        );
+    }
     assert!(
-        report.ready_pools.new.cas_attempts > 0,
-        "new pools pop through the front CAS, not a lock"
-    );
-    // submit+finish per op, 4 threads x 5k ops, on both sides.
-    assert!(report.dep_domain.old.acquisitions >= 2 * 4 * 5_000);
-    assert!(report.dep_domain.new.acquisitions >= 2 * 4 * 5_000);
-
-    // The striped domain's drill touches disjoint regions per thread: it
-    // must not contend more than the single lock (the `.max(100)` absorbs
-    // scheduler noise on near-serialized 1-core runners; a broken striping
-    // scheme would show thousands of contended events here).
-    assert!(
-        report.dep_domain.new.contended_events()
-            <= report.dep_domain.old.contended_events().max(100),
-        "striping must not add contention: old={} new={}",
-        report.dep_domain.old.contended_events(),
-        report.dep_domain.new.contended_events()
+        sweeps[2].ab.new.acquisitions <= sweeps[0].ab.new.acquisitions,
+        "new-side grabs track traffic, not worker count"
     );
 
-    let json = contention::to_json(&report, "cargo test contention_ab_smoke_and_json");
+    let json = contention::suite_to_json(&reports, &sweeps, "cargo test contention_ab_smoke_and_json");
     assert!(json.contains("\"contended_reduction\""));
+    assert!(json.contains("\"signal_sweep\""));
     let path = contention::default_json_path();
-    if contention::write_json(&path, &report, "cargo test contention_ab_smoke_and_json") {
+    if contention::write_suite_json(
+        &path,
+        &reports,
+        &sweeps,
+        "cargo test contention_ab_smoke_and_json",
+    ) {
         eprintln!("refreshed {}", path.display());
     }
-    eprintln!("{}", contention::render(&report));
+    for report in &reports {
+        eprintln!("{}", contention::render(report));
+    }
+    for s in &sweeps {
+        eprintln!("{}", contention::render_sweep(s));
+    }
+}
+
+/// Acceptance guard for the request-plane refactor: during a sparse-traffic
+/// run (all messages from one worker), the DDAST callback must visit only
+/// signaled workers — zero queue-token acquisitions for the idle ones.
+#[test]
+fn ddast_callback_skips_idle_workers() {
+    use ddast::coordinator::ddast::ddast_callback;
+    use ddast::coordinator::dep::dep_out;
+    use ddast::coordinator::pool::RuntimeShared;
+    use ddast::coordinator::wd::Wd;
+
+    let params = DdastParams {
+        max_ddast_threads: 1,
+        max_spins: 1,
+        max_ops_thread: 64,
+        // Never early-exit, so the whole backlog drains in one callback.
+        min_ready_tasks: u64::MAX,
+    };
+    let rt = RuntimeShared::new(RuntimeKind::Ddast, 8, params, false, 7);
+    // Sparse traffic: worker 3 is the only producer.
+    for i in 0..10u64 {
+        let wd = Wd::new(
+            rt.fresh_task_id(),
+            vec![dep_out(100 + i)],
+            "sparse",
+            Arc::downgrade(&rt.root),
+            Box::new(|| {}),
+        );
+        rt.root.child_created();
+        rt.stats.tasks_outstanding.inc();
+        rt.queues.push_submit(3, wd);
+    }
+    assert!(ddast_callback(&rt, 0), "the manager satisfied messages");
+    assert_eq!(rt.queues.pending(), 0, "backlog fully drained");
+
+    for w in [0usize, 1, 2, 4, 5, 6, 7] {
+        assert_eq!(
+            rt.queues.workers[w].submit.acquire_count(),
+            0,
+            "idle worker {w}'s submit queue token was acquired"
+        );
+        assert_eq!(
+            rt.queues.workers[w].done.acquire_count(),
+            0,
+            "idle worker {w}'s done queue token was acquired"
+        );
+    }
+    assert!(rt.queues.workers[3].submit.acquire_count() >= 1, "the producer was visited");
+    assert!(rt.queues.signals_quiescent());
+}
+
+/// Satellite: dispatcher register-while-polling — pollers iterate RCU
+/// snapshots while a registrar concurrently installs new callbacks; every
+/// registration must land and no poll may crash or miss the final state.
+#[test]
+fn dispatcher_register_while_polling_stress() {
+    use ddast::coordinator::Dispatcher;
+
+    const CALLBACKS: usize = 64;
+    const POLLERS: usize = 3;
+    let d = Arc::new(Dispatcher::new());
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let hits = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|s| {
+        for t in 0..POLLERS {
+            let d = Arc::clone(&d);
+            let stop = Arc::clone(&stop);
+            s.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    d.poll_idle(t);
+                }
+            });
+        }
+        for i in 0..CALLBACKS {
+            let h = Arc::clone(&hits);
+            d.register(
+                "stress",
+                Box::new(move |_| {
+                    h.fetch_add(1, Ordering::Relaxed);
+                    true
+                }),
+            );
+            if i % 8 == 0 {
+                std::thread::yield_now();
+            }
+        }
+        stop.store(true, Ordering::Release);
+    });
+    assert_eq!(d.len(), CALLBACKS, "every concurrent registration landed");
+    assert!(d.poll_idle(0));
+    assert!(hits.load(Ordering::Relaxed) >= CALLBACKS as u64, "final poll ran all callbacks");
+    let (installs, _races, retired) = d.registry_stats();
+    assert_eq!(installs, CALLBACKS as u64);
+    assert_eq!(retired, CALLBACKS as u64, "one retired snapshot per install");
+}
+
+/// Satellite: signal-directory no-lost-wakeup through the *runtime's* queue
+/// system — producers push real messages and raise; a consumer scans,
+/// claims and drains. A signal set after a scan must be observed by a
+/// subsequent scan, so the drain always completes.
+#[test]
+fn signal_directory_no_lost_wakeup_via_queues() {
+    use ddast::coordinator::messages::QueueSystem;
+    use ddast::coordinator::wd::{TaskId, Wd};
+    use std::sync::Weak;
+
+    const WORKERS: usize = 16;
+    const PER: u64 = 5_000;
+    let qs = Arc::new(QueueSystem::new(WORKERS));
+    let drained = Arc::new(AtomicU64::new(0));
+    let live = Arc::new(AtomicU64::new(WORKERS as u64));
+    let total = WORKERS as u64 * PER;
+    std::thread::scope(|s| {
+        // One producer per worker slot (the SpscQueue ownership contract).
+        for w in 0..WORKERS {
+            let qs = Arc::clone(&qs);
+            let live = Arc::clone(&live);
+            s.spawn(move || {
+                for i in 0..PER {
+                    let wd = Wd::new(
+                        TaskId(w as u64 * PER + i + 1),
+                        Vec::new(),
+                        "msg",
+                        Weak::new(),
+                        Box::new(|| {}),
+                    );
+                    qs.push_submit(w, wd);
+                }
+                live.fetch_sub(1, Ordering::AcqRel);
+            });
+        }
+        let qs2 = Arc::clone(&qs);
+        let drained2 = Arc::clone(&drained);
+        let live2 = Arc::clone(&live);
+        s.spawn(move || {
+            let mut empty_after_done = 0u32;
+            loop {
+                let mut got = 0u64;
+                for w in qs2.signals().scan_rotor() {
+                    if let Some(mut g) = qs2.workers[w].submit.try_acquire() {
+                        while g.pop().is_some() {
+                            qs2.message_processed();
+                            got += 1;
+                        }
+                    }
+                }
+                let d = drained2.fetch_add(got, Ordering::AcqRel) + got;
+                if d >= total {
+                    break;
+                }
+                if got == 0 {
+                    if live2.load(Ordering::Acquire) == 0 {
+                        empty_after_done += 1;
+                        assert!(
+                            empty_after_done < 10_000,
+                            "lost wakeup: drained {d} of {total}"
+                        );
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        });
+    });
+    assert_eq!(drained.load(Ordering::Acquire), total);
+    assert_eq!(qs.pending_exact(), 0);
+    assert!(qs.signals_quiescent(), "only stale raises may remain, and they self-heal");
+}
+
+/// Satellite: trace-ring overflow and drain round-trip — a full ring drops
+/// (and counts) instead of blocking, published events all survive a
+/// concurrent drain.
+#[test]
+fn trace_ring_overflow_and_drain_roundtrip() {
+    use ddast::coordinator::{TraceKind, Tracer};
+
+    let t = Arc::new(Tracer::with_capacity(3, 1_000));
+    std::thread::scope(|s| {
+        for w in 0..3usize {
+            let t = Arc::clone(&t);
+            s.spawn(move || {
+                // Worker 0 overflows by 500; the others stay within bounds.
+                let n = if w == 0 { 1_500u64 } else { 800 };
+                for i in 0..n {
+                    t.record(w, TraceKind::InGraph(i));
+                }
+            });
+        }
+        // Concurrent reader: merged snapshots must only ever grow and
+        // never expose unpublished slots.
+        let t2 = Arc::clone(&t);
+        s.spawn(move || {
+            let mut last = 0usize;
+            for _ in 0..50 {
+                let m = t2.merged().len();
+                assert!(m >= last, "published prefix shrank");
+                last = m;
+                std::thread::yield_now();
+            }
+        });
+    });
+    assert_eq!(t.dropped(), 500);
+    assert_eq!(t.merged().len(), 1_000 + 800 + 800);
+    assert_eq!(t.dump_csv().lines().count(), 1 + 2_600);
 }
 
 /// Sharded ready gauge: hammer push/get from many threads through the
