@@ -37,12 +37,16 @@ fn main() {
         print!("{}", contention::render_sweep(&sweep));
         sweeps.push(sweep);
     }
+    println!("\n== idle-wake A/B: blind 100µs sleep vs directory parking ==\n");
+    let park_wake = contention::park_wake_ab(2_000);
+    print!("{}", contention::render_park_wake(&park_wake));
     println!();
     let path = contention::default_json_path();
     if contention::write_suite_json(
         &path,
         &reports,
         &sweeps,
+        &park_wake,
         "cargo bench --bench micro_structures",
     ) {
         println!("wrote {}\n", path.display());

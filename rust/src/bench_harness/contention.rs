@@ -17,7 +17,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Weak};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::dep::dep_out;
 use crate::coordinator::depgraph::DepDomain;
@@ -26,6 +26,7 @@ use crate::coordinator::messages::QueueSystem;
 use crate::coordinator::ready::{LockedReadyPools, PoolContention, ReadyPools};
 use crate::coordinator::trace::{LockedTracer, TraceKind, Tracer};
 use crate::coordinator::wd::{TaskId, Wd, WdState};
+use crate::substrate::SignalDirectory;
 
 /// One side of an A/B measurement.
 #[derive(Clone, Copy, Debug, Default)]
@@ -106,6 +107,9 @@ pub struct ContentionReport {
     pub dispatcher_poll: AbReport,
     /// Mutexed buffers vs wait-free rings trace append.
     pub trace_append: AbReport,
+    /// Per-message vs per-batch graph insertion (shard acquisitions are
+    /// the counter-verified metric).
+    pub batch_submit: AbReport,
 }
 
 /// The sparse-traffic request-plane sweep A/B at one simulated worker
@@ -321,6 +325,136 @@ pub fn trace_append_ab(threads: usize, ops: u64) -> AbReport {
     AbReport { old: old_report, new: new_report }
 }
 
+/// Drain budget of the batched-submission drill: the Listing-2 tuned
+/// `MAX_OPS_THREAD` (Table 5), i.e. the batch size the DDAST callback
+/// actually drains per claimed worker.
+pub const SUBMIT_BATCH: usize = 8;
+
+/// Batched-submission drill (EXPERIMENTS.md §Batched request plane): each
+/// thread inserts `ops` single-dep tasks over a 4-region private set —
+/// the benchmarks' block-reuse pattern. Old side: one `DepDomain::submit`
+/// per task, i.e. one shard acquisition per message. New side:
+/// `submit_batch` in [`SUBMIT_BATCH`]-task groups — the union of a batch's
+/// shards (≤ 4 distinct regions here) is acquired once per batch. The
+/// acceptance metric is shard acquisitions per message, which the lock
+/// counters verify deterministically (it cannot be faked by timing): the
+/// old side pays exactly `threads × ops`, the new side at most half that.
+pub fn batch_submit_ab(threads: usize, ops: u64) -> AbReport {
+    fn drill(domain: &DepDomain, threads: usize, ops: u64, batched: bool) {
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                s.spawn(move || {
+                    // 4 private regions per thread, revisited round-robin.
+                    let base = 1_000_000u64 * (t as u64 + 1);
+                    let mut ready = Vec::new();
+                    let mut batch: Vec<Arc<Wd>> = Vec::with_capacity(SUBMIT_BATCH);
+                    let mut keep: Vec<Arc<Wd>> = Vec::with_capacity(ops as usize);
+                    for i in 0..ops {
+                        let wd = Wd::new(
+                            TaskId(t as u64 * ops + i + 1),
+                            vec![dep_out(base + i % 4)],
+                            "drill",
+                            Weak::new(),
+                            Box::new(|| {}),
+                        );
+                        wd.set_state(WdState::Submitted);
+                        if batched {
+                            batch.push(wd);
+                            if batch.len() == SUBMIT_BATCH {
+                                domain.submit_batch(&batch, &mut ready);
+                                keep.append(&mut batch);
+                            }
+                        } else {
+                            domain.submit(&wd);
+                            keep.push(wd);
+                        }
+                    }
+                    if !batch.is_empty() {
+                        domain.submit_batch(&batch, &mut ready);
+                        keep.append(&mut batch);
+                    }
+                    // `keep` holds the WAW chains alive until the scope
+                    // ends; dropping unwinds the forward Arc links.
+                });
+            }
+        });
+    }
+
+    let old = DepDomain::new();
+    let t0 = Instant::now();
+    drill(&old, threads, ops, false);
+    let old_report =
+        SideReport::from_lock_stats(old.lock_stats(), t0.elapsed().as_nanos() as u64);
+
+    let new = DepDomain::new();
+    let t0 = Instant::now();
+    drill(&new, threads, ops, true);
+    let new_report =
+        SideReport::from_lock_stats(new.lock_stats(), t0.elapsed().as_nanos() as u64);
+
+    AbReport { old: old_report, new: new_report }
+}
+
+/// Parked-vs-sleeping idle-wake drill: one consumer waits for work items a
+/// producer publishes at round-trip pace. Old side: the consumer idles in
+/// the seed's blind 100 µs sleep tier (`idle_backoff`'s deepest rung), so
+/// every wake costs up to a sleep quantum. New side: the consumer parks on
+/// a [`SignalDirectory`] and the producer's raise wakes it event-driven.
+/// `elapsed_ns` is the makespan of `rounds` one-message round trips;
+/// `acquisitions` records the rounds completed (identical by construction
+/// — the drill is also a no-lost-wakeup check: a lost wake hangs it).
+pub fn park_wake_ab(rounds: u64) -> AbReport {
+    fn drill(rounds: u64, parked: bool) -> SideReport {
+        let dir = SignalDirectory::new(2);
+        let work = AtomicU64::new(0);
+        let consumed = AtomicU64::new(0);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            let (dir, work, consumed) = (&dir, &work, &consumed);
+            s.spawn(move || {
+                let mut got = 0u64;
+                while got < rounds {
+                    let n = work.swap(0, Ordering::AcqRel);
+                    if n > 0 {
+                        got += n;
+                        dir.try_claim(0);
+                        consumed.store(got, Ordering::Release);
+                        continue;
+                    }
+                    if parked {
+                        dir.begin_park(0);
+                        // Plain re-check: the begin_park / wake_parked
+                        // fences close the store-buffer race.
+                        if work.load(Ordering::Relaxed) == 0 {
+                            dir.park(0);
+                        } else {
+                            dir.cancel_park(0);
+                        }
+                    } else {
+                        std::thread::sleep(Duration::from_micros(100));
+                    }
+                }
+            });
+            s.spawn(move || {
+                for i in 0..rounds {
+                    work.fetch_add(1, Ordering::AcqRel);
+                    dir.raise(0); // publish-then-wake
+                    while consumed.load(Ordering::Acquire) < i + 1 {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        });
+        SideReport {
+            acquisitions: rounds,
+            elapsed_ns: t0.elapsed().as_nanos() as u64,
+            ..SideReport::default()
+        }
+    }
+
+    AbReport { old: drill(rounds, false), new: drill(rounds, true) }
+}
+
 /// Drain one worker's queue pair (both sweep variants must do identical
 /// per-worker work or the A/B acquisition counts stop being comparable).
 fn drain_pair(qs: &QueueSystem, worker: usize) -> u64 {
@@ -405,6 +539,7 @@ pub fn run_ab(threads: usize, ops_per_thread: u64) -> ContentionReport {
         dep_domain: dep_domain_ab(threads, ops_per_thread),
         dispatcher_poll: dispatcher_poll_ab(threads, ops_per_thread),
         trace_append: trace_append_ab(threads, ops_per_thread),
+        batch_submit: batch_submit_ab(threads, ops_per_thread),
     }
 }
 
@@ -449,13 +584,15 @@ pub fn to_json(r: &ContentionReport, generated_by: &str) -> String {
 fn report_json_inline(r: &ContentionReport) -> String {
     format!(
         "{{\"threads\": {}, \"ops_per_thread\": {}, \"ready_pools\": {}, \
-         \"dep_domain\": {}, \"dispatcher_poll\": {}, \"trace_append\": {}}}",
+         \"dep_domain\": {}, \"dispatcher_poll\": {}, \"trace_append\": {}, \
+         \"batch_submit\": {}}}",
         r.threads,
         r.ops_per_thread,
         ab_json(&r.ready_pools),
         ab_json(&r.dep_domain),
         ab_json(&r.dispatcher_poll),
-        ab_json(&r.trace_append)
+        ab_json(&r.trace_append),
+        ab_json(&r.batch_submit)
     )
 }
 
@@ -468,11 +605,14 @@ fn sweep_json_inline(s: &SweepReport) -> String {
     )
 }
 
-/// Serialize the full suite: per-thread-count reports plus the
-/// sparse-traffic sweep series — the shape `BENCH_contention.json` carries.
+/// Serialize the full suite: per-thread-count reports (each carrying the
+/// `batch_submit` drill), the sparse-traffic sweep series and the
+/// park-vs-sleep wake-latency pair — the shape `BENCH_contention.json`
+/// carries.
 pub fn suite_to_json(
     reports: &[ContentionReport],
     sweeps: &[SweepReport],
+    park_wake: &AbReport,
     generated_by: &str,
 ) -> String {
     let reports_json: Vec<String> =
@@ -481,10 +621,11 @@ pub fn suite_to_json(
         sweeps.iter().map(|s| format!("    {}", sweep_json_inline(s))).collect();
     format!(
         "{{\n  \"generated_by\": \"{}\",\n  \"reports\": [\n{}\n  ],\n  \
-         \"signal_sweep\": [\n{}\n  ]\n}}\n",
+         \"signal_sweep\": [\n{}\n  ],\n  \"park_wake\": {}\n}}\n",
         generated_by,
         reports_json.join(",\n"),
-        sweeps_json.join(",\n")
+        sweeps_json.join(",\n"),
+        ab_json(park_wake)
     )
 }
 
@@ -508,6 +649,8 @@ pub fn render(r: &ContentionReport) -> String {
         ("dispatch: rcu", &r.dispatcher_poll.new),
         ("trace: mutexed", &r.trace_append.old),
         ("trace: ring", &r.trace_append.new),
+        ("submit: per-message", &r.batch_submit.old),
+        ("submit: per-batch", &r.batch_submit.new),
     ] {
         out.push_str(&format!(
             "{:<22}{:>14}{:>12}{:>12}{:>12}{:>12.2}\n",
@@ -524,7 +667,29 @@ pub fn render(r: &ContentionReport) -> String {
         fmt_reduction(r.ready_pools.reduction()),
         fmt_reduction(r.dep_domain.reduction())
     ));
+    out.push_str(&format!(
+        "shard acquisitions per message: per-message {:.2}, per-batch {:.2} ({:.1}x fewer)\n",
+        r.batch_submit.old.acquisitions as f64
+            / (r.threads as u64 * r.ops_per_thread).max(1) as f64,
+        r.batch_submit.new.acquisitions as f64
+            / (r.threads as u64 * r.ops_per_thread).max(1) as f64,
+        r.batch_submit.old.acquisitions as f64 / r.batch_submit.new.acquisitions.max(1) as f64
+    ));
     out
+}
+
+/// Human-readable line for the park-vs-sleep wake drill.
+pub fn render_park_wake(ab: &AbReport) -> String {
+    let rounds = ab.old.acquisitions.max(1);
+    format!(
+        "park wake — {} round trips: blind 100µs sleep {:.2} ms ({:.1} µs/wake) vs \
+         directory park {:.2} ms ({:.1} µs/wake)\n",
+        rounds,
+        ab.old.elapsed_ns as f64 / 1e6,
+        ab.old.elapsed_ns as f64 / rounds as f64 / 1e3,
+        ab.new.elapsed_ns as f64 / 1e6,
+        ab.new.elapsed_ns as f64 / rounds as f64 / 1e3
+    )
 }
 
 fn fmt_reduction(x: f64) -> String {
@@ -561,9 +726,10 @@ pub fn write_suite_json(
     path: &std::path::Path,
     reports: &[ContentionReport],
     sweeps: &[SweepReport],
+    park_wake: &AbReport,
     generated_by: &str,
 ) -> bool {
-    std::fs::write(path, suite_to_json(reports, sweeps, generated_by)).is_ok()
+    std::fs::write(path, suite_to_json(reports, sweeps, park_wake, generated_by)).is_ok()
 }
 
 #[cfg(test)]
@@ -592,23 +758,62 @@ mod tests {
             "\"dep_domain\"",
             "\"dispatcher_poll\"",
             "\"trace_append\"",
+            "\"batch_submit\"",
             "\"contended_reduction\"",
             "\"cas_retries\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
         assert!(render(&r).contains("reduction in contended events"));
+        assert!(render(&r).contains("shard acquisitions per message"));
     }
 
     #[test]
     fn suite_json_shape() {
         let reports = [run_ab(1, 20), run_ab(2, 20)];
         let sweeps = [run_sweep(8, 40), run_sweep(32, 40)];
-        let j = suite_to_json(&reports, &sweeps, "unit test");
-        for key in ["\"reports\"", "\"signal_sweep\"", "\"workers\": 32", "\"threads\": 2"] {
+        let pw = park_wake_ab(10);
+        let j = suite_to_json(&reports, &sweeps, &pw, "unit test");
+        for key in [
+            "\"reports\"",
+            "\"signal_sweep\"",
+            "\"park_wake\"",
+            "\"workers\": 32",
+            "\"threads\": 2",
+        ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
         assert!(render_sweep(&sweeps[0]).contains("simulated workers"));
+        assert!(render_park_wake(&pw).contains("round trips"));
+    }
+
+    #[test]
+    fn batch_submit_halves_shard_acquisitions() {
+        // Deterministic counter check (the acceptance metric): one
+        // acquisition per message on the old side, at most 4 distinct
+        // shards per 8-message batch on the new side.
+        let ops = 2_000u64;
+        for threads in [1usize, 2] {
+            let ab = batch_submit_ab(threads, ops);
+            let msgs = threads as u64 * ops;
+            assert_eq!(ab.old.acquisitions, msgs, "per-message = 1 shard lock per submit");
+            assert!(
+                ab.new.acquisitions * 2 <= ab.old.acquisitions,
+                "per-batch must at least halve shard acquisitions: old={} new={}",
+                ab.old.acquisitions,
+                ab.new.acquisitions
+            );
+        }
+    }
+
+    #[test]
+    fn park_wake_drill_completes_both_sides() {
+        // Completion *is* the no-lost-wakeup property here: a swallowed
+        // wake hangs the drill. Latency claims are left to the bench.
+        let ab = park_wake_ab(25);
+        assert_eq!(ab.old.acquisitions, 25);
+        assert_eq!(ab.new.acquisitions, 25);
+        assert!(ab.old.elapsed_ns > 0 && ab.new.elapsed_ns > 0);
     }
 
     #[test]

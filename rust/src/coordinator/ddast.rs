@@ -55,17 +55,22 @@ impl Default for DdastParams {
     }
 }
 
-/// The DDAST callback — the paper's Listing 2 with one structural change:
+/// The DDAST callback — the paper's Listing 2 with two structural changes:
 /// instead of sweeping **all** worker queue pairs per round (lines 5–6
 /// iterate every thread), the manager walks the
 /// [`SignalDirectory`](crate::substrate::SignalDirectory) and visits only
-/// workers that actually enqueued requests since the last visit. The
-/// Listing 2 semantics are preserved:
+/// workers that actually enqueued requests since the last visit; and a
+/// visited worker is drained **per batch** (lines 8–20's pop loop becomes
+/// one [`drain_batch`](crate::coordinator::messages::WorkerQueues::drain_batch)
+/// into a reusable buffer, applied by `RuntimeShared::process_batch` with
+/// one shard-acquisition set per same-parent run instead of per message).
+/// The Listing 2 semantics are preserved:
 ///
 /// * `MAX_DDAST_THREADS` gate on entry (line 1, CAS so the cap is exact);
-/// * per-worker `MAX_OPS_THREAD` budget, Submit before Done (lines 8–20) —
-///   a worker left with messages (budget exhausted, or its queue token held
-///   by another manager) is re-raised so the next round revisits it;
+/// * per-worker `MAX_OPS_THREAD` budget, Submit before Done (lines 8–20,
+///   now the batch's drain budget and fill priority) — a worker left with
+///   messages (budget exhausted, or its queue token held by another
+///   manager) is re-raised so the next round revisits it;
 /// * `MIN_READY_TASKS` early exit checked before each worker (line 7) — a
 ///   claimed-but-unvisited worker keeps its directory mark;
 /// * spin budget reset on progress, decrement on an empty round, exit at
@@ -103,6 +108,9 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
     let dir = rt.queues.signals();
     let mut spins = p.max_spins;
     let mut total_processed: u64 = 0;
+    // Reusable drain buffer: lives for the whole callback activation, so
+    // steady-state rounds allocate nothing.
+    let mut batch = crate::coordinator::messages::MsgBatch::new();
     // Listing 2 lines 4..25, with the line 5–6 all-workers sweep replaced
     // by a claiming scan over the signal directory.
     loop {
@@ -122,35 +130,15 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
                 None => break,
             };
             let wq = &rt.queues.workers[w];
-            // Lines 8–16: Submit Task Messages first (prioritized), under
-            // the exclusive consumer token — one manager per submit queue.
-            let mut cnt: usize = 0;
-            if let Some(mut g) = wq.submit.try_acquire() {
-                while cnt < p.max_ops_thread {
-                    match g.pop() {
-                        Some(m) => {
-                            rt.process_submit(me, m.task);
-                            cnt += 1;
-                        }
-                        None => break,
-                    }
-                }
-            }
-            // Lines 17–20: Done Task Messages share the per-worker budget.
-            if cnt < p.max_ops_thread {
-                if let Some(mut g) = wq.done.try_acquire() {
-                    while cnt < p.max_ops_thread {
-                        match g.pop() {
-                            Some(m) => {
-                                rt.process_done_msg(me, m);
-                                cnt += 1;
-                            }
-                            None => break,
-                        }
-                    }
-                }
-            }
-            // Budget exhausted — or the queue token was held by another
+            // Lines 8–20 batched: up to MAX_OPS_THREAD messages — Submit
+            // prioritized, FIFO — in one pass, with the graph application
+            // running while the Submit consumer token is still held (pop +
+            // insertion stay atomic per worker, so concurrent managers
+            // cannot interleave one worker's submissions out of program
+            // order — same guarantee the per-message loop had).
+            let cnt =
+                wq.drain_batch_with(p.max_ops_thread, &mut batch, |b| rt.process_batch(me, b));
+            // Budget exhausted — or a queue token was held by another
             // manager — with messages left: hand the worker back to the
             // directory so a later round revisits it.
             if wq.pending() > 0 {

@@ -176,6 +176,12 @@ impl DepDomain {
         for d in deps {
             mask |= 1u64 << self.stripe_of(d.region.base);
         }
+        self.lock_mask(mask)
+    }
+
+    /// Acquire the shards of `mask` in ascending order (see `lock_shards`;
+    /// the batch path computes the union mask of several tasks first).
+    fn lock_mask(&self, mut mask: u64) -> [Option<SpinLockGuard<'_, Stripe>>; MAX_STRIPES] {
         let mut guards = std::array::from_fn(|_| None);
         while mask != 0 {
             let i = mask.trailing_zeros() as usize;
@@ -210,6 +216,66 @@ impl DepDomain {
         self.tasks_in_graph.inc();
         // Release the submission guard; true -> no predecessors remained.
         task.release_pred()
+    }
+
+    /// Insert a batch of sibling tasks, acquiring each touched shard **once
+    /// per batch** instead of once per task (EXPERIMENTS.md §Batched
+    /// request plane — the per-message shard churn was the request plane's
+    /// largest remaining per-message cost).
+    ///
+    /// Correctness relative to per-task [`submit`](DepDomain::submit):
+    ///
+    /// * **Program order** — tasks are processed in slice order while every
+    ///   touched shard is held, so the graph observes exactly the
+    ///   serialization the per-message FIFO drain produced.
+    /// * **Atomic submission** — the union of the batch's shards is a
+    ///   superset of each task's own shards, so each insertion is at least
+    ///   as atomic as before (no ordering cycles with concurrent sibling
+    ///   submissions).
+    /// * **Finish-drain invariant** — appends to a predecessor's successor
+    ///   list still happen under the shard of the region the predecessor
+    ///   was found through, which a concurrent `finish` of that predecessor
+    ///   also holds.
+    ///
+    /// Submission guards are released *after* the shards are (same as the
+    /// per-task path); tasks that became ready immediately are appended to
+    /// `ready` in submission order.
+    pub fn submit_batch(&self, tasks: &[Arc<Wd>], ready: &mut Vec<Arc<Wd>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        {
+            if self.use_ranges {
+                let mut stripe = self.stripes[0].lock();
+                for task in tasks {
+                    Self::submit_ranged(&mut stripe, task);
+                }
+            } else {
+                let mut mask = 0u64;
+                for task in tasks {
+                    for d in &task.deps {
+                        mask |= 1u64 << self.stripe_of(d.region.base);
+                    }
+                }
+                let mut guards = self.lock_mask(mask);
+                for task in tasks {
+                    for dep in &task.deps {
+                        let i = self.stripe_of(dep.region.base);
+                        Self::submit_exact_dep(
+                            guards[i].as_mut().expect("dep's shard locked"),
+                            task,
+                            dep,
+                        );
+                    }
+                }
+            }
+        }
+        self.tasks_in_graph.add(tasks.len() as u64);
+        for task in tasks {
+            if task.release_pred() {
+                ready.push(Arc::clone(task));
+            }
+        }
     }
 
     /// Process one dependence against its (locked) shard.
@@ -697,6 +763,92 @@ mod tests {
         }
         let (acq, _, _) = d.lock_stats();
         assert!(acq >= 64, "every submit+finish acquired a shard (got {acq})");
+    }
+
+    // -- batch insertion --------------------------------------------------
+
+    #[test]
+    fn batch_submit_preserves_program_order_within_batch() {
+        // Writer then reader on the same region inside ONE batch: the
+        // reader must order after the writer exactly as with per-task
+        // submission (the batch path processes tasks in slice order).
+        let d = DepDomain::new();
+        let w = mk(1, vec![dep_out(10)]);
+        let r = mk(2, vec![dep_in(10)]);
+        let mut ready = Vec::new();
+        d.submit_batch(&[Arc::clone(&w), Arc::clone(&r)], &mut ready);
+        assert_eq!(ready.len(), 1, "only the writer is ready");
+        assert_eq!(ready[0].id, TaskId(1));
+        assert_eq!(r.pending_preds(), 1);
+        finish_body(&w);
+        let released = d.finish(&w);
+        assert_eq!(released.len(), 1);
+        assert_eq!(released[0].id, TaskId(2));
+    }
+
+    #[test]
+    fn batch_submit_matches_per_task_semantics() {
+        // The same RAW/WAR/WAW chain behaves identically whether submitted
+        // per task or per batch, at 1 and 8 stripes.
+        for stripes in [1usize, 8] {
+            let per = DepDomain::with_stripes(stripes);
+            let batched = DepDomain::with_stripes(stripes);
+            let mk3 = || {
+                vec![
+                    mk(1, vec![dep_out(10), dep_out(11), dep_out(12)]),
+                    mk(2, vec![dep_in(10), dep_in(12)]),
+                    mk(3, vec![dep_out(11), dep_out(12)]),
+                ]
+            };
+            let a = mk3();
+            let ready_per: Vec<bool> = a.iter().map(|t| per.submit(t)).collect();
+            let b = mk3();
+            let mut ready = Vec::new();
+            batched.submit_batch(&b, &mut ready);
+            let ready_batch: Vec<bool> =
+                b.iter().map(|t| ready.iter().any(|r| r.id == t.id)).collect();
+            assert_eq!(ready_per, ready_batch, "stripes={stripes}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.pending_preds(), y.pending_preds(), "task {:?}", x.id);
+            }
+            assert_eq!(per.tasks_in_graph(), batched.tasks_in_graph());
+        }
+    }
+
+    #[test]
+    fn batch_submit_acquires_union_once() {
+        // 8 tasks over 2 distinct regions: the per-task path pays one shard
+        // acquisition per task, the batch path at most one per distinct
+        // region — counter-verified, the acceptance metric of
+        // `bench_harness::contention::batch_submit_ab`.
+        let per = DepDomain::new();
+        let batched = DepDomain::new();
+        let mk8 = |d0: u64| -> Vec<Arc<Wd>> {
+            (0..8u64).map(|i| mk(d0 + i, vec![dep_out(100 + i % 2)])).collect()
+        };
+        for t in mk8(1) {
+            per.submit(&t);
+        }
+        let (per_acq, _, _) = per.lock_stats();
+        assert_eq!(per_acq, 8, "one acquisition per task");
+        let mut ready = Vec::new();
+        batched.submit_batch(&mk8(11), &mut ready);
+        let (batch_acq, _, _) = batched.lock_stats();
+        assert!(batch_acq <= 2, "one acquisition per distinct shard, got {batch_acq}");
+    }
+
+    #[test]
+    fn batch_submit_ranged_plugin() {
+        use crate::coordinator::dep::{DepMode, Dependence};
+        use crate::substrate::RegionKey;
+        let d = DepDomain::new_ranged();
+        let w = mk_r(1, vec![Dependence::new(RegionKey::new(0, 100), DepMode::Out)]);
+        let r = mk_r(2, vec![Dependence::new(RegionKey::new(50, 100), DepMode::In)]);
+        let mut ready = Vec::new();
+        d.submit_batch(&[Arc::clone(&w), Arc::clone(&r)], &mut ready);
+        assert_eq!(ready.len(), 1, "overlap orders the reader after the writer");
+        finish_body(&w);
+        assert_eq!(d.finish(&w).len(), 1);
     }
 
     #[test]

@@ -12,6 +12,18 @@
 //! Each worker owns one queue *pair*; only the owning worker pushes, and
 //! the Submit queue is FIFO with an exclusive consumer token so the graph
 //! sees submissions in program order (§3.1, ordering discussion).
+//!
+//! Managers drain a claimed worker *per batch* rather than per message:
+//! [`WorkerQueues::drain_batch_with`] pops up to the Listing-2 budget into
+//! a reusable [`MsgBatch`] in one pass and applies the graph mutations
+//! (`RuntimeShared::process_batch`, one shard-acquisition set per batch)
+//! **while the Submit consumer token is held**, so pop + insertion stay
+//! atomic per worker and concurrent managers cannot reorder one worker's
+//! submissions (EXPERIMENTS.md §Batched request plane). The
+//! popped-vs-processed distinction of the pending gauge is unchanged —
+//! the batch is accounted with one
+//! [`messages_processed`](QueueSystem::messages_processed) call after its
+//! graph mutations complete.
 
 use std::sync::Arc;
 
@@ -31,6 +43,49 @@ pub struct DoneTaskMsg {
     /// Worker that executed the task (successors are scheduled to its
     /// ready queue for locality).
     pub worker: usize,
+}
+
+/// Reusable drain buffer for [`WorkerQueues::drain_batch`]. A manager
+/// keeps one per callback activation: messages are popped into it in one
+/// pass and the graph mutations are applied per batch
+/// (`RuntimeShared::process_batch`), so the steady state allocates
+/// nothing — the vectors keep their capacity across drains.
+#[derive(Default)]
+pub struct MsgBatch {
+    /// Submitted tasks, in the owning worker's FIFO program order.
+    pub submits: Vec<Arc<Wd>>,
+    /// Done notifications (their relative order does not affect graph
+    /// correctness; submits are applied first, mirroring Listing 2's
+    /// Submit-before-Done priority).
+    pub dones: Vec<DoneTaskMsg>,
+    /// Scratch for the tasks a batch made ready (`process_batch` fills and
+    /// drains it into the ready pools) — part of the batch buffer so the
+    /// manager hot path reuses its capacity instead of allocating.
+    pub ready: Vec<Arc<Wd>>,
+}
+
+impl MsgBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Messages currently buffered (the `ready` scratch is not a message).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.submits.len() + self.dones.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.submits.is_empty() && self.dones.is_empty()
+    }
+
+    /// Empty the buffers, keeping their capacity.
+    pub fn clear(&mut self) {
+        self.submits.clear();
+        self.dones.clear();
+        self.ready.clear();
+    }
 }
 
 /// The queue pair owned by one worker thread.
@@ -54,6 +109,68 @@ impl WorkerQueues {
     pub fn pending(&self) -> usize {
         self.submit.len() + self.done.len()
     }
+
+    /// Pop up to `budget` messages from this pair into `batch` in one pass
+    /// — Submit Task Messages first (they uncover parallelism; Listing 2's
+    /// priority), then Done Task Messages, both FIFO under the same
+    /// exclusive consumer tokens as per-message draining — and run `apply`
+    /// on the filled batch **while the Submit consumer token is still
+    /// held**. Holding the token across the graph application is what
+    /// keeps pop + insertion atomic per worker: without it, a second
+    /// manager could drain this worker's *next* submissions and insert
+    /// them into the graph before this batch's, breaking program order.
+    /// (Done messages carry no such ordering: their tasks already ran, and
+    /// concurrent finishes of distinct tasks commute under the shard
+    /// locks, exactly as when different workers' done queues are drained
+    /// by different managers.)
+    ///
+    /// A token held by another manager skips that queue (the caller
+    /// re-raises the worker if messages remain, exactly as before).
+    /// `batch` is cleared first and refilled; `apply` runs only if the
+    /// batch is non-empty. Returns the number of messages drained.
+    pub fn drain_batch_with<F: FnOnce(&mut MsgBatch)>(
+        &self,
+        budget: usize,
+        batch: &mut MsgBatch,
+        apply: F,
+    ) -> usize {
+        batch.clear();
+        // Bound to a named variable so the guard lives across `apply`.
+        let _submit_guard = match self.submit.try_acquire() {
+            Some(mut g) => {
+                while batch.submits.len() < budget {
+                    match g.pop() {
+                        Some(m) => batch.submits.push(m.task),
+                        None => break,
+                    }
+                }
+                Some(g)
+            }
+            None => None,
+        };
+        if let Some(mut g) = self.done.try_acquire() {
+            while batch.len() < budget {
+                match g.pop() {
+                    Some(m) => batch.dones.push(m),
+                    None => break,
+                }
+            }
+        }
+        let n = batch.len();
+        if n > 0 {
+            apply(batch);
+        }
+        n
+    }
+
+    /// [`drain_batch_with`](WorkerQueues::drain_batch_with) without the
+    /// in-token application step — the Submit token is released before the
+    /// caller sees the batch, so this is only program-order-safe in
+    /// **single-consumer** contexts (tests, diagnostics). Managers that
+    /// can run concurrently must use `drain_batch_with`.
+    pub fn drain_batch(&self, budget: usize, batch: &mut MsgBatch) -> usize {
+        self.drain_batch_with(budget, batch, |_| {})
+    }
 }
 
 /// All workers' queues, the work-signal directory managers scan instead of
@@ -76,7 +193,10 @@ impl QueueSystem {
     pub fn new(num_workers: usize) -> Self {
         QueueSystem {
             workers: (0..num_workers).map(|_| WorkerQueues::new()).collect(),
-            pending: ShardedCounter::new(),
+            // +2: the CentralDast DAS slot and stray non-pool threads also
+            // update the gauge (satellite fix: cells sized from the actual
+            // thread count instead of the fixed 16).
+            pending: ShardedCounter::with_shards(num_workers + 2),
             signals: SignalDirectory::new(num_workers.max(1)),
         }
     }
@@ -112,6 +232,14 @@ impl QueueSystem {
     #[inline]
     pub fn message_processed(&self) {
         self.pending.dec();
+    }
+
+    /// Per-batch accounting: mark `n` popped messages as fully processed
+    /// in one sharded-cell update (the batch path's counterpart of
+    /// [`message_processed`](QueueSystem::message_processed)).
+    #[inline]
+    pub fn messages_processed(&self, n: u64) {
+        self.pending.sub(n);
     }
 
     /// Messages pushed but not yet fully processed (relaxed sweep — gauge
@@ -224,5 +352,81 @@ mod tests {
         wq.submit.push(SubmitTaskMsg { task: mk(1) });
         wq.done.push(DoneTaskMsg { task: mk(2), worker: 0 });
         assert_eq!(wq.pending(), 2);
+    }
+
+    #[test]
+    fn drain_batch_prioritizes_submits_and_respects_budget() {
+        let wq = WorkerQueues::new();
+        for i in 1..=5u64 {
+            wq.submit.push(SubmitTaskMsg { task: mk(i) });
+        }
+        for i in 10..=12u64 {
+            wq.done.push(DoneTaskMsg { task: mk(i), worker: 0 });
+        }
+        let mut batch = MsgBatch::new();
+        // Budget 6: all 5 submits, then 1 done.
+        assert_eq!(wq.drain_batch(6, &mut batch), 6);
+        let ids: Vec<u64> = batch.submits.iter().map(|t| t.id.0).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4, 5], "submits drained FIFO, first");
+        assert_eq!(batch.dones.len(), 1);
+        assert_eq!(batch.dones[0].task.id, TaskId(10));
+        // The next drain clears the buffer and picks up the leftovers.
+        assert_eq!(wq.drain_batch(6, &mut batch), 2);
+        assert!(batch.submits.is_empty());
+        let dids: Vec<u64> = batch.dones.iter().map(|d| d.task.id.0).collect();
+        assert_eq!(dids, vec![11, 12]);
+        assert_eq!(wq.drain_batch(6, &mut batch), 0);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn drain_batch_with_holds_submit_token_during_apply() {
+        // The graph application must run under the Submit consumer token:
+        // releasing it earlier would let a second manager insert this
+        // worker's *later* submissions first (program-order violation).
+        let wq = WorkerQueues::new();
+        wq.submit.push(SubmitTaskMsg { task: mk(1) });
+        let mut batch = MsgBatch::new();
+        let n = wq.drain_batch_with(8, &mut batch, |b| {
+            assert_eq!(b.submits.len(), 1);
+            assert!(
+                wq.submit.try_acquire().is_none(),
+                "submit token must be held while the batch is applied"
+            );
+        });
+        assert_eq!(n, 1);
+        assert!(wq.submit.try_acquire().is_some(), "token released after apply");
+    }
+
+    #[test]
+    fn drain_batch_skips_held_tokens() {
+        let wq = WorkerQueues::new();
+        wq.submit.push(SubmitTaskMsg { task: mk(1) });
+        wq.done.push(DoneTaskMsg { task: mk(2), worker: 0 });
+        let held = wq.submit.try_acquire().unwrap();
+        let mut batch = MsgBatch::new();
+        // Submit token held elsewhere: only the done side drains; the
+        // caller sees pending() > 0 and re-raises, as per-message did.
+        assert_eq!(wq.drain_batch(8, &mut batch), 1);
+        assert!(batch.submits.is_empty());
+        assert_eq!(batch.dones.len(), 1);
+        assert_eq!(wq.pending(), 1);
+        drop(held);
+        assert_eq!(wq.drain_batch(8, &mut batch), 1);
+        assert_eq!(batch.submits.len(), 1);
+    }
+
+    #[test]
+    fn batch_accounting_per_batch() {
+        let qs = QueueSystem::new(2);
+        for i in 0..5u64 {
+            qs.push_submit(0, mk(i + 1));
+        }
+        let mut batch = MsgBatch::new();
+        let n = qs.workers[0].drain_batch(8, &mut batch) as u64;
+        assert_eq!(n, 5);
+        assert_eq!(qs.pending(), 5, "popped but not yet processed");
+        qs.messages_processed(n);
+        assert_eq!(qs.pending_exact(), 0);
     }
 }

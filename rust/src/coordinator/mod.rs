@@ -23,6 +23,7 @@ pub use ddast::DdastParams;
 pub use dep::{dep_in, dep_inout, dep_out, DepMode, Dependence};
 pub use depgraph::DepDomain;
 pub use dispatcher::{Dispatcher, LockedDispatcher};
+pub use messages::{MsgBatch, QueueSystem};
 pub use pool::{RuntimeKind, RuntimeShared};
 pub use ready::{LockedReadyPools, PoolContention, ReadyPools};
 pub use trace::{LockedTracer, ThreadState, TraceEvent, TraceKind, Tracer};

@@ -84,7 +84,9 @@ impl ReadyPools {
             queues: PoolQueues::PerThread(
                 (0..num_threads).map(|_| CachePadded::new(WsDeque::new())).collect(),
             ),
-            ready_count: ShardedCounter::new(),
+            // +2: the CentralDast DAS slot and stray non-pool threads
+            // (tests, the main thread before install) also touch the gauge.
+            ready_count: ShardedCounter::with_shards(num_threads + 2),
             steals: Counter::new(),
             rngs: Self::make_rngs(num_threads, seed),
         }
@@ -150,7 +152,15 @@ impl ReadyPools {
     /// several successors at once). On the deque path each push is an
     /// uncontended token CAS — no global lock to batch under; the gauge is
     /// still bumped once.
-    pub fn push_batch(&self, thread: usize, tasks: Vec<Arc<Wd>>) {
+    pub fn push_batch(&self, thread: usize, mut tasks: Vec<Arc<Wd>>) {
+        self.push_drain(thread, &mut tasks);
+    }
+
+    /// Like [`push_batch`](ReadyPools::push_batch), but *drains* a
+    /// caller-owned buffer, keeping its capacity — the batch path's
+    /// allocation-free variant (the buffer lives in `MsgBatch` and is
+    /// reused across drains).
+    pub fn push_drain(&self, thread: usize, tasks: &mut Vec<Arc<Wd>>) {
         if tasks.is_empty() {
             return;
         }
@@ -158,13 +168,13 @@ impl ReadyPools {
         match &self.queues {
             PoolQueues::PerThread(qs) => {
                 let q = &qs[thread % qs.len()];
-                for t in tasks {
+                for t in tasks.drain(..) {
                     q.push(t);
                 }
             }
             PoolQueues::Central(q) => {
                 let mut q = q.lock();
-                for t in tasks {
+                for t in tasks.drain(..) {
                     q.push_back(t);
                 }
             }

@@ -8,7 +8,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+// Offline shim stand-ins for the real `anyhow`/`xla` crates (see shim.rs).
+use crate::runtime::shim::{anyhow, xla, Context, Result};
 
 use crate::runtime::exec::ExecHandle;
 

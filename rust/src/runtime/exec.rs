@@ -5,7 +5,8 @@
 //! single-output case. `ExecHandle` is not `Send` (xla wrappers are
 //! `Rc`-based); worker threads go through [`crate::runtime::PjrtService`].
 
-use anyhow::{anyhow, Result};
+// Offline shim stand-ins for the real `anyhow`/`xla` crates (see shim.rs).
+use crate::runtime::shim::{anyhow, xla, Result};
 
 /// A float32 input tensor: data + shape.
 #[derive(Clone, Debug)]

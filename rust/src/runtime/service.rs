@@ -11,7 +11,8 @@
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+// Offline shim stand-ins for the real `anyhow` crate (see shim.rs).
+use crate::runtime::shim::{anyhow, Result};
 
 use crate::runtime::artifacts::ArtifactRegistry;
 use crate::runtime::exec::TensorArg;

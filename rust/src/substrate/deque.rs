@@ -86,18 +86,27 @@ impl<T> From<T> for CachePadded<T> {
 // ShardedCounter
 // ---------------------------------------------------------------------------
 
-/// Number of cells in a [`ShardedCounter`]. Power of two; threads map onto
-/// cells by a process-wide round-robin id, so up to 16 threads touch
-/// distinct cache lines (beyond that they share, still far better than one
-/// global line).
-const COUNTER_SHARDS: usize = 16;
+/// Floor on the default cell count of a [`ShardedCounter`] (the seed's
+/// fixed size). [`ShardedCounter::new`] sizes up from here when the host
+/// has more cores; structures that know their real thread count size
+/// exactly with [`ShardedCounter::with_shards`].
+const MIN_COUNTER_SHARDS: usize = 16;
+
+/// Hard cap on cells: bounds the sweep cost of `get`/`exact` (and the
+/// memory: 128 B per padded cell).
+const MAX_COUNTER_SHARDS: usize = 256;
 
 static NEXT_SHARD_ID: AtomicUsize = AtomicUsize::new(0);
+
+/// Cached default cell count (0 = not yet computed).
+static DEFAULT_SHARDS: AtomicUsize = AtomicUsize::new(0);
 
 thread_local! {
     static SHARD_ID: Cell<usize> = const { Cell::new(usize::MAX) };
 }
 
+/// Process-wide round-robin thread id (NOT masked: each counter masks by
+/// its own cell count, so differently-sized counters coexist).
 #[inline]
 fn shard_id() -> usize {
     SHARD_ID.with(|c| {
@@ -106,8 +115,22 @@ fn shard_id() -> usize {
             id = NEXT_SHARD_ID.fetch_add(1, Ordering::Relaxed);
             c.set(id);
         }
-        id & (COUNTER_SHARDS - 1)
+        id
     })
+}
+
+/// Default cell count: the host's parallelism rounded up to a power of
+/// two, floored at the seed's 16. Computed once (the syscall behind
+/// `available_parallelism` is not free) and cached.
+fn default_shards() -> usize {
+    let cached = DEFAULT_SHARDS.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let n = n.next_power_of_two().clamp(MIN_COUNTER_SHARDS, MAX_COUNTER_SHARDS);
+    DEFAULT_SHARDS.store(n, Ordering::Relaxed);
+    n
 }
 
 /// A gauge counter striped over per-thread cache-padded cells.
@@ -117,6 +140,12 @@ fn shard_id() -> usize {
 /// every scheduling action bounced one global cache line between cores.
 /// Cells are signed: a task pushed on thread A and popped on thread B leaves
 /// A's cell positive and B's negative; only the *sum* is meaningful.
+///
+/// The cell count is per instance: the seed's fixed 16 cells silently
+/// collided threads 17+ onto shared lines (the round-robin ids wrap at the
+/// mask). Owners that know their thread count size exactly with
+/// [`ShardedCounter::with_shards`]; [`ShardedCounter::new`] sizes from the
+/// host's parallelism, floored at the seed's 16 so nothing shrinks.
 ///
 /// Reads come in two strengths:
 /// * [`ShardedCounter::get`] — a relaxed sweep; cheap, monotonic enough for
@@ -135,30 +164,51 @@ impl Default for ShardedCounter {
 }
 
 impl ShardedCounter {
+    /// Default-sized counter (host parallelism, floored at 16 cells) —
+    /// for owners that cannot know their thread count up front.
     pub fn new() -> Self {
-        ShardedCounter {
-            cells: (0..COUNTER_SHARDS).map(|_| CachePadded::new(AtomicI64::new(0))).collect(),
-        }
+        Self::with_shards(default_shards())
+    }
+
+    /// Counter sized for `threads` concurrent updaters: cells = the next
+    /// power of two ≥ `threads`, clamped to `1..=MAX_COUNTER_SHARDS`, so
+    /// round-robin thread ids spread without colliding (the regression the
+    /// seed's fixed 16 hit beyond 16 threads).
+    pub fn with_shards(threads: usize) -> Self {
+        let n = threads.max(1).next_power_of_two().min(MAX_COUNTER_SHARDS);
+        ShardedCounter { cells: (0..n).map(|_| CachePadded::new(AtomicI64::new(0))).collect() }
+    }
+
+    /// Number of cells (power of two).
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// The calling thread's cell.
+    #[inline]
+    fn cell(&self) -> &AtomicI64 {
+        &self.cells[shard_id() & (self.cells.len() - 1)]
     }
 
     #[inline]
     pub fn inc(&self) {
-        self.cells[shard_id()].fetch_add(1, Ordering::Relaxed);
+        self.cell().fetch_add(1, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn add(&self, n: u64) {
-        self.cells[shard_id()].fetch_add(n as i64, Ordering::Relaxed);
+        self.cell().fetch_add(n as i64, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn dec(&self) {
-        self.cells[shard_id()].fetch_sub(1, Ordering::Relaxed);
+        self.cell().fetch_sub(1, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn sub(&self, n: u64) {
-        self.cells[shard_id()].fetch_sub(n as i64, Ordering::Relaxed);
+        self.cell().fetch_sub(n as i64, Ordering::Relaxed);
     }
 
     /// Relaxed sweep over the cells. Transiently off by in-flight updates;
@@ -752,6 +802,50 @@ mod tests {
         assert_eq!(c.get(), 20_000);
         c.reset();
         assert_eq!(c.exact(), 0);
+    }
+
+    #[test]
+    fn sharded_counter_sizes_past_sixteen_threads() {
+        // The seed's fixed 16 cells collided round-robin ids 17+ onto
+        // already-occupied lines. Sizing from the thread count removes the
+        // collision: 24 consecutive ids map to 24 distinct cells of a
+        // 24-thread counter.
+        let c = ShardedCounter::with_shards(24);
+        assert_eq!(c.num_shards(), 32, "next power of two");
+        let mask = c.num_shards() - 1;
+        let distinct: HashSet<usize> = (0..24).map(|id| id & mask).collect();
+        assert_eq!(distinct.len(), 24, "no two of 24 consecutive ids share a cell");
+        // The seed scheme provably collided: 24 consecutive ids into 16.
+        let seed_distinct: HashSet<usize> = (0..24).map(|id| id & 15).collect();
+        assert!(seed_distinct.len() < 24);
+        // Bounds.
+        assert_eq!(ShardedCounter::with_shards(0).num_shards(), 1);
+        assert_eq!(ShardedCounter::with_shards(1).num_shards(), 1);
+        assert_eq!(ShardedCounter::with_shards(100_000).num_shards(), 256, "hard cap");
+        assert!(ShardedCounter::new().num_shards() >= 16, "default never shrinks");
+    }
+
+    #[test]
+    fn sharded_counter_correct_with_24_threads() {
+        // Behavioral regression guard at > 16 threads: the sum stays exact
+        // whatever cells the ids land on.
+        let c = Arc::new(ShardedCounter::with_shards(24));
+        std::thread::scope(|s| {
+            for k in 0..24u64 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..2_000 {
+                        c.inc();
+                    }
+                    if k % 3 == 0 {
+                        for _ in 0..2_000 {
+                            c.dec();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(c.exact(), 16 * 2_000);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! discrete-event simulator and cheap atomic statistics.
 
 pub mod deque;
+pub mod park;
 pub mod rcu;
 pub mod signal;
 pub mod spsc;
@@ -18,6 +19,7 @@ pub mod vtime;
 pub mod stats;
 
 pub use deque::{CachePadded, ShardedCounter, Steal, WsDeque};
+pub use park::Parker;
 pub use rcu::RcuCell;
 pub use region::{RegionKey, RegionSet};
 pub use rng::XorShift64;

@@ -50,10 +50,39 @@
 //! [`scan_rotor`](SignalDirectory::scan_rotor) starts each scan at a
 //! rotating worker index (shared atomic rotor), so a noisy low-numbered
 //! worker cannot starve higher slots of manager attention.
+//!
+//! ## Parking (event-driven idle workers)
+//!
+//! A fully idle worker — nothing ready, nothing queued, dispatcher
+//! callbacks empty-handed — can *park* on the directory instead of
+//! sleeping blind: it announces itself in a parked-waiter bitmap
+//! ([`begin_park`](SignalDirectory::begin_park)), re-checks its wake
+//! condition, and blocks on its slot's [`Parker`]
+//! ([`park`](SignalDirectory::park)). Producers wake parked waiters
+//! through [`wake_parked`](SignalDirectory::wake_parked) — every
+//! [`raise`](SignalDirectory::raise) does this automatically, so the next
+//! enqueue after a worker parks wakes it.
+//!
+//! The no-lost-wakeup argument is the classic store-buffer (Dekker)
+//! pattern, closed with `SeqCst` fences:
+//!
+//! * waiter: RMW the parked bit, **fence**, load the work state (queues /
+//!   ready gauges / shutdown flag) — both inside `begin_park`'s contract;
+//! * producer: store the work (enqueue, ready push, shutdown flag),
+//!   **fence**, load the parked bitmap — the fence is issued by
+//!   `wake_parked` itself, before it reads the bitmap.
+//!
+//! Sequentially consistent fences on both sides forbid the outcome where
+//! each side misses the other's store: either the waiter's re-check sees
+//! the new work (and cancels the park), or the producer's wake scan sees
+//! the parked bit (and unparks). A wake that races a cancelled park
+//! leaves a token in the `Parker`; the next park attempt consumes it and
+//! falls through to another re-check — spurious, never lost.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use crate::substrate::deque::{CachePadded, ShardedCounter};
+use crate::substrate::park::Parker;
 use crate::substrate::stats::Counter;
 
 const WORD_BITS: usize = 64;
@@ -76,6 +105,15 @@ pub struct SignalDirectory {
     promotions: ShardedCounter,
     /// Successful claims (manager-side).
     claims: Counter,
+    /// Parked-waiter bitmap: bit = worker between `begin_park` and its
+    /// wake/cancel. Same word layout as `words`.
+    parked: Box<[CachePadded<AtomicU64>]>,
+    /// One parking slot per worker (see module docs §Parking).
+    parkers: Box<[CachePadded<Parker>]>,
+    /// Committed parks (worker actually blocked).
+    parks: Counter,
+    /// Successful wakes delivered to parked workers.
+    park_wakes: Counter,
 }
 
 impl SignalDirectory {
@@ -89,9 +127,13 @@ impl SignalDirectory {
             words: (0..nwords).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
             summary: CachePadded::new(AtomicU64::new(0)),
             rotor: CachePadded::new(AtomicUsize::new(0)),
-            raises: ShardedCounter::new(),
-            promotions: ShardedCounter::new(),
+            raises: ShardedCounter::with_shards(n + 2),
+            promotions: ShardedCounter::with_shards(n + 2),
             claims: Counter::new(),
+            parked: (0..nwords).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            parkers: (0..n).map(|_| CachePadded::new(Parker::new())).collect(),
+            parks: Counter::new(),
+            park_wakes: Counter::new(),
         }
     }
 
@@ -109,7 +151,13 @@ impl SignalDirectory {
     /// Mark `worker` dirty. Callable from any thread (re-raising a worker
     /// whose budgeted drain left messages behind is done by managers); the
     /// hot path — the worker signalling its own enqueue — is one `AcqRel`
-    /// swap on the worker's private flag line plus a sharded stat bump.
+    /// swap on the worker's private flag line plus a sharded stat bump,
+    /// plus the parked-waiter wake check (a fence and a bitmap load when
+    /// nobody is parked — see module docs §Parking).
+    ///
+    /// The wake check runs on *every* raise, not only on clean→dirty
+    /// promotions: a stale-dirty flag (raised, queue already drained) must
+    /// not swallow the wakeup for a fresh message behind it.
     #[inline]
     pub fn raise(&self, worker: usize) {
         debug_assert!(worker < self.flags.len());
@@ -123,6 +171,7 @@ impl SignalDirectory {
                 self.summary.fetch_or(1u64 << wi, Ordering::AcqRel);
             }
         }
+        self.wake_parked(1);
     }
 
     /// Is `worker` currently marked dirty? (Racy peek, for telemetry and
@@ -182,6 +231,89 @@ impl SignalDirectory {
     /// (raises, clean→dirty promotions, successful claims).
     pub fn stats(&self) -> (u64, u64, u64) {
         (self.raises.get(), self.promotions.get(), self.claims.get())
+    }
+
+    // ---- parking ---------------------------------------------------------
+
+    /// Announce that `worker` is about to park: publish its parked bit with
+    /// a `SeqCst` RMW, then fence. **Contract:** the caller must re-check
+    /// its wake condition (queued messages, ready tasks, shutdown) *after*
+    /// this returns, and then either [`park`](SignalDirectory::park) or
+    /// [`cancel_park`](SignalDirectory::cancel_park). The trailing fence
+    /// pairs with the one in [`wake_parked`](SignalDirectory::wake_parked)
+    /// so plain loads suffice for the re-check (module docs §Parking).
+    pub fn begin_park(&self, worker: usize) {
+        debug_assert!(worker < self.flags.len());
+        let wi = worker / WORD_BITS;
+        let bit = 1u64 << (worker % WORD_BITS);
+        self.parked[wi].fetch_or(bit, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+    }
+
+    /// Abort a park attempt announced with `begin_park` (the re-check found
+    /// work). A wake that already claimed the bit left a token in the
+    /// slot's `Parker`; the next `park` consumes it and returns immediately
+    /// — one spurious loop, never a lost wakeup.
+    pub fn cancel_park(&self, worker: usize) {
+        let wi = worker / WORD_BITS;
+        let bit = 1u64 << (worker % WORD_BITS);
+        self.parked[wi].fetch_and(!bit, Ordering::AcqRel);
+    }
+
+    /// Commit the park announced with `begin_park`: block until a producer
+    /// wakes this slot (or a pending token is consumed). Clears the parked
+    /// bit on return. Only the slot's owner thread may call this.
+    pub fn park(&self, worker: usize) {
+        self.parks.inc();
+        self.parkers[worker].park();
+        // A waker normally clears the bit before unparking; clear it
+        // ourselves in case the token came from a wake raced by an earlier
+        // cancelled attempt.
+        self.cancel_park(worker);
+    }
+
+    /// Wake up to `n` parked workers. Issues the producer-side `SeqCst`
+    /// fence (module docs §Parking) before reading the bitmap, so callers
+    /// only need to have *already published* the work being signalled.
+    /// Called by [`raise`](SignalDirectory::raise) for message traffic;
+    /// ready-task producers and shutdown call it directly. Returns the
+    /// number of workers woken.
+    pub fn wake_parked(&self, n: usize) -> usize {
+        fence(Ordering::SeqCst);
+        let mut woken = 0;
+        for (wi, word) in self.parked.iter().enumerate() {
+            if woken >= n {
+                break;
+            }
+            let mut val = word.load(Ordering::Acquire);
+            while val != 0 && woken < n {
+                let bit = val & val.wrapping_neg();
+                val &= !bit;
+                // Claim the bit; a racing waker may have beaten us to it.
+                if word.fetch_and(!bit, Ordering::AcqRel) & bit != 0 {
+                    let w = wi * WORD_BITS + bit.trailing_zeros() as usize;
+                    self.parkers[w].unpark();
+                    self.park_wakes.inc();
+                    woken += 1;
+                }
+            }
+        }
+        woken
+    }
+
+    /// Wake every parked worker (shutdown, quiescence edges).
+    pub fn wake_all(&self) -> usize {
+        self.wake_parked(usize::MAX)
+    }
+
+    /// Workers currently announced as parked (racy peek, tests/telemetry).
+    pub fn parked_count(&self) -> usize {
+        self.parked.iter().map(|w| w.load(Ordering::Acquire).count_ones() as usize).sum()
+    }
+
+    /// (committed parks, wakes delivered to parked workers).
+    pub fn park_stats(&self) -> (u64, u64) {
+        (self.parks.get(), self.park_wakes.get())
     }
 }
 
@@ -386,5 +518,87 @@ mod tests {
             assert_eq!(pending[w].load(Ordering::Acquire), 0, "worker {w} left behind");
         }
         assert!(dir.first_raised_from(0).is_none());
+    }
+
+    // ---- parking ---------------------------------------------------------
+
+    #[test]
+    fn park_cancel_and_token_roundtrip() {
+        let dir = SignalDirectory::new(8);
+        assert_eq!(dir.parked_count(), 0);
+        dir.begin_park(3);
+        assert_eq!(dir.parked_count(), 1);
+        dir.cancel_park(3);
+        assert_eq!(dir.parked_count(), 0);
+        // A wake that wins the race against the (re-announced) parker
+        // deposits a token; park then returns without blocking.
+        dir.begin_park(3);
+        assert_eq!(dir.wake_parked(1), 1);
+        assert_eq!(dir.parked_count(), 0, "waker claimed the bit");
+        dir.begin_park(3);
+        dir.park(3); // consumes the pending token, must not block
+        assert_eq!(dir.parked_count(), 0);
+        let (parks, wakes) = dir.park_stats();
+        assert_eq!(parks, 1);
+        assert_eq!(wakes, 1);
+    }
+
+    #[test]
+    fn wake_parked_bounds_and_wake_all() {
+        let dir = SignalDirectory::new(130);
+        for w in [1usize, 64, 129] {
+            dir.begin_park(w);
+        }
+        assert_eq!(dir.parked_count(), 3);
+        assert_eq!(dir.wake_parked(2), 2);
+        assert_eq!(dir.parked_count(), 1);
+        assert_eq!(dir.wake_all(), 1);
+        assert_eq!(dir.parked_count(), 0);
+        assert_eq!(dir.wake_all(), 0, "nothing left to wake");
+    }
+
+    /// A worker that parks concurrently with a raise must wake: the raise
+    /// side publishes work then wakes, the park side announces then
+    /// re-checks then commits. A lost wakeup hangs (and times out) here.
+    #[test]
+    fn park_concurrent_with_raise_always_wakes() {
+        const ROUNDS: u64 = 10_000;
+        let dir = Arc::new(SignalDirectory::new(4));
+        let work = Arc::new(StdAtomicU64::new(0));
+        let done = Arc::new(StdAtomicU64::new(0));
+        let (dir2, work2, done2) = (Arc::clone(&dir), Arc::clone(&work), Arc::clone(&done));
+        let consumer = std::thread::spawn(move || {
+            let mut got = 0u64;
+            while got < ROUNDS {
+                let n = work2.swap(0, Ordering::AcqRel);
+                if n > 0 {
+                    got += n;
+                    dir2.try_claim(0);
+                    done2.store(got, Ordering::Release);
+                    continue;
+                }
+                dir2.begin_park(0);
+                // Re-check after the announce (plain load: the fences in
+                // begin_park / wake_parked close the store-buffer race).
+                if work2.load(Ordering::Relaxed) == 0 {
+                    dir2.park(0);
+                } else {
+                    dir2.cancel_park(0);
+                }
+            }
+        });
+        for i in 0..ROUNDS {
+            work.fetch_add(1, Ordering::AcqRel);
+            dir.raise(0); // publish-then-wake
+            while done.load(Ordering::Acquire) < i + 1 {
+                std::thread::yield_now();
+            }
+        }
+        consumer.join().unwrap();
+        let (parks, wakes) = dir.park_stats();
+        // Not every round parks (the consumer may see the work before
+        // announcing), but any committed park must have been woken.
+        assert!(parks <= ROUNDS + 1);
+        assert!(wakes >= parks.saturating_sub(1), "parks {parks} vs wakes {wakes}");
     }
 }

@@ -114,6 +114,22 @@ fn contention_ab_smoke_and_json() {
         // Same shape for the tracer: one mutex per recorded event vs none.
         assert!(report.trace_append.old.acquisitions >= threads * ops);
         assert_eq!(report.trace_append.new.acquisitions, 0);
+
+        // Batched graph insertion (acceptance criterion, counter-verified):
+        // per-message pays exactly one shard acquisition per submit; the
+        // per-batch path acquires the batch's shard union once, at most
+        // half as many acquisitions on this drill's 4-region workload.
+        assert_eq!(
+            report.batch_submit.old.acquisitions,
+            threads * ops,
+            "per-message baseline is one shard acquisition per message"
+        );
+        assert!(
+            report.batch_submit.new.acquisitions * 2 <= report.batch_submit.old.acquisitions,
+            "batch path must show fewer shard acquisitions per message: old={} new={}",
+            report.batch_submit.old.acquisitions,
+            report.batch_submit.new.acquisitions
+        );
     }
 
     // Sparse-traffic request-plane sweep at 8/32/128 simulated workers:
@@ -142,14 +158,27 @@ fn contention_ab_smoke_and_json() {
         "new-side grabs track traffic, not worker count"
     );
 
-    let json = contention::suite_to_json(&reports, &sweeps, "cargo test contention_ab_smoke_and_json");
+    // Park-vs-sleep wake drill: completion is the no-lost-wakeup property
+    // (a swallowed wake hangs it); latency claims stay in the bench.
+    let park_wake = contention::park_wake_ab(50);
+    assert_eq!(park_wake.new.acquisitions, 50);
+
+    let json = contention::suite_to_json(
+        &reports,
+        &sweeps,
+        &park_wake,
+        "cargo test contention_ab_smoke_and_json",
+    );
     assert!(json.contains("\"contended_reduction\""));
     assert!(json.contains("\"signal_sweep\""));
+    assert!(json.contains("\"batch_submit\""));
+    assert!(json.contains("\"park_wake\""));
     let path = contention::default_json_path();
     if contention::write_suite_json(
         &path,
         &reports,
         &sweeps,
+        &park_wake,
         "cargo test contention_ab_smoke_and_json",
     ) {
         eprintln!("refreshed {}", path.display());
@@ -160,6 +189,7 @@ fn contention_ab_smoke_and_json() {
     for s in &sweeps {
         eprintln!("{}", contention::render_sweep(s));
     }
+    eprintln!("{}", contention::render_park_wake(&park_wake));
 }
 
 /// Acceptance guard for the request-plane refactor: during a sparse-traffic
