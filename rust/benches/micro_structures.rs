@@ -40,6 +40,12 @@ fn main() {
     println!("\n== idle-wake A/B: blind 100µs sleep vs directory parking ==\n");
     let park_wake = contention::park_wake_ab(2_000);
     print!("{}", contention::render_park_wake(&park_wake));
+    println!("\n== taskwait-wake A/B: spin/sleep ladder vs child-completion wake edge ==\n");
+    let taskwait_park = contention::taskwait_park_ab(2_000);
+    print!("{}", contention::render_taskwait_park(&taskwait_park));
+    println!("\n== batch-budget A/B: fixed MAX_OPS_THREAD vs auto-tuned ==\n");
+    let budget_adapt = contention::budget_adapt_ab(16_384);
+    print!("{}", contention::render_budget_adapt(&budget_adapt));
     println!();
     let path = contention::default_json_path();
     if contention::write_suite_json(
@@ -47,6 +53,8 @@ fn main() {
         &reports,
         &sweeps,
         &park_wake,
+        &taskwait_park,
+        &budget_adapt,
         "cargo bench --bench micro_structures",
     ) {
         println!("wrote {}\n", path.display());

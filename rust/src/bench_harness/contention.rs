@@ -422,9 +422,10 @@ pub fn park_wake_ab(rounds: u64) -> AbReport {
                         continue;
                     }
                     if parked {
-                        dir.begin_park(0);
-                        // Plain re-check: the begin_park / wake_parked
-                        // fences close the store-buffer race.
+                        // Sole owner of slot 0, so the announce always
+                        // claims. Plain re-check: the begin_park /
+                        // wake_parked fences close the store-buffer race.
+                        assert!(dir.begin_park(0));
                         if work.load(Ordering::Relaxed) == 0 {
                             dir.park(0);
                         } else {
@@ -453,6 +454,133 @@ pub fn park_wake_ab(rounds: u64) -> AbReport {
     }
 
     AbReport { old: drill(rounds, false), new: drill(rounds, true) }
+}
+
+/// Taskwait-wake drill: a waiter repeatedly waits for a one-child
+/// "taskwait" to complete, round-trip with a finisher thread playing the
+/// last child's finalizer. Old side: the seed's blind spin → yield →
+/// sleep ladder polling the child count (the pre-parking `taskwait_on`
+/// shape — up to a 100 µs sleep quantum of wake latency per round). New
+/// side: the waiter registers the **child-completion wake edge** on a
+/// real `Wd` (`register_waiter`) and parks on a [`SignalDirectory`]; the
+/// finisher's decrement-to-zero claims the registration (`take_waiter`)
+/// and wakes the slot (`wake_worker`). `acquisitions` records completed
+/// rounds on both sides (completion *is* the no-lost-wakeup check: a
+/// swallowed wake hangs the drill); `elapsed_ns` is the makespan.
+pub fn taskwait_park_ab(rounds: u64) -> AbReport {
+    fn drill(rounds: u64, parked: bool) -> SideReport {
+        let dir = SignalDirectory::new(2);
+        let parent = mk_task(1);
+        let started = AtomicU64::new(0);
+        let finished = AtomicU64::new(0);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            let (dir, parent) = (&dir, &parent);
+            let (started, finished) = (&started, &finished);
+            // Finisher: the last child's finalizer — decrement first,
+            // then claim the waiter registration and wake the parent.
+            s.spawn(move || {
+                for r in 0..rounds {
+                    while started.load(Ordering::Acquire) <= r {
+                        std::thread::yield_now();
+                    }
+                    parent.child_done();
+                    if let Some(w) = parent.take_waiter() {
+                        dir.wake_worker(w);
+                    }
+                }
+            });
+            // Waiter (worker slot 0).
+            for _ in 0..rounds {
+                parent.child_created();
+                started.fetch_add(1, Ordering::AcqRel);
+                let mut idle: u32 = 0;
+                while parent.children_live() > 0 {
+                    idle += 1;
+                    if idle < 32 {
+                        std::hint::spin_loop();
+                        continue;
+                    }
+                    if parked {
+                        // register → announce → re-check → commit (sole
+                        // owner of slot 0, so the announce always claims).
+                        if let Some(token) = parent.register_waiter(0) {
+                            if dir.begin_park(0) {
+                                if parent.children_live() > 0 {
+                                    dir.park(0);
+                                } else {
+                                    dir.cancel_park(0);
+                                }
+                            }
+                            parent.clear_waiter(token);
+                        }
+                    } else if idle < 64 {
+                        // The seed ladder, compressed so the drill reaches
+                        // its sleep tier at the same point the parking
+                        // side commits.
+                        std::thread::yield_now();
+                    } else {
+                        std::thread::sleep(Duration::from_micros(100));
+                    }
+                }
+                finished.fetch_add(1, Ordering::AcqRel);
+            }
+        });
+        SideReport {
+            acquisitions: finished.load(Ordering::Acquire),
+            elapsed_ns: t0.elapsed().as_nanos() as u64,
+            ..SideReport::default()
+        }
+    }
+
+    AbReport { old: drill(rounds, false), new: drill(rounds, true) }
+}
+
+/// Adaptive-batch-budget drill (the paper's §8 future work, closed by
+/// `AutoTuner`): drain a deep burst of `msgs` Submit messages through
+/// budgeted `drain_batch_with` rounds against a real single-worker
+/// runtime's request plane. Old side: the fixed Table-5 budget (8) —
+/// `msgs / 8` token round-trips. New side: the **real controller**
+/// (`AutoTuner::step`) runs before every round and grows the budget
+/// geometrically toward `MAX_OPS_THREAD_CAP` while the backlog exceeds
+/// one manager round, so the same burst drains in a fraction of the
+/// token grabs. `acquisitions` counts Submit+Done consumer-token
+/// acquisitions (deterministic — the counter-verified A/B metric); both
+/// sides must drain every message.
+pub fn budget_adapt_ab(msgs: u64) -> AbReport {
+    fn drill(msgs: u64, adaptive: bool) -> SideReport {
+        use crate::coordinator::autotune::AutoTuner;
+        use crate::coordinator::ddast::DdastParams;
+        use crate::coordinator::messages::MsgBatch;
+        use crate::coordinator::pool::{RuntimeKind, RuntimeShared};
+
+        let rt = RuntimeShared::new(RuntimeKind::Ddast, 1, DdastParams::tuned(1), false, 17);
+        let root = Arc::clone(&rt.root);
+        for i in 0..msgs {
+            rt.spawn_from(0, &root, vec![dep_out(1_000_000 + i)], "drill", Box::new(|| {}));
+        }
+        let tuner = AutoTuner::new(Arc::clone(&rt), Duration::ZERO);
+        let mut batch = MsgBatch::new();
+        let mut drained = 0u64;
+        let t0 = Instant::now();
+        while drained < msgs {
+            if adaptive {
+                tuner.step();
+            }
+            let budget = rt.tunables().snapshot().max_ops_thread;
+            let n = rt.queues.workers[0]
+                .drain_batch_with(budget, &mut batch, |b| rt.process_batch(0, b));
+            drained += n as u64;
+        }
+        let wq = &rt.queues.workers[0];
+        SideReport {
+            acquisitions: wq.submit.acquire_count() + wq.done.acquire_count(),
+            elapsed_ns: t0.elapsed().as_nanos() as u64,
+            ..SideReport::default()
+        }
+    }
+
+    AbReport { old: drill(msgs, false), new: drill(msgs, true) }
 }
 
 /// Drain one worker's queue pair (both sweep variants must do identical
@@ -606,13 +734,15 @@ fn sweep_json_inline(s: &SweepReport) -> String {
 }
 
 /// Serialize the full suite: per-thread-count reports (each carrying the
-/// `batch_submit` drill), the sparse-traffic sweep series and the
-/// park-vs-sleep wake-latency pair — the shape `BENCH_contention.json`
-/// carries.
+/// `batch_submit` drill), the sparse-traffic sweep series, the
+/// park-vs-sleep wake-latency pair, the taskwait-wake pair and the
+/// adaptive-batch-budget pair — the shape `BENCH_contention.json` carries.
 pub fn suite_to_json(
     reports: &[ContentionReport],
     sweeps: &[SweepReport],
     park_wake: &AbReport,
+    taskwait_park: &AbReport,
+    budget_adapt: &AbReport,
     generated_by: &str,
 ) -> String {
     let reports_json: Vec<String> =
@@ -621,11 +751,14 @@ pub fn suite_to_json(
         sweeps.iter().map(|s| format!("    {}", sweep_json_inline(s))).collect();
     format!(
         "{{\n  \"generated_by\": \"{}\",\n  \"reports\": [\n{}\n  ],\n  \
-         \"signal_sweep\": [\n{}\n  ],\n  \"park_wake\": {}\n}}\n",
+         \"signal_sweep\": [\n{}\n  ],\n  \"park_wake\": {},\n  \
+         \"taskwait_park\": {},\n  \"budget_adapt\": {}\n}}\n",
         generated_by,
         reports_json.join(",\n"),
         sweeps_json.join(",\n"),
-        ab_json(park_wake)
+        ab_json(park_wake),
+        ab_json(taskwait_park),
+        ab_json(budget_adapt)
     )
 }
 
@@ -692,6 +825,33 @@ pub fn render_park_wake(ab: &AbReport) -> String {
     )
 }
 
+/// Human-readable line for the taskwait-wake drill.
+pub fn render_taskwait_park(ab: &AbReport) -> String {
+    let rounds = ab.old.acquisitions.max(1);
+    format!(
+        "taskwait wake — {} child-completion round trips: spin/sleep ladder {:.2} ms \
+         ({:.1} µs/wake) vs wake-edge park {:.2} ms ({:.1} µs/wake)\n",
+        rounds,
+        ab.old.elapsed_ns as f64 / 1e6,
+        ab.old.elapsed_ns as f64 / rounds as f64 / 1e3,
+        ab.new.elapsed_ns as f64 / 1e6,
+        ab.new.elapsed_ns as f64 / rounds as f64 / 1e3
+    )
+}
+
+/// Human-readable line for the adaptive-budget drill.
+pub fn render_budget_adapt(ab: &AbReport) -> String {
+    format!(
+        "budget adapt — burst drain: fixed MAX_OPS_THREAD {} token grabs vs \
+         auto-tuned {} ({:.1}x fewer), {:.2} ms vs {:.2} ms\n",
+        ab.old.acquisitions,
+        ab.new.acquisitions,
+        ab.old.acquisitions as f64 / ab.new.acquisitions.max(1) as f64,
+        ab.old.elapsed_ns as f64 / 1e6,
+        ab.new.elapsed_ns as f64 / 1e6
+    )
+}
+
 fn fmt_reduction(x: f64) -> String {
     if x.is_finite() {
         format!("{x:.1}x")
@@ -727,9 +887,15 @@ pub fn write_suite_json(
     reports: &[ContentionReport],
     sweeps: &[SweepReport],
     park_wake: &AbReport,
+    taskwait_park: &AbReport,
+    budget_adapt: &AbReport,
     generated_by: &str,
 ) -> bool {
-    std::fs::write(path, suite_to_json(reports, sweeps, park_wake, generated_by)).is_ok()
+    std::fs::write(
+        path,
+        suite_to_json(reports, sweeps, park_wake, taskwait_park, budget_adapt, generated_by),
+    )
+    .is_ok()
 }
 
 #[cfg(test)]
@@ -773,11 +939,15 @@ mod tests {
         let reports = [run_ab(1, 20), run_ab(2, 20)];
         let sweeps = [run_sweep(8, 40), run_sweep(32, 40)];
         let pw = park_wake_ab(10);
-        let j = suite_to_json(&reports, &sweeps, &pw, "unit test");
+        let tw = taskwait_park_ab(10);
+        let ba = budget_adapt_ab(256);
+        let j = suite_to_json(&reports, &sweeps, &pw, &tw, &ba, "unit test");
         for key in [
             "\"reports\"",
             "\"signal_sweep\"",
             "\"park_wake\"",
+            "\"taskwait_park\"",
+            "\"budget_adapt\"",
             "\"workers\": 32",
             "\"threads\": 2",
         ] {
@@ -785,6 +955,36 @@ mod tests {
         }
         assert!(render_sweep(&sweeps[0]).contains("simulated workers"));
         assert!(render_park_wake(&pw).contains("round trips"));
+        assert!(render_taskwait_park(&tw).contains("child-completion"));
+        assert!(render_budget_adapt(&ba).contains("token grabs"));
+    }
+
+    #[test]
+    fn taskwait_park_drill_completes_both_sides() {
+        // Completion *is* the no-lost-wakeup property: a child-completion
+        // wake swallowed while the waiter commits to parking hangs the
+        // drill (and times out the suite).
+        let ab = taskwait_park_ab(25);
+        assert_eq!(ab.old.acquisitions, 25);
+        assert_eq!(ab.new.acquisitions, 25);
+        assert!(ab.old.elapsed_ns > 0 && ab.new.elapsed_ns > 0);
+    }
+
+    #[test]
+    fn budget_adapt_drains_with_fewer_token_grabs() {
+        // Deterministic counter check: the fixed-budget side pays exactly
+        // one Submit + one Done token acquisition per 8-message round; the
+        // controller-driven side grows its budget toward the cap and pays
+        // at least 4x fewer grabs on a deep burst.
+        let msgs = 2_048u64;
+        let ab = budget_adapt_ab(msgs);
+        assert_eq!(ab.old.acquisitions, 2 * msgs / 8, "fixed budget = msgs/8 rounds");
+        assert!(
+            ab.new.acquisitions * 4 <= ab.old.acquisitions,
+            "adaptive budget must cut token grabs: old={} new={}",
+            ab.old.acquisitions,
+            ab.new.acquisitions
+        );
     }
 
     #[test]

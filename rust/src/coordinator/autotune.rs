@@ -12,7 +12,17 @@
 //!   managers cannot keep up → raise `MAX_DDAST_THREADS`;
 //! * **idle managers**: activations that found little work → shrink
 //!   `MAX_DDAST_THREADS` back toward the static tuned value (locality,
-//!   §5.1).
+//!   §5.1);
+//! * **queue depth vs batch budget** (`MAX_OPS_THREAD`): a backlog deeper
+//!   than one full manager round at the current budget means every claimed
+//!   worker leaves messages behind → grow the budget geometrically toward
+//!   [`MAX_OPS_THREAD_CAP`], so one shard-acquisition set drains more of
+//!   the burst; an idle request plane decays it back toward the tuned
+//!   baseline (oversized batches only pay off under backlog, small ones
+//!   keep the next burst's first message from waiting behind a deep
+//!   drain). The DDAST callback snapshots the live value on entry
+//!   (`TunableParams::snapshot`), so every activation drains with the
+//!   current budget.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -21,6 +31,12 @@ use std::time::Instant;
 use crate::coordinator::ddast::DdastParams;
 use crate::coordinator::pool::RuntimeShared;
 use crate::substrate::Counter;
+
+/// Upper cap the controller may grow `MAX_OPS_THREAD` to: deep enough to
+/// amortize one shard-acquisition set over a whole burst, small enough to
+/// bound how long a manager stays away from task execution (and how much
+/// a reusable `MsgBatch` buffer can grow).
+pub const MAX_OPS_THREAD_CAP: usize = 64;
 
 /// Atomically adjustable DDAST parameters.
 #[derive(Debug)]
@@ -83,6 +99,10 @@ pub struct AutoTuner {
     pub adjustments: Counter,
     pub raises: Counter,
     pub decays: Counter,
+    /// Batch-budget (`MAX_OPS_THREAD`) raises toward [`MAX_OPS_THREAD_CAP`].
+    pub budget_raises: Counter,
+    /// Batch-budget decays back toward the tuned baseline.
+    pub budget_decays: Counter,
 }
 
 impl AutoTuner {
@@ -99,6 +119,8 @@ impl AutoTuner {
             adjustments: Counter::new(),
             raises: Counter::new(),
             decays: Counter::new(),
+            budget_raises: Counter::new(),
+            budget_decays: Counter::new(),
         })
     }
 
@@ -152,6 +174,26 @@ impl AutoTuner {
                 adjusted = true;
             }
         }
+        // Signal 3 (§8 batch budgets, ROADMAP candidate): drive
+        // MAX_OPS_THREAD against the observed queue depth. Deeper backlog
+        // than one full manager round at the current budget → every
+        // claimed worker leaves messages behind and gets re-raised — grow
+        // the budget geometrically toward the cap. An idle request plane
+        // (no backlog at all) → decay geometrically back to the tuned
+        // baseline. The DDAST callback snapshots the live value on entry,
+        // so the next activation drains with the adjusted budget.
+        if backlog as usize > p.max_ops_thread * self.rt.num_threads {
+            if p.max_ops_thread < MAX_OPS_THREAD_CAP {
+                tunables.set_max_ops_thread((p.max_ops_thread * 2).min(MAX_OPS_THREAD_CAP));
+                self.budget_raises.inc();
+                adjusted = true;
+            }
+        } else if backlog == 0 && p.max_ops_thread > self.baseline.max_ops_thread {
+            tunables
+                .set_max_ops_thread((p.max_ops_thread / 2).max(self.baseline.max_ops_thread));
+            self.budget_decays.inc();
+            adjusted = true;
+        }
         if adjusted {
             self.adjustments.inc();
         }
@@ -162,6 +204,86 @@ impl AutoTuner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::dep::dep_out;
+    use crate::coordinator::pool::RuntimeKind;
+
+    /// Push `n` single-dep tasks into the request plane without processing
+    /// them (synthetic backlog for the controller).
+    fn push_backlog(rt: &Arc<RuntimeShared>, n: u64, base: u64) {
+        let root = Arc::clone(&rt.root);
+        for i in 0..n {
+            rt.spawn_from(0, &root, vec![dep_out(base + i)], "synthetic", Box::new(|| {}));
+        }
+    }
+
+    #[test]
+    fn backlog_grows_budget_to_cap_and_idle_decays_to_baseline() {
+        let rt = RuntimeShared::new(RuntimeKind::Ddast, 2, DdastParams::tuned(2), false, 11);
+        let tuner = AutoTuner::new(Arc::clone(&rt), std::time::Duration::ZERO);
+        // 200 unprocessed messages — far deeper than one manager round at
+        // the tuned budget (8 msgs × 2 workers).
+        push_backlog(&rt, 200, 1_000);
+        assert_eq!(rt.tunables().snapshot().max_ops_thread, 8);
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            tuner.step();
+            seen.push(rt.tunables().snapshot().max_ops_thread);
+        }
+        assert_eq!(seen, vec![16, 32, 64, 64, 64, 64], "geometric growth, capped");
+        assert_eq!(tuner.budget_raises.get(), 3, "no further raises at the cap");
+        // Drain the backlog without processing latency: the request plane
+        // goes idle and the budget decays back to the tuned baseline.
+        let mut n = 0u64;
+        {
+            let mut g = rt.queues.workers[0].submit.try_acquire().unwrap();
+            while g.pop().is_some() {
+                n += 1;
+            }
+        }
+        rt.queues.messages_processed(n);
+        assert_eq!(rt.queues.pending_exact(), 0);
+        let mut seen = Vec::new();
+        for _ in 0..5 {
+            tuner.step();
+            seen.push(rt.tunables().snapshot().max_ops_thread);
+        }
+        assert_eq!(seen, vec![32, 16, 8, 8, 8], "decay stops at the tuned baseline");
+        assert_eq!(tuner.budget_decays.get(), 3);
+    }
+
+    /// Regression: the DDAST callback's `drain_batch_with` budget comes
+    /// from `TunableParams::snapshot` **per activation** — a mid-run
+    /// change must be honored by the next activation's drain.
+    #[test]
+    fn ddast_callback_honors_live_budget_next_activation() {
+        use crate::coordinator::ddast::ddast_callback;
+        let params = DdastParams {
+            max_ddast_threads: 1,
+            max_spins: 1,
+            max_ops_thread: 4,
+            // One ready task is "enough parallelism": the callback exits
+            // after its first claimed-worker batch, so one activation
+            // drains exactly one budget's worth.
+            min_ready_tasks: 1,
+        };
+        let rt = RuntimeShared::new(RuntimeKind::Ddast, 1, params, false, 23);
+        // 20 independent single-dep tasks: every submit becomes ready.
+        push_backlog(&rt, 20, 10_000);
+        let drained_by_one_activation = |rt: &Arc<RuntimeShared>| {
+            let before = rt.stats.mgr_msgs.get();
+            assert!(ddast_callback(rt, 0), "the activation satisfied messages");
+            rt.stats.mgr_msgs.get() - before
+        };
+        assert_eq!(drained_by_one_activation(&rt), 4, "static budget on activation 1");
+        // Mid-run change: picked up by the *next* activation's snapshot.
+        rt.tunables().set_max_ops_thread(12);
+        while rt.ready.get(0).is_some() {} // re-arm the MIN_READY_TASKS exit
+        assert_eq!(drained_by_one_activation(&rt), 12, "raised budget applies");
+        rt.tunables().set_max_ops_thread(2);
+        while rt.ready.get(0).is_some() {}
+        assert_eq!(drained_by_one_activation(&rt), 2, "lowered budget applies");
+        assert_eq!(rt.queues.pending_exact(), 20 - 4 - 12 - 2);
+    }
 
     #[test]
     fn snapshot_roundtrip() {

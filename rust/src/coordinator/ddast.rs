@@ -16,7 +16,10 @@ pub struct DdastParams {
     /// before leaving the callback.
     pub max_spins: u32,
     /// Maximum messages satisfied from the same worker's queues before
-    /// moving to the next worker.
+    /// moving to the next worker — also the per-batch drain budget of
+    /// `drain_batch_with`. Live-tuned against observed queue depth by the
+    /// `AutoTuner` (§8), between the Table-5 baseline and
+    /// `MAX_OPS_THREAD_CAP`; the callback snapshots it per activation.
     pub max_ops_thread: usize,
     /// Manager threads exit once at least this many ready tasks exist.
     pub min_ready_tasks: u64,
@@ -83,7 +86,10 @@ impl Default for DdastParams {
 /// Dispatcher uses this for its idle accounting).
 pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
     // Snapshot the live parameters: the auto-tuner (§8 future work) may
-    // adjust them between callback executions.
+    // adjust them between callback executions — in particular the
+    // per-worker batch budget `max_ops_thread`, which it drives against
+    // observed queue depth, so every activation drains with the current
+    // budget (guarded by `ddast_callback_honors_live_budget_next_activation`).
     let p = rt.tunables().snapshot();
 
     // Listing 2 line 1: `if (numThreads >= MAX_DDAST_THREADS) return`.

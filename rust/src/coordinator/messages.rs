@@ -115,7 +115,10 @@ impl WorkerQueues {
     /// priority), then Done Task Messages, both FIFO under the same
     /// exclusive consumer tokens as per-message draining — and run `apply`
     /// on the filled batch **while the Submit consumer token is still
-    /// held**. Holding the token across the graph application is what
+    /// held**. `budget` is the Listing-2 `MAX_OPS_THREAD`; managers read
+    /// it from `TunableParams::snapshot` per activation, so the
+    /// `AutoTuner`'s queue-depth controller adjusts how much one claimed
+    /// worker is drained without touching this code. Holding the token across the graph application is what
     /// keeps pop + insertion atomic per worker: without it, a second
     /// manager could drain this worker's *next* submissions and insert
     /// them into the graph before this batch's, breaking program order.

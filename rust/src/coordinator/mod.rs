@@ -18,7 +18,7 @@ pub mod trace;
 pub mod wd;
 
 pub use api::{TaskSystem, TaskSystemBuilder};
-pub use autotune::{AutoTuner, TunableParams};
+pub use autotune::{AutoTuner, TunableParams, MAX_OPS_THREAD_CAP};
 pub use ddast::DdastParams;
 pub use dep::{dep_in, dep_inout, dep_out, DepMode, Dependence};
 pub use depgraph::DepDomain;

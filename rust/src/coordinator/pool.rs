@@ -61,6 +61,12 @@ pub struct RtStats {
     pub mgr_peak: Counter,
     pub graph_submits: Counter,
     pub graph_finishes: Counter,
+    /// Parks committed inside `taskwait_on` (tentpole telemetry: the
+    /// taskwait spin ladder never reaches a blind sleep — it parks).
+    pub taskwait_parks: Counter,
+    /// Child-completion wake edges fired: a finalizer's decrement-to-zero
+    /// claimed a parent's waiter registration and woke its worker slot.
+    pub taskwait_wake_edges: Counter,
 }
 
 thread_local! {
@@ -418,8 +424,19 @@ impl RuntimeShared {
             task.set_state(WdState::Deletable);
         }
         self.stats.tasks_outstanding.dec();
-        if parent.child_done() && parent.done_handled() {
-            parent.set_state(WdState::Deletable);
+        if parent.child_done() {
+            // Child-completion wake edge: the (SeqCst) decrement above
+            // precedes this claim, pairing with `taskwait_on`'s
+            // register-then-recheck order — a parent committing to park
+            // either saw zero children at its re-check, or its
+            // registration is visible here and gets a targeted wake.
+            if let Some(w) = parent.take_waiter() {
+                self.stats.taskwait_wake_edges.inc();
+                self.queues.signals().wake_worker(w);
+            }
+            if parent.done_handled() {
+                parent.set_state(WdState::Deletable);
+            }
         }
     }
 
@@ -474,16 +491,76 @@ impl RuntimeShared {
     /// Block the current task until all its children are done-handled
     /// (the `taskwait` annotation, §2.1.1). The blocked thread keeps
     /// executing other ready tasks / runtime functionalities meanwhile
-    /// (task life-cycle step 4, "Task becomes blocked").
+    /// (task life-cycle step 4, "Task becomes blocked"); when nothing
+    /// actionable is visible it **parks** on its worker slot with a
+    /// child-completion wake edge registered on `task`, instead of the
+    /// seed's blind spin → yield → sleep ladder (the idle-spinning at
+    /// synchronization points that Tuft et al. measure as detrimental,
+    /// replaced by the blocking waits of Álvarez et al.).
+    ///
+    /// Wake-edge protocol (store-buffer-proof, the same fence discipline
+    /// as pool parking): the waiter CAS-publishes `(generation, worker)`
+    /// into the task's waiter slot ([`Wd::register_waiter`]), announces on
+    /// the signal directory (`begin_park`, SeqCst RMW + fence), then
+    /// re-checks `children_live`. The finalizer decrements `children_live`
+    /// (SeqCst) *before* claiming the slot ([`Wd::take_waiter`]) and
+    /// waking the slot's parker (`wake_worker`). In the SeqCst total
+    /// order, either the waiter's re-check sees the zero (and cancels), or
+    /// the finalizer's claim sees the registration (and wakes) — a last
+    /// child finishing exactly as the parent commits to parking always
+    /// wakes it.
+    ///
+    /// While work is visible that this thread may act on next round
+    /// (queued requests, ready tasks, a shutdown drain), the park is
+    /// *timed* at the old sleep cadence — never the blind sleep — so the
+    /// taskwait keeps helping with children instead of oversleeping a
+    /// burst; parking never blocks the children's progress either way,
+    /// because every ready release wakes as many parked slots as tasks
+    /// released.
     pub fn taskwait_on(self: &Arc<Self>, worker: usize, task: &Arc<Wd>) {
         let mut idle: u32 = 0;
         while task.children_live() > 0 {
             if self.try_make_progress(worker) {
                 idle = 0;
-            } else {
-                idle += 1;
-                idle_backoff(idle);
+                continue;
             }
+            idle += 1;
+            if idle < PARK_AFTER {
+                // Below the park threshold this ladder only ever spins or
+                // yields (the sleep tier starts at PARK_AFTER).
+                idle_backoff(idle);
+                continue;
+            }
+            // Register the wake edge BEFORE announcing the park: the
+            // finalizer reads the slot only after its decrement, so this
+            // order closes the lost-wakeup window (doc comment above).
+            let Some(token) = task.register_waiter(worker) else {
+                // Another thread already waits on this task (two taskwaits
+                // on one WD — only reachable through the root task from
+                // outside the pool). No wake edge is available to us, so
+                // this degenerate fallback keeps the seed's polite ladder
+                // (it may sleep; spinning on yield would burn a core for
+                // the other waiter's whole wait).
+                idle_backoff(idle);
+                continue;
+            };
+            let signals = self.queues.signals();
+            if !signals.begin_park(worker) {
+                // Another thread is mid-park on this worker slot (external
+                // threads sharing worker 0's id): never double-park a
+                // slot; same degenerate fallback as above.
+                task.clear_waiter(token);
+                idle_backoff(idle);
+                continue;
+            }
+            if task.children_live() == 0 {
+                task.clear_waiter(token);
+                signals.cancel_park(worker);
+                break;
+            }
+            self.stats.taskwait_parks.inc();
+            idle = self.commit_park(worker);
+            task.clear_waiter(token);
         }
     }
 
@@ -541,6 +618,31 @@ impl RuntimeShared {
         clear_ctx();
     }
 
+    /// Commit a park announced with [`SignalDirectory::begin_park`] after
+    /// the caller's own re-check passed: **timed** at the old sleep
+    /// cadence when work is visible this thread cannot act on (or a
+    /// shutdown drain is in flight — `park_wake_condition`), indefinite —
+    /// relying on wake edges — otherwise. Shared by `worker_loop` and
+    /// `taskwait_on` so the two parking sites cannot drift. Returns the
+    /// idle level the caller's backoff ladder resumes at: the retry tier
+    /// after a wake (the reason is usually real work — skip the spin
+    /// tier), the park threshold after a timeout (straight back to the
+    /// announce → re-check → commit cycle after one progress attempt).
+    fn commit_park(&self, worker: usize) -> u32 {
+        let signals = self.queues.signals();
+        let woke = if self.park_wake_condition() {
+            signals.park_timeout(worker, IDLE_RECHECK)
+        } else {
+            signals.park(worker);
+            true
+        };
+        if woke {
+            PARK_RETRY_IDLE
+        } else {
+            PARK_AFTER
+        }
+    }
+
     /// Re-check a worker's wake condition after
     /// [`SignalDirectory::begin_park`] published its parked bit: anything
     /// that should keep the worker awake — queued requests, ready tasks, a
@@ -579,42 +681,36 @@ impl RuntimeShared {
                 idle_backoff(idle);
                 continue;
             }
-            // Visible work this worker cannot act on (a CentralDast worker
-            // cannot drain messages itself; a Ddast worker may be over the
-            // MAX_DDAST_THREADS cap): keep the seed's polite sleep tier —
-            // `idle` is ≥ PARK_AFTER here — so an oversubscribed host is
-            // not yield-stormed, and skip the parked-bitmap RMW pair the
-            // announce protocol would cost (this unannounced pre-check is
-            // only an optimization; the parking decision below re-checks
-            // under the announce fence).
-            if self.park_wake_condition() {
+            // Event-driven parking replaces the blind sleep tier entirely:
+            // announce, re-check, commit. Visible work this worker cannot
+            // act on (a CentralDast worker cannot drain messages itself; a
+            // Ddast worker may be over the MAX_DDAST_THREADS cap) and
+            // shutdown drains no longer fall back to the 100 µs blind
+            // sleep either — the worker commits to a *timed* park at the
+            // same cadence, which a producer's wake (or
+            // `request_shutdown`'s wake_all) cuts short. An indefinite
+            // park never commits once the shutdown flag is visible (the
+            // re-check sees it through `park_wake_condition`), so the exit
+            // condition above is always reached; only the DAS thread still
+            // sleeps blind (see `idle_backoff`).
+            if !self.queues.signals().begin_park(worker) {
+                // Slot already announced by another thread (an external
+                // thread driving this pool worker's id — unreachable from
+                // the pool itself, which owns its slots exclusively): the
+                // polite ladder, never a yield-spin for the other
+                // occupant's whole wait.
                 idle_backoff(idle);
                 continue;
             }
-            // Event-driven parking replaces the blind sleep tier: announce,
-            // re-check, commit. During shutdown draining the worker never
-            // parks (the re-check sees the flag), so the exit condition
-            // above is always reached; workers parked *before* the request
-            // are woken by `request_shutdown`'s wake_all.
-            let signals = self.queues.signals();
-            signals.begin_park(worker);
-            if self.park_wake_condition() {
-                signals.cancel_park(worker);
-                idle_backoff(idle);
-            } else {
-                signals.park(worker);
-                // Woken: retry immediately, then fall back into the
-                // spin/yield ladder if the work went to someone else.
-                idle = PARK_RETRY_IDLE;
-            }
+            idle = self.commit_park(worker);
         }
         clear_ctx();
     }
 }
 
-/// Idle iterations before a worker tries to park: past the spin and yield
-/// tiers of [`idle_backoff`] — parking replaces the former 100 µs blind
-/// sleep tier in the worker loop.
+/// Idle iterations before a worker (or a taskwait) tries to park: past the
+/// spin and yield tiers of [`idle_backoff`] — parking replaces the former
+/// 100 µs blind sleep tier in the worker loop *and* in `taskwait_on`.
 const PARK_AFTER: u32 = 256;
 
 /// Idle level a worker resumes at after a park/cancel: skips the spin tier
@@ -622,16 +718,29 @@ const PARK_AFTER: u32 = 256;
 /// was claimed by another worker.
 const PARK_RETRY_IDLE: u32 = 16;
 
-/// Messages per chunk of the DAS thread's drain-to-empty batch loop.
+/// Messages per chunk of the DAS thread's drain-to-empty batch loop (the
+/// centralized baseline predates the auto-tuned budget, so it keeps a
+/// fixed chunk; the DDAST callback's budget is live — see `AutoTuner`).
 const DAS_BATCH: usize = 64;
+
+/// Cadence of the *timed* parks that replaced the blind sleep tier: where
+/// the runtime once slept 100 µs unconditionally (visible-but-unactionable
+/// work, shutdown drains), it now parks wakeably for the same quantum.
+const IDLE_RECHECK: std::time::Duration = std::time::Duration::from_micros(100);
 
 /// Idle back-off: spin briefly, then yield, then sleep. The sleep tier
 /// matters when the host is oversubscribed (more runtime threads than
 /// cores — always true on this 1-core box): pure spin/yield starves
-/// whoever holds actual work (e.g. the PJRT service thread). The *worker
-/// loop* parks instead of reaching the sleep tier; `taskwait_on` and the
-/// DAS thread (whose wake conditions are not directory signals) still use
-/// all three tiers.
+/// whoever holds actual work (e.g. the PJRT service thread). **Only the
+/// DAS thread still reaches the blind sleep tier on a supported path**
+/// (its wake conditions are not directory signals): the worker loop and
+/// `taskwait_on` call this with `idle < PARK_AFTER` — spin/yield tiers —
+/// and replace the sleep with directory parking (timed via
+/// [`IDLE_RECHECK`] when work is visible they cannot act on, indefinite
+/// plus wake edges otherwise). The one exception is the degenerate
+/// contended-slot fallback (an external thread sharing a pool worker's
+/// id, where no parker or wake edge is available): that keeps the full
+/// ladder rather than yield-spinning a core away.
 #[inline]
 fn idle_backoff(idle: u32) {
     if idle < 16 {
@@ -639,7 +748,10 @@ fn idle_backoff(idle: u32) {
     } else if idle < 256 {
         std::thread::yield_now();
     } else {
-        std::thread::sleep(std::time::Duration::from_micros(100));
+        // One quantum, shared with the timed parks: the DAS thread's blind
+        // sleep and every other thread's wakeable park stay on the same
+        // cadence by construction.
+        std::thread::sleep(IDLE_RECHECK);
     }
 }
 
@@ -777,6 +889,26 @@ mod tests {
         let wd = rt.spawn_from(0, &root, vec![dep_out(9)], "t", Box::new(|| {}));
         drain(&rt);
         assert_eq!(wd.state(), WdState::Deletable);
+        clear_ctx();
+    }
+
+    #[test]
+    fn finalize_fires_child_completion_wake_edge() {
+        let rt = rt(RuntimeKind::Sync);
+        let root = Arc::clone(&rt.root);
+        let wd = rt.spawn_from(0, &root, vec![], "t", Box::new(|| {}));
+        let token = root.register_waiter(0).expect("slot starts empty");
+        let task = rt.ready.get(0).expect("no-dep spawn is immediately ready");
+        assert!(Arc::ptr_eq(&task, &wd));
+        rt.run_task(0, task); // Sync: finalizes inline → last child → wake edge
+        assert_eq!(rt.stats.taskwait_wake_edges.get(), 1);
+        assert!(!root.waiter_registered(), "the finalizer claimed the registration");
+        assert!(!root.clear_waiter(token), "claimed token is dead");
+        // The targeted wake deposited a token on worker 0's parking slot:
+        // the next park returns immediately instead of blocking.
+        let signals = rt.queues.signals();
+        assert!(signals.begin_park(0));
+        signals.park(0);
         clear_ctx();
     }
 

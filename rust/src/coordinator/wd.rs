@@ -7,7 +7,7 @@
 //! when the Done Task Message has been fully processed so the WD can be
 //! reclaimed safely.
 
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Weak};
 
 use crate::coordinator::dep::Dependence;
@@ -76,6 +76,16 @@ pub struct Wd {
     pub(crate) successors: SpinLock<Vec<Arc<Wd>>>,
     /// Direct children not yet done-handled (taskwait + deletion safety).
     children_live: AtomicUsize,
+    /// Taskwait waiter registration — the **child-completion wake edge**:
+    /// `(generation << 32) | (worker + 1)`, 0 = no waiter. A thread
+    /// blocked in `taskwait_on` publishes itself here before parking; the
+    /// finalizer that drives `children_live` to zero claims the slot and
+    /// wakes that worker's parking slot. See [`Wd::register_waiter`] for
+    /// the ownership rules.
+    waiter: AtomicU64,
+    /// Monotonic registration generation (makes each waiter token unique,
+    /// so clears/claims can never hit a later registration).
+    waiter_gen: AtomicU64,
     /// Parent task. Weak to break the parent→domain→child→parent cycle.
     pub(crate) parent: Weak<Wd>,
     /// Dependence domain for this task's children (lazily created on first
@@ -101,6 +111,8 @@ impl Wd {
             preds: AtomicUsize::new(1), // the submission guard
             successors: SpinLock::new(Vec::new()),
             children_live: AtomicUsize::new(0),
+            waiter: AtomicU64::new(0),
+            waiter_gen: AtomicU64::new(0),
             parent,
             child_domain: SpinLock::new(None),
         })
@@ -199,6 +211,70 @@ impl Wd {
         self.children_live.load(Ordering::SeqCst)
     }
 
+    // ---- taskwait waiter slot (child-completion wake edge) ---------------
+
+    /// Register the calling worker as this task's taskwait waiter.
+    ///
+    /// **Ownership rules** (the wake-edge contract — also in the README
+    /// architecture map): only the thread blocked in `taskwait_on` may
+    /// *publish* (CAS `0 → packed`, this method); only the finalizer that
+    /// drives `children_live` to zero may *claim*
+    /// ([`take_waiter`](Wd::take_waiter)'s swap `→ 0`); and the waiter
+    /// *clears its own* registration ([`clear_waiter`](Wd::clear_waiter),
+    /// CAS `packed → 0`) after every park attempt, so a registration never
+    /// outlives the park it guards.
+    ///
+    /// `SeqCst`: pairs with the finalizer's decrement-then-claim — the
+    /// slot and `children_live` accesses need a single total order so
+    /// that either the waiter's post-announce re-check sees the zero, or
+    /// the finalizer's claim sees the registration (the store-buffer
+    /// argument in `taskwait_on`).
+    ///
+    /// Returns the token to pass to `clear_waiter`, or `None` when another
+    /// waiter is already registered (two taskwaits on one WD — reachable
+    /// only through the root task from outside the pool); the caller must
+    /// fall back to polling.
+    pub fn register_waiter(&self, worker: usize) -> Option<u64> {
+        debug_assert!((worker as u64) < u32::MAX as u64);
+        let gen = self.waiter_gen.fetch_add(1, Ordering::Relaxed).wrapping_add(1);
+        let packed = (gen << 32) | (worker as u64 + 1);
+        self.waiter
+            .compare_exchange(0, packed, Ordering::SeqCst, Ordering::SeqCst)
+            .ok()
+            .map(|_| packed)
+    }
+
+    /// Withdraw the registration published with
+    /// [`register_waiter`](Wd::register_waiter). Returns `false` when a
+    /// finalizer already claimed it (its wake is in flight or delivered —
+    /// harmless either way, the waiter is awake to call this).
+    pub fn clear_waiter(&self, token: u64) -> bool {
+        self.waiter.compare_exchange(token, 0, Ordering::SeqCst, Ordering::SeqCst).is_ok()
+    }
+
+    /// Claim the waiter registration, if any — the finalizer side of the
+    /// wake edge, called on the decrement that zeroes `children_live`.
+    /// Returns the registered worker id to wake. The cheap peek keeps the
+    /// hot finalize path (most tasks never have a waiter) to one load.
+    pub fn take_waiter(&self) -> Option<usize> {
+        if self.waiter.load(Ordering::SeqCst) == 0 {
+            return None;
+        }
+        let v = self.waiter.swap(0, Ordering::SeqCst);
+        if v == 0 {
+            None
+        } else {
+            Some((v & u32::MAX as u64) as usize - 1)
+        }
+    }
+
+    /// Is a taskwait waiter currently registered? (Racy peek for tests —
+    /// after `taskwait_on` returns, no registration may dangle.)
+    #[inline]
+    pub fn waiter_registered(&self) -> bool {
+        self.waiter.load(Ordering::Acquire) != 0
+    }
+
     /// Dependence domain for this task's children, created on first use
     /// (exact-match plugin).
     pub fn child_domain(&self) -> Arc<crate::coordinator::depgraph::DepDomain> {
@@ -289,6 +365,25 @@ mod tests {
         assert_eq!(wd.children_live(), 2);
         assert!(!wd.child_done());
         assert!(wd.child_done());
+    }
+
+    #[test]
+    fn waiter_slot_register_claim_clear() {
+        let wd = mk(5);
+        assert!(!wd.waiter_registered());
+        let t = wd.register_waiter(3).expect("empty slot registers");
+        assert!(wd.waiter_registered());
+        assert!(wd.register_waiter(4).is_none(), "occupied slot refuses");
+        assert_eq!(wd.take_waiter(), Some(3), "finalizer claims the worker id");
+        assert!(!wd.waiter_registered());
+        assert!(!wd.clear_waiter(t), "claimed registration cannot be cleared");
+        assert_eq!(wd.take_waiter(), None, "claim is one-shot");
+        // Re-registration gets a fresh generation: the old token is dead.
+        let t2 = wd.register_waiter(3).unwrap();
+        assert_ne!(t, t2, "generation makes each registration unique");
+        assert!(!wd.clear_waiter(t), "stale token cannot clear the new slot");
+        assert!(wd.clear_waiter(t2), "own token clears");
+        assert!(!wd.waiter_registered());
     }
 
     #[test]

@@ -110,6 +110,50 @@ impl Parker {
         }
     }
 
+    /// Like [`Parker::park`], but give up after `timeout`. Returns `true`
+    /// when a token was consumed (immediately-pending or delivered while
+    /// blocked), `false` on timeout. The token state machine is identical;
+    /// a timeout withdraws the `WAITING` announcement with one swap — an
+    /// unpark that raced the withdrawal either left `NOTIFIED` (consumed
+    /// here, return `true`) or already read `WAITING` and issued a stray
+    /// `thread::unpark`, which at worst makes a *later* blocking park spin
+    /// one spurious loop. Used for the bounded waits that replaced the
+    /// runtime's blind 100 µs sleep tier (visible-but-unactionable work,
+    /// shutdown drains): same re-check cadence, but a wake edge can cut
+    /// the wait short.
+    pub fn park_timeout(&self, timeout: std::time::Duration) -> bool {
+        if self.state.swap(EMPTY, Ordering::Acquire) == NOTIFIED {
+            return true;
+        }
+        *self.thread.lock() = Some(std::thread::current());
+        if self
+            .state
+            .compare_exchange(EMPTY, WAITING, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            self.state.store(EMPTY, Ordering::Release);
+            return true;
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                // Withdraw the announcement, consuming a token that raced
+                // in between the last wake check and the deadline.
+                return self.state.swap(EMPTY, Ordering::AcqRel) == NOTIFIED;
+            }
+            std::thread::park_timeout(deadline - now);
+            if self
+                .state
+                .compare_exchange(NOTIFIED, EMPTY, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return true;
+            }
+            // Spurious wakeup or not-yet-expired timeout: loop decides.
+        }
+    }
+
     /// Deposit a wake token; if the owner is committed to parking, wake it.
     /// Multiple unparks before the next park coalesce into one token.
     pub fn unpark(&self) {
@@ -162,6 +206,36 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         p.unpark();
         h.join().unwrap();
+    }
+
+    #[test]
+    fn park_timeout_consumes_pending_token() {
+        let p = Parker::new();
+        p.unpark();
+        assert!(p.park_timeout(std::time::Duration::ZERO), "pending token, no block");
+        assert!(!p.token_pending());
+    }
+
+    #[test]
+    fn park_timeout_expires_without_token() {
+        let p = Parker::new();
+        let t0 = std::time::Instant::now();
+        assert!(!p.park_timeout(std::time::Duration::from_millis(5)));
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(5));
+        // The WAITING announcement was withdrawn: a later unpark only
+        // deposits a token.
+        p.unpark();
+        assert!(p.token_pending());
+    }
+
+    #[test]
+    fn park_timeout_woken_early_by_unpark() {
+        let p = Arc::new(Parker::new());
+        let p2 = Arc::clone(&p);
+        let h = std::thread::spawn(move || p2.park_timeout(std::time::Duration::from_secs(60)));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        p.unpark();
+        assert!(h.join().unwrap(), "the unpark ended the timed park early");
     }
 
     /// Ping-pong stress: every round's unpark must wake the parked side —

@@ -78,6 +78,14 @@
 //! the parked bit (and unparks). A wake that races a cancelled park
 //! leaves a token in the `Parker`; the next park attempt consumes it and
 //! falls through to another re-check — spurious, never lost.
+//!
+//! Two parking refinements serve the runtime's synchronization points:
+//! [`park_timeout`](SignalDirectory::park_timeout) bounds the wait where
+//! the runtime once slept blind (work visible the caller cannot act on),
+//! and [`wake_worker`](SignalDirectory::wake_worker) delivers a *targeted*
+//! wake to one slot — the taskwait child-completion wake edge, where the
+//! finalizer of a parent's last child knows exactly which worker is
+//! parked waiting for it.
 
 use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
@@ -238,16 +246,26 @@ impl SignalDirectory {
     /// Announce that `worker` is about to park: publish its parked bit with
     /// a `SeqCst` RMW, then fence. **Contract:** the caller must re-check
     /// its wake condition (queued messages, ready tasks, shutdown) *after*
-    /// this returns, and then either [`park`](SignalDirectory::park) or
+    /// this returns, and then either [`park`](SignalDirectory::park) /
+    /// [`park_timeout`](SignalDirectory::park_timeout) or
     /// [`cancel_park`](SignalDirectory::cancel_park). The trailing fence
     /// pairs with the one in [`wake_parked`](SignalDirectory::wake_parked)
     /// so plain loads suffice for the re-check (module docs §Parking).
-    pub fn begin_park(&self, worker: usize) {
+    ///
+    /// Returns `true` when this call claimed the announcement (the bit
+    /// transitioned 0 → 1). `false` means another thread is already mid-
+    /// park on this slot (reachable only when an external thread drives a
+    /// pool worker's id, e.g. two handles taskwaiting as worker 0): the
+    /// caller must back off instead of double-parking the slot's
+    /// [`Parker`], whose blocking side is single-owner.
+    #[must_use = "a false return means another thread owns the slot; parking anyway double-parks its Parker"]
+    pub fn begin_park(&self, worker: usize) -> bool {
         debug_assert!(worker < self.flags.len());
         let wi = worker / WORD_BITS;
         let bit = 1u64 << (worker % WORD_BITS);
-        self.parked[wi].fetch_or(bit, Ordering::SeqCst);
+        let had = self.parked[wi].fetch_or(bit, Ordering::SeqCst) & bit != 0;
         fence(Ordering::SeqCst);
+        !had
     }
 
     /// Abort a park attempt announced with `begin_park` (the re-check found
@@ -270,6 +288,45 @@ impl SignalDirectory {
         // ourselves in case the token came from a wake raced by an earlier
         // cancelled attempt.
         self.cancel_park(worker);
+    }
+
+    /// Commit the park announced with `begin_park`, but give up after
+    /// `timeout` — the bounded variant the runtime uses where it once slept
+    /// blind (work is visible that the caller cannot act on, or a shutdown
+    /// drain is in progress): same re-check cadence as the old 100 µs
+    /// sleep quantum, but a producer's wake edge ends it early. Clears the
+    /// parked bit on either outcome. Returns `true` when a wake token was
+    /// consumed, `false` on timeout.
+    pub fn park_timeout(&self, worker: usize, timeout: std::time::Duration) -> bool {
+        self.parks.inc();
+        let woke = self.parkers[worker].park_timeout(timeout);
+        // On the timeout path no waker claimed the bit: withdraw it (a
+        // waker that did claim it left it clear; this is then a no-op).
+        self.cancel_park(worker);
+        woke
+    }
+
+    /// Targeted wake for `worker` — the taskwait **child-completion wake
+    /// edge** (`RuntimeShared::finalize_task` → a parent parked in
+    /// `taskwait_on`). Issues the producer-side `SeqCst` fence, claims the
+    /// worker's parked bit if set, and unparks the slot's [`Parker`]
+    /// **unconditionally**: an unclaimed wake merely deposits a token the
+    /// slot's next park attempt consumes — one spurious re-check, never a
+    /// lost wakeup (the waiter it raced is by then awake and re-checking).
+    /// Returns whether a committed announcement was claimed.
+    pub fn wake_worker(&self, worker: usize) -> bool {
+        if worker >= self.parkers.len() {
+            return false;
+        }
+        fence(Ordering::SeqCst);
+        let wi = worker / WORD_BITS;
+        let bit = 1u64 << (worker % WORD_BITS);
+        let claimed = self.parked[wi].fetch_and(!bit, Ordering::AcqRel) & bit != 0;
+        self.parkers[worker].unpark();
+        if claimed {
+            self.park_wakes.inc();
+        }
+        claimed
     }
 
     /// Wake up to `n` parked workers. Issues the producer-side `SeqCst`
@@ -526,16 +583,16 @@ mod tests {
     fn park_cancel_and_token_roundtrip() {
         let dir = SignalDirectory::new(8);
         assert_eq!(dir.parked_count(), 0);
-        dir.begin_park(3);
+        assert!(dir.begin_park(3));
         assert_eq!(dir.parked_count(), 1);
         dir.cancel_park(3);
         assert_eq!(dir.parked_count(), 0);
         // A wake that wins the race against the (re-announced) parker
         // deposits a token; park then returns without blocking.
-        dir.begin_park(3);
+        assert!(dir.begin_park(3));
         assert_eq!(dir.wake_parked(1), 1);
         assert_eq!(dir.parked_count(), 0, "waker claimed the bit");
-        dir.begin_park(3);
+        assert!(dir.begin_park(3));
         dir.park(3); // consumes the pending token, must not block
         assert_eq!(dir.parked_count(), 0);
         let (parks, wakes) = dir.park_stats();
@@ -547,7 +604,7 @@ mod tests {
     fn wake_parked_bounds_and_wake_all() {
         let dir = SignalDirectory::new(130);
         for w in [1usize, 64, 129] {
-            dir.begin_park(w);
+            assert!(dir.begin_park(w));
         }
         assert_eq!(dir.parked_count(), 3);
         assert_eq!(dir.wake_parked(2), 2);
@@ -555,6 +612,46 @@ mod tests {
         assert_eq!(dir.wake_all(), 1);
         assert_eq!(dir.parked_count(), 0);
         assert_eq!(dir.wake_all(), 0, "nothing left to wake");
+    }
+
+    #[test]
+    fn begin_park_claims_the_announcement() {
+        let dir = SignalDirectory::new(4);
+        assert!(dir.begin_park(2), "first announcement claims the slot");
+        assert!(!dir.begin_park(2), "second announcer must back off");
+        dir.cancel_park(2);
+        assert!(dir.begin_park(2), "cancel releases the claim");
+        dir.cancel_park(2);
+    }
+
+    #[test]
+    fn wake_worker_targets_one_slot() {
+        let dir = SignalDirectory::new(70);
+        assert!(dir.begin_park(1));
+        assert!(dir.begin_park(69));
+        assert!(dir.wake_worker(69), "claimed the announced slot");
+        assert_eq!(dir.parked_count(), 1, "slot 1 untouched");
+        // Unclaimed wake: deposits a token only.
+        assert!(!dir.wake_worker(3));
+        assert!(dir.begin_park(3));
+        dir.park(3); // consumes the deposited token, must not block
+        assert!(!dir.wake_worker(usize::MAX), "out-of-range is a no-op");
+        let (_, wakes) = dir.park_stats();
+        assert_eq!(wakes, 1, "only the claimed wake counted");
+        dir.cancel_park(1);
+    }
+
+    #[test]
+    fn park_timeout_times_out_and_clears_bit() {
+        let dir = SignalDirectory::new(2);
+        assert!(dir.begin_park(0));
+        assert!(!dir.park_timeout(0, std::time::Duration::from_millis(2)));
+        assert_eq!(dir.parked_count(), 0, "timeout withdrew the announcement");
+        // A pending token ends the timed park immediately.
+        dir.wake_worker(0);
+        assert!(dir.begin_park(0));
+        assert!(dir.park_timeout(0, std::time::Duration::from_secs(60)));
+        assert_eq!(dir.parked_count(), 0);
     }
 
     /// A worker that parks concurrently with a raise must wake: the raise
@@ -577,7 +674,7 @@ mod tests {
                     done2.store(got, Ordering::Release);
                     continue;
                 }
-                dir2.begin_park(0);
+                assert!(dir2.begin_park(0));
                 // Re-check after the announce (plain load: the fences in
                 // begin_park / wake_parked close the store-buffer race).
                 if work2.load(Ordering::Relaxed) == 0 {

@@ -112,9 +112,10 @@ fn parking_no_lost_wakeup_via_queues() {
                 }
                 drained += got;
                 if got == 0 && drained < total {
-                    // Nothing visible: park until the next enqueue's raise.
+                    // Nothing visible: park until the next enqueue's raise
+                    // (sole owner of slot 0, so the announce always claims).
                     let dir = qs2.signals();
-                    dir.begin_park(0);
+                    assert!(dir.begin_park(0));
                     if qs2.pending() == 0 {
                         dir.park(0);
                     } else {

@@ -163,22 +163,46 @@ fn contention_ab_smoke_and_json() {
     let park_wake = contention::park_wake_ab(50);
     assert_eq!(park_wake.new.acquisitions, 50);
 
+    // Taskwait wake drill: every round's child-completion wake edge must
+    // reach the (possibly parked) waiter — completion is the check.
+    let taskwait_park = contention::taskwait_park_ab(50);
+    assert_eq!(taskwait_park.new.acquisitions, 50);
+
+    // Adaptive batch budget: the fixed side pays exactly one Submit + one
+    // Done token grab per 8-message round; the controller-grown budget
+    // must cut that by at least 4x on a deep burst (counter-verified,
+    // cannot pass by timing luck).
+    let budget_adapt = contention::budget_adapt_ab(2_048);
+    assert_eq!(budget_adapt.old.acquisitions, 2 * 2_048 / 8);
+    assert!(
+        budget_adapt.new.acquisitions * 4 <= budget_adapt.old.acquisitions,
+        "adaptive budget must cut token grabs: old={} new={}",
+        budget_adapt.old.acquisitions,
+        budget_adapt.new.acquisitions
+    );
+
     let json = contention::suite_to_json(
         &reports,
         &sweeps,
         &park_wake,
+        &taskwait_park,
+        &budget_adapt,
         "cargo test contention_ab_smoke_and_json",
     );
     assert!(json.contains("\"contended_reduction\""));
     assert!(json.contains("\"signal_sweep\""));
     assert!(json.contains("\"batch_submit\""));
     assert!(json.contains("\"park_wake\""));
+    assert!(json.contains("\"taskwait_park\""));
+    assert!(json.contains("\"budget_adapt\""));
     let path = contention::default_json_path();
     if contention::write_suite_json(
         &path,
         &reports,
         &sweeps,
         &park_wake,
+        &taskwait_park,
+        &budget_adapt,
         "cargo test contention_ab_smoke_and_json",
     ) {
         eprintln!("refreshed {}", path.display());
@@ -190,6 +214,8 @@ fn contention_ab_smoke_and_json() {
         eprintln!("{}", contention::render_sweep(s));
     }
     eprintln!("{}", contention::render_park_wake(&park_wake));
+    eprintln!("{}", contention::render_taskwait_park(&taskwait_park));
+    eprintln!("{}", contention::render_budget_adapt(&budget_adapt));
 }
 
 /// Acceptance guard for the request-plane refactor: during a sparse-traffic

@@ -1,0 +1,162 @@
+//! Stress suite for parking `taskwait_on` and the child-completion wake
+//! edge (EXPERIMENTS.md §Taskwait parking):
+//!
+//! * deep-nested taskwait trees — a parent parks while its grandchildren
+//!   are still running, at both nesting levels;
+//! * no-lost-wakeup when the last child finishes exactly as the parent
+//!   commits to parking (repeat-loop race amplification, counter-verified
+//!   through `RtStats::taskwait_parks` / `taskwait_wake_edges`);
+//! * shutdown requested while a parent is parked in `taskwait_on` must
+//!   not deadlock.
+//!
+//! All scenarios run across the `Ddast`, `CentralDast` and `GompLike`
+//! organizations: Ddast finalizes through the batched callback on idle
+//! workers, CentralDast through the dedicated DAS thread (the parked
+//! parent cannot help drain, so the wake edge is load-bearing), and
+//! GompLike finalizes inline on the executing worker — there the parked
+//! parent's *only* wake source is the edge itself.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ddast::coordinator::{DepMode, RuntimeKind, TaskSystem};
+
+const KINDS: [RuntimeKind; 3] =
+    [RuntimeKind::Ddast, RuntimeKind::CentralDast, RuntimeKind::GompLike];
+
+/// Deep-nested taskwait trees: two child tasks each spawn four sleeping
+/// grandchildren and taskwait on them (inner level), while the main thread
+/// taskwaits on the children (outer level). The grandchildren's sleeps
+/// outlive both waiters' spin budgets, so the parents park; rounds repeat
+/// (bounded) until a committed taskwait park is observed.
+#[test]
+fn deep_nested_taskwait_trees_parent_parks_while_grandchildren_run() {
+    for kind in KINDS {
+        let ts = TaskSystem::builder().kind(kind).num_threads(4).build();
+        let rt = ts.runtime().clone();
+        let hits = Arc::new(AtomicU64::new(0));
+        let mut expected = 0u64;
+        let mut rounds = 0u32;
+        loop {
+            rounds += 1;
+            for c in 0..2u64 {
+                let ts2 = ts.clone();
+                let h = Arc::clone(&hits);
+                ts.spawn(&[], move || {
+                    for g in 0..4u64 {
+                        let h = Arc::clone(&h);
+                        // Distinct inout regions per sibling set: the
+                        // grandchildren are independent, so the inner
+                        // waiter has nothing to execute and must park.
+                        ts2.spawn(&[(c * 4 + g, DepMode::Inout)], move || {
+                            std::thread::sleep(Duration::from_micros(300));
+                            h.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                    ts2.taskwait(); // inner: waits for the grandchildren
+                });
+                expected += 4;
+            }
+            ts.taskwait(); // outer: parks while grandchildren still run
+            assert_eq!(hits.load(Ordering::Relaxed), expected, "kind={kind:?}");
+            assert!(rt.quiescent(), "kind={kind:?}");
+            assert!(!rt.root.waiter_registered(), "dangling outer registration");
+            if rt.stats.taskwait_parks.get() > 0 || rounds >= 200 {
+                break;
+            }
+        }
+        assert!(
+            rt.stats.taskwait_parks.get() > 0,
+            "kind={kind:?}: no taskwait ever parked within {rounds} rounds"
+        );
+        ts.shutdown();
+        assert!(rt.quiescent(), "kind={kind:?} after shutdown");
+    }
+}
+
+/// Race amplification for the wake edge: one child per round, with its
+/// runtime varied so its completion sweeps across the parent's spin
+/// budget and park commit. A lost wakeup (last child finishing exactly as
+/// the parent commits, without the edge firing) parks the parent forever
+/// and times the test out. Counter-verified: the rounds keep repeating
+/// (bounded) until committed parks *and* fired wake edges are both
+/// observed, so the parks were real and the edge actually delivered.
+#[test]
+fn last_child_finish_racing_park_commit_always_wakes_counter_verified() {
+    for kind in KINDS {
+        let ts = TaskSystem::builder().kind(kind).num_threads(3).build();
+        let rt = ts.runtime().clone();
+        let hits = Arc::new(AtomicU64::new(0));
+        let min_rounds: u64 = if cfg!(debug_assertions) { 300 } else { 1_500 };
+        let max_rounds: u64 = min_rounds * 4;
+        let mut r = 0u64;
+        loop {
+            r += 1;
+            let h = Arc::clone(&hits);
+            // Every 4th round the child sleeps past the parent's whole
+            // spin/yield budget (a certain park); the others spin a
+            // round-varying amount to sweep the finish across the park
+            // commit itself.
+            let sleepy = r % 4 == 0;
+            let spin = (r % 11) * 41;
+            ts.spawn(&[(r % 5, DepMode::Inout)], move || {
+                if sleepy {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                for _ in 0..spin {
+                    std::hint::spin_loop();
+                }
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+            ts.taskwait(); // a swallowed wake edge hangs here
+            assert!(!rt.root.waiter_registered(), "round {r}: dangling waiter");
+            let parks = rt.stats.taskwait_parks.get();
+            let edges = rt.stats.taskwait_wake_edges.get();
+            if (parks > 0 && edges > 0 && r >= min_rounds) || r >= max_rounds {
+                break;
+            }
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), r, "kind={kind:?}: every round drained");
+        let parks = rt.stats.taskwait_parks.get();
+        let edges = rt.stats.taskwait_wake_edges.get();
+        assert!(parks > 0, "kind={kind:?}: no committed taskwait park in {r} rounds");
+        assert!(edges > 0, "kind={kind:?}: the wake edge never fired in {r} rounds");
+        assert!(rt.quiescent(), "kind={kind:?}");
+        eprintln!("kind={kind:?}: rounds={r} taskwait parks={parks} wake edges={edges}");
+        ts.shutdown();
+    }
+}
+
+/// Shutdown requested while a parent is (possibly) parked in
+/// `taskwait_on`: the wake_all re-checks the flag, the taskwait switches
+/// to bounded timed parks, the still-running child completes and its wake
+/// edge releases the parent — and the pool joins. A deadlock anywhere in
+/// that chain hangs (and times out) the test.
+#[test]
+fn shutdown_requested_while_parent_parked_in_taskwait_does_not_deadlock() {
+    for kind in KINDS {
+        for round in 0u64..10 {
+            let ts = TaskSystem::builder().kind(kind).num_threads(3).build();
+            let rt = ts.runtime().clone();
+            let done = Arc::new(AtomicU64::new(0));
+            let d = Arc::clone(&done);
+            ts.spawn(&[], move || {
+                std::thread::sleep(Duration::from_millis(4));
+                d.fetch_add(1, Ordering::Release);
+            });
+            let rt2 = rt.clone();
+            let killer = std::thread::spawn(move || {
+                // Land the request inside the parent's wait window, at a
+                // varying point of its spin → park progression.
+                std::thread::sleep(Duration::from_millis(1 + round % 3));
+                rt2.request_shutdown();
+            });
+            ts.taskwait(); // parent may be parked when the request lands
+            assert_eq!(done.load(Ordering::Acquire), 1, "kind={kind:?}");
+            killer.join().unwrap();
+            ts.shutdown(); // must join every (possibly parked) worker
+            assert!(rt.quiescent(), "kind={kind:?}");
+        }
+    }
+}
