@@ -46,6 +46,9 @@ fn main() {
     println!("\n== batch-budget A/B: fixed MAX_OPS_THREAD vs auto-tuned ==\n");
     let budget_adapt = contention::budget_adapt_ab(16_384);
     print!("{}", contention::render_budget_adapt(&budget_adapt));
+    println!("\n== containment A/B: no fault plan vs armed harness ==\n");
+    let fault_overhead = contention::fault_overhead_ab(50_000);
+    print!("{}", contention::render_fault_overhead(&fault_overhead));
     println!();
     let path = contention::default_json_path();
     if contention::write_suite_json(
@@ -55,6 +58,7 @@ fn main() {
         &park_wake,
         &taskwait_park,
         &budget_adapt,
+        &fault_overhead,
         "cargo bench --bench micro_structures",
     ) {
         println!("wrote {}\n", path.display());

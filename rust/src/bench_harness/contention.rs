@@ -26,7 +26,7 @@ use crate::coordinator::messages::QueueSystem;
 use crate::coordinator::ready::{LockedReadyPools, PoolContention, ReadyPools};
 use crate::coordinator::trace::{LockedTracer, TraceKind, Tracer};
 use crate::coordinator::wd::{TaskId, Wd, WdState};
-use crate::substrate::SignalDirectory;
+use crate::substrate::{FaultPlan, FaultSite, SignalDirectory};
 
 /// One side of an A/B measurement.
 #[derive(Clone, Copy, Debug, Default)]
@@ -583,6 +583,50 @@ pub fn budget_adapt_ab(msgs: u64) -> AbReport {
     AbReport { old: drill(msgs, false), new: drill(msgs, true) }
 }
 
+/// Failure-containment overhead drill: the same happy-path workload —
+/// `tasks` single-dep tasks over 8 reused regions, spawned and drained by
+/// one thread on the Sync organization — with and without a [`FaultPlan`]
+/// installed. Both sides pay the *structural* containment costs
+/// (`catch_unwind`, watchdog progress stamps, poison checks on finalize);
+/// the A/B isolates the *armed-harness* increment: plan deref + per-site
+/// rate draw on every wake edge, and the timed-park downgrade an armed
+/// `WakeEdge` site forces. The armed site runs at rate 1/65536 so the
+/// decision stream is actually drawn, while an injection on the
+/// single-threaded Sync side is semantically a no-op (nobody is parked) —
+/// the workload stays identical by construction. `acquisitions` records
+/// tasks executed (completing all of them on both sides is the check);
+/// `elapsed_ns` is the makespan.
+pub fn fault_overhead_ab(tasks: u64) -> AbReport {
+    fn drill(tasks: u64, plan: Option<Arc<FaultPlan>>) -> SideReport {
+        use crate::coordinator::ddast::DdastParams;
+        use crate::coordinator::pool::{RuntimeKind, RuntimeShared};
+
+        let rt = RuntimeShared::new_with_options(
+            RuntimeKind::Sync,
+            1,
+            DdastParams::tuned(1),
+            false,
+            23,
+            false,
+            plan,
+        );
+        let root = Arc::clone(&rt.root);
+        let t0 = Instant::now();
+        for i in 0..tasks {
+            rt.spawn_from(0, &root, vec![dep_out(1_000 + i % 8)], "drill", Box::new(|| {}));
+        }
+        rt.taskwait_on(0, &root);
+        SideReport {
+            acquisitions: rt.stats.tasks_executed.get(),
+            elapsed_ns: t0.elapsed().as_nanos() as u64,
+            ..SideReport::default()
+        }
+    }
+
+    let armed = Arc::new(FaultPlan::new(0xFA11).with_rate(FaultSite::WakeEdge, 1));
+    AbReport { old: drill(tasks, None), new: drill(tasks, Some(armed)) }
+}
+
 /// Drain one worker's queue pair (both sweep variants must do identical
 /// per-worker work or the A/B acquisition counts stop being comparable).
 fn drain_pair(qs: &QueueSystem, worker: usize) -> u64 {
@@ -735,14 +779,16 @@ fn sweep_json_inline(s: &SweepReport) -> String {
 
 /// Serialize the full suite: per-thread-count reports (each carrying the
 /// `batch_submit` drill), the sparse-traffic sweep series, the
-/// park-vs-sleep wake-latency pair, the taskwait-wake pair and the
-/// adaptive-batch-budget pair — the shape `BENCH_contention.json` carries.
+/// park-vs-sleep wake-latency pair, the taskwait-wake pair, the
+/// adaptive-batch-budget pair and the failure-containment overhead pair —
+/// the shape `BENCH_contention.json` carries.
 pub fn suite_to_json(
     reports: &[ContentionReport],
     sweeps: &[SweepReport],
     park_wake: &AbReport,
     taskwait_park: &AbReport,
     budget_adapt: &AbReport,
+    fault_overhead: &AbReport,
     generated_by: &str,
 ) -> String {
     let reports_json: Vec<String> =
@@ -752,13 +798,15 @@ pub fn suite_to_json(
     format!(
         "{{\n  \"generated_by\": \"{}\",\n  \"reports\": [\n{}\n  ],\n  \
          \"signal_sweep\": [\n{}\n  ],\n  \"park_wake\": {},\n  \
-         \"taskwait_park\": {},\n  \"budget_adapt\": {}\n}}\n",
+         \"taskwait_park\": {},\n  \"budget_adapt\": {},\n  \
+         \"fault_overhead\": {}\n}}\n",
         generated_by,
         reports_json.join(",\n"),
         sweeps_json.join(",\n"),
         ab_json(park_wake),
         ab_json(taskwait_park),
-        ab_json(budget_adapt)
+        ab_json(budget_adapt),
+        ab_json(fault_overhead)
     )
 }
 
@@ -852,6 +900,20 @@ pub fn render_budget_adapt(ab: &AbReport) -> String {
     )
 }
 
+/// Human-readable line for the containment-overhead drill.
+pub fn render_fault_overhead(ab: &AbReport) -> String {
+    let tasks = ab.old.acquisitions.max(1);
+    format!(
+        "fault overhead — {} happy-path tasks: no plan {:.2} ms ({:.0} ns/task) vs \
+         armed harness {:.2} ms ({:.0} ns/task)\n",
+        tasks,
+        ab.old.elapsed_ns as f64 / 1e6,
+        ab.old.elapsed_ns as f64 / tasks as f64,
+        ab.new.elapsed_ns as f64 / 1e6,
+        ab.new.elapsed_ns as f64 / tasks as f64
+    )
+}
+
 fn fmt_reduction(x: f64) -> String {
     if x.is_finite() {
         format!("{x:.1}x")
@@ -889,11 +951,20 @@ pub fn write_suite_json(
     park_wake: &AbReport,
     taskwait_park: &AbReport,
     budget_adapt: &AbReport,
+    fault_overhead: &AbReport,
     generated_by: &str,
 ) -> bool {
     std::fs::write(
         path,
-        suite_to_json(reports, sweeps, park_wake, taskwait_park, budget_adapt, generated_by),
+        suite_to_json(
+            reports,
+            sweeps,
+            park_wake,
+            taskwait_park,
+            budget_adapt,
+            fault_overhead,
+            generated_by,
+        ),
     )
     .is_ok()
 }
@@ -941,13 +1012,15 @@ mod tests {
         let pw = park_wake_ab(10);
         let tw = taskwait_park_ab(10);
         let ba = budget_adapt_ab(256);
-        let j = suite_to_json(&reports, &sweeps, &pw, &tw, &ba, "unit test");
+        let fo = fault_overhead_ab(64);
+        let j = suite_to_json(&reports, &sweeps, &pw, &tw, &ba, &fo, "unit test");
         for key in [
             "\"reports\"",
             "\"signal_sweep\"",
             "\"park_wake\"",
             "\"taskwait_park\"",
             "\"budget_adapt\"",
+            "\"fault_overhead\"",
             "\"workers\": 32",
             "\"threads\": 2",
         ] {
@@ -957,6 +1030,17 @@ mod tests {
         assert!(render_park_wake(&pw).contains("round trips"));
         assert!(render_taskwait_park(&tw).contains("child-completion"));
         assert!(render_budget_adapt(&ba).contains("token grabs"));
+        assert!(render_fault_overhead(&fo).contains("happy-path tasks"));
+    }
+
+    #[test]
+    fn fault_overhead_drill_completes_both_sides() {
+        // Completing the workload on both sides is the check: an armed
+        // harness must not change happy-path semantics, only (maybe) cost.
+        let ab = fault_overhead_ab(500);
+        assert_eq!(ab.old.acquisitions, 500);
+        assert_eq!(ab.new.acquisitions, 500);
+        assert!(ab.old.elapsed_ns > 0 && ab.new.elapsed_ns > 0);
     }
 
     #[test]

@@ -18,9 +18,11 @@ use std::thread::JoinHandle;
 
 use crate::coordinator::ddast::DdastParams;
 use crate::coordinator::dep::{DepMode, Dependence};
-use crate::coordinator::pool::{clear_ctx, current_ctx, install_ctx, RuntimeKind, RuntimeShared};
+use crate::coordinator::pool::{
+    clear_ctx, current_ctx, install_ctx, RuntimeKind, RuntimeShared, TaskErrors,
+};
 use crate::coordinator::wd::Wd;
-use crate::substrate::RegionKey;
+use crate::substrate::{FaultPlan, RegionKey};
 
 /// Builder for [`TaskSystem`].
 pub struct TaskSystemBuilder {
@@ -33,6 +35,7 @@ pub struct TaskSystemBuilder {
     manager_affinity: Option<Vec<usize>>,
     ranged: bool,
     seed: u64,
+    fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl Default for TaskSystemBuilder {
@@ -47,6 +50,7 @@ impl Default for TaskSystemBuilder {
             manager_affinity: None,
             ranged: false,
             seed: 0xDDA57,
+            fault_plan: None,
         }
     }
 }
@@ -111,15 +115,24 @@ impl TaskSystemBuilder {
         self
     }
 
+    /// Install a deterministic [`FaultPlan`] (the fault-injection harness —
+    /// tests/benches only; see `substrate::fault`). `None` (the default)
+    /// keeps every injection site a single branch.
+    pub fn fault_plan(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     pub fn build(self) -> TaskSystem {
         let params = self.params.unwrap_or_else(|| DdastParams::tuned(self.num_threads));
-        let rt = RuntimeShared::new_with_plugin(
+        let rt = RuntimeShared::new_with_options(
             self.kind,
             self.num_threads,
             params,
             self.tracing,
             self.seed,
             self.ranged,
+            self.fault_plan,
         );
         let mut autotuner = None;
         if self.kind == RuntimeKind::Ddast {
@@ -231,6 +244,19 @@ impl TaskSystem {
         rt.taskwait_on(worker, &parent);
     }
 
+    /// [`TaskSystem::taskwait`], then report whether the run is poisoned:
+    /// `Err(TaskErrors)` once any task body panicked (or was cancelled by
+    /// poison propagation). Non-breaking companion to the infallible call —
+    /// the wait semantics are identical, and the error is *sticky* (the
+    /// cumulative counters, not this wait's delta).
+    pub fn taskwait_checked(&self) -> Result<(), TaskErrors> {
+        self.taskwait();
+        match self.inner.rt.task_errors() {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
     /// Resolve the calling thread's context; threads outside the pool act
     /// as worker 0 spawning from the root task.
     fn ctx(&self) -> (Arc<RuntimeShared>, usize, Arc<Wd>) {
@@ -251,23 +277,59 @@ impl TaskSystem {
             rt.taskwait_on(0, &root);
             rt.request_shutdown();
         }
-        let mut threads = self.inner.threads.lock().unwrap();
+        // A poisoned `threads` mutex means some thread panicked while
+        // holding it — the join handles inside are still valid, and
+        // refusing to join them here would leak the pool on the very runs
+        // that most need a clean teardown. Take the data and go on.
+        let mut threads = self
+            .inner
+            .threads
+            .lock()
+            .unwrap_or_else(|poisoned| {
+                rt.stats.teardown_degradations.inc();
+                poisoned.into_inner()
+            });
         for t in threads.drain(..) {
-            let _ = t.join();
+            if t.join().is_err() {
+                // A worker died outside the catch_unwind boundary (runtime
+                // bug, not a task panic — those are contained). Count it;
+                // the remaining joins must still happen.
+                rt.stats.teardown_degradations.inc();
+            }
+        }
+    }
+
+    /// [`TaskSystem::shutdown`], then report whether the run was poisoned —
+    /// the checked teardown for callers that want failures surfaced instead
+    /// of only counted. Same sticky semantics as
+    /// [`TaskSystem::taskwait_checked`].
+    pub fn shutdown_checked(&self) -> Result<(), TaskErrors> {
+        self.shutdown();
+        match self.inner.rt.task_errors() {
+            None => Ok(()),
+            Some(e) => Err(e),
         }
     }
 }
 
 impl Drop for Inner {
     fn drop(&mut self) {
-        // Last handle gone: drain and join.
+        // Last handle gone: drain and join. Same graceful teardown as
+        // `shutdown`: a poisoned lock or a dead worker must not abort the
+        // process via a panic-in-drop — count and keep joining.
         if !self.rt.shutdown_requested() {
             let root = Arc::clone(&self.rt.root);
             self.rt.taskwait_on(0, &root);
             self.rt.request_shutdown();
         }
-        for t in self.threads.lock().unwrap().drain(..) {
-            let _ = t.join();
+        let mut threads = self.threads.lock().unwrap_or_else(|poisoned| {
+            self.rt.stats.teardown_degradations.inc();
+            poisoned.into_inner()
+        });
+        for t in threads.drain(..) {
+            if t.join().is_err() {
+                self.rt.stats.teardown_degradations.inc();
+            }
         }
         clear_ctx();
     }
@@ -329,6 +391,20 @@ mod tests {
             ts.taskwait();
             assert_eq!(v.load(Ordering::SeqCst), 1 << 20, "kind={kind:?}");
         }
+    }
+
+    #[test]
+    fn checked_apis_surface_task_panics() {
+        let ts = TaskSystem::new_sync(1);
+        ts.spawn(&[], || {});
+        assert!(ts.taskwait_checked().is_ok(), "clean run reports Ok");
+        ts.spawn(&[], || panic!("kaboom"));
+        let err = ts.taskwait_checked().unwrap_err();
+        assert_eq!(err.tasks_failed, 1);
+        assert!(err.first_panic.as_deref().unwrap().contains("kaboom"));
+        // Sticky: the poisoned run stays poisoned through teardown.
+        let err = ts.shutdown_checked().unwrap_err();
+        assert_eq!(err.tasks_failed, 1);
     }
 
     #[test]

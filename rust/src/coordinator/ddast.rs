@@ -5,6 +5,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::coordinator::pool::RuntimeShared;
+use crate::substrate::FaultSite;
 
 /// Tuning knobs of the DDAST callback (paper §3.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,6 +137,14 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
                 None => break,
             };
             let wq = &rt.queues.workers[w];
+            // Fault site `DrainBatch`: defer this worker's drain to a later
+            // round. Re-raise first so the deferral cannot strand the
+            // messages behind a clean directory — exactly the budget-
+            // exhausted hand-back below, minus the drain.
+            if wq.pending() > 0 && rt.fault_inject(FaultSite::DrainBatch) {
+                dir.raise(w);
+                continue;
+            }
             // Lines 8–20 batched: up to MAX_OPS_THREAD messages — Submit
             // prioritized, FIFO — in one pass, with the graph application
             // running while the Submit consumer token is still held (pop +
@@ -166,6 +175,12 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
     rt.stats.mgr_msgs.add(total_processed);
     rt.mgr_count.fetch_sub(1, Ordering::AcqRel);
     rt.trace_manager_exit(me);
+    if total_processed == 0 {
+        // Empty-handed exit — the idle moment the hang watchdog piggybacks
+        // on: if work sits outstanding while everyone else is parked past
+        // the deadline, re-raise and wake before going idle ourselves.
+        rt.watchdog_tick();
+    }
     total_processed > 0
 }
 

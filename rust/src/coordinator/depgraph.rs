@@ -386,6 +386,15 @@ impl DepDomain {
     /// micro_structures bench).
     ///
     /// Returns the now-ready tasks; the caller schedules them.
+    ///
+    /// **Poison contract**: dead tasks (`Failed`/`Cancelled` — both satisfy
+    /// `is_finished`) take this exact path too. The graph itself is
+    /// failure-agnostic: it releases the same successor set it would for a
+    /// success, and the *caller* (`RuntimeShared::finalize_one`) decides
+    /// whether the released tasks become `Ready` or are cancelled in turn.
+    /// Keeping poison out of the graph keeps one removal routine for all
+    /// outcomes — accounting (`tasks_in_graph`, predecessor counts) cannot
+    /// diverge between the success and failure paths.
     pub fn finish(&self, task: &Arc<Wd>) -> Vec<Arc<Wd>> {
         debug_assert!(task.is_finished(), "finish() before body completed");
         let mut visits = 0u64;

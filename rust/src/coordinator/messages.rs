@@ -194,13 +194,25 @@ pub struct QueueSystem {
 
 impl QueueSystem {
     pub fn new(num_workers: usize) -> Self {
+        Self::with_park_slots(num_workers, num_workers)
+    }
+
+    /// Like [`QueueSystem::new`], but with the signal directory sized to
+    /// `park_slots` parking contexts — `park_slots >= num_workers`. The
+    /// runtime passes one slot per *context*, like the trace rings: the
+    /// CentralDast DAS thread parks (timed) on the extra slot beyond the
+    /// workers, so `wake_all` (shutdown, watchdog) reaches it. Only the
+    /// first `num_workers` slots carry work-signal raises; the extras are
+    /// parking-only.
+    pub fn with_park_slots(num_workers: usize, park_slots: usize) -> Self {
+        debug_assert!(park_slots >= num_workers);
         QueueSystem {
             workers: (0..num_workers).map(|_| WorkerQueues::new()).collect(),
             // +2: the CentralDast DAS slot and stray non-pool threads also
             // update the gauge (satellite fix: cells sized from the actual
             // thread count instead of the fixed 16).
             pending: ShardedCounter::with_shards(num_workers + 2),
-            signals: SignalDirectory::new(num_workers.max(1)),
+            signals: SignalDirectory::new(park_slots.max(num_workers).max(1)),
         }
     }
 

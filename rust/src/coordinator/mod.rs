@@ -24,7 +24,7 @@ pub use dep::{dep_in, dep_inout, dep_out, DepMode, Dependence};
 pub use depgraph::DepDomain;
 pub use dispatcher::{Dispatcher, LockedDispatcher};
 pub use messages::{MsgBatch, QueueSystem};
-pub use pool::{RuntimeKind, RuntimeShared};
+pub use pool::{RuntimeKind, RuntimeShared, TaskErrors};
 pub use ready::{LockedReadyPools, PoolContention, ReadyPools};
 pub use trace::{LockedTracer, ThreadState, TraceEvent, TraceKind, Tracer};
 pub use wd::{TaskId, Wd, WdState};

@@ -4,10 +4,26 @@
 //! DDAST): task creation/submission, the idle loop that notifies the
 //! Functionality Dispatcher, task execution, finalization and the
 //! `DoneHandled`/`Deletable` deletion protocol, plus `taskwait`.
+//!
+//! ## Failure containment
+//!
+//! Task bodies execute inside a `catch_unwind` boundary: a panicking body
+//! lands its `Wd` in [`WdState::Failed`] and still runs the **full**
+//! finalize path, so successor notification, `children_live` accounting and
+//! the taskwait wake edge never leak. A failed task *poisons* its
+//! dependents — every successor its finish releases is
+//! [`WdState::Cancelled`] (body dropped unrun) and finalized in turn, so
+//! poison propagates transitively along the dependence edges while the
+//! graph drains normally. A hang watchdog ([`RuntimeShared::watchdog_tick`])
+//! piggybacks on the idle paths and re-raises/wakes when workers sit parked
+//! past a deadline with work outstanding. All of it is observable through
+//! `RtStats` and [`RuntimeShared::task_errors`], and injectable
+//! deterministically through a [`FaultPlan`].
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::ddast::{ddast_callback, DdastParams};
 use crate::coordinator::dep::Dependence;
@@ -16,7 +32,7 @@ use crate::coordinator::messages::{DoneTaskMsg, MsgBatch, QueueSystem};
 use crate::coordinator::ready::ReadyPools;
 use crate::coordinator::trace::{ThreadState, TraceKind, Tracer};
 use crate::coordinator::wd::{TaskBody, TaskId, Wd, WdState};
-use crate::substrate::Counter;
+use crate::substrate::{Counter, FaultPlan, FaultSite, SpinLock};
 
 /// Which runtime organization to run (paper §6.1's compared runtimes, plus
 /// the authors' earlier centralized design [7] for lineage comparison).
@@ -67,6 +83,82 @@ pub struct RtStats {
     /// Child-completion wake edges fired: a finalizer's decrement-to-zero
     /// claimed a parent's waiter registration and woke its worker slot.
     pub taskwait_wake_edges: Counter,
+    /// Task bodies that panicked (caught at the execution boundary).
+    pub tasks_failed: Counter,
+    /// Tasks poisoned by a failed/cancelled predecessor: body dropped
+    /// unrun, finalized normally.
+    pub tasks_cancelled: Counter,
+    /// Hang-watchdog self-heals: workers found parked past the progress
+    /// deadline with work outstanding, re-raised and woken.
+    pub watchdog_recoveries: Counter,
+    /// Teardown paths that degraded gracefully instead of asserting (e.g. a
+    /// parent `Wd` already reclaimed while a poisoned run shuts down).
+    pub teardown_degradations: Counter,
+}
+
+/// Failure summary of a run — the payload of the non-breaking checked APIs
+/// (`TaskSystem::taskwait_checked` / `shutdown_checked`). Counters are
+/// cumulative for the runtime's lifetime: a run that ever failed stays
+/// poisoned (fail-stop reporting), matching the sticky `RtStats` gauges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskErrors {
+    /// Task bodies that panicked.
+    pub tasks_failed: u64,
+    /// Dependents cancelled by poison propagation.
+    pub tasks_cancelled: u64,
+    /// Message of the first caught panic (task id + label + payload).
+    pub first_panic: Option<String>,
+}
+
+impl std::fmt::Display for TaskErrors {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} task(s) failed, {} cancelled",
+            self.tasks_failed, self.tasks_cancelled
+        )?;
+        if let Some(msg) = &self.first_panic {
+            write!(f, " (first: {msg})")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for TaskErrors {}
+
+/// Hang-watchdog progress stamp: a coarse "last useful work" timestamp
+/// (µs since runtime construction) the idle paths compare against
+/// [`WATCHDOG_DEADLINE`]. Turning the no-lost-wakeup invariant from an
+/// assumption into a monitored property: if it ever breaks (or a fault
+/// plan breaks it on purpose), the next idle pass detects the stall and
+/// re-raises/wakes instead of hanging.
+struct Watchdog {
+    base: Instant,
+    last_progress_us: AtomicU64,
+}
+
+impl Watchdog {
+    fn new() -> Watchdog {
+        Watchdog { base: Instant::now(), last_progress_us: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    fn now_us(&self) -> u64 {
+        self.base.elapsed().as_micros() as u64
+    }
+
+    /// Stamp "useful work happened now". Relaxed: the stamp is a heuristic
+    /// deadline input, not a synchronization edge.
+    #[inline]
+    fn note_progress(&self) {
+        self.last_progress_us.store(self.now_us(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn stale(&self, deadline: Duration) -> bool {
+        self.now_us().saturating_sub(self.last_progress_us.load(Ordering::Relaxed))
+            >= deadline.as_micros() as u64
+    }
 }
 
 thread_local! {
@@ -102,6 +194,12 @@ pub struct RuntimeShared {
     /// Use the range-overlap dependence plugin for new domains
     /// (TaskSystemBuilder::ranged_deps).
     pub ranged_deps: bool,
+    /// Deterministic fault-injection plan (tests/benches); `None` in
+    /// production — every site check is then a single branch.
+    fault_plan: Option<Arc<FaultPlan>>,
+    /// Message of the first caught task panic (feeds [`TaskErrors`]).
+    first_panic: SpinLock<Option<String>>,
+    watchdog: Watchdog,
     shutdown: AtomicBool,
     next_task_id: AtomicU64,
 }
@@ -127,6 +225,21 @@ impl RuntimeShared {
         seed: u64,
         ranged_deps: bool,
     ) -> Arc<Self> {
+        Self::new_with_options(kind, num_threads, params, tracing, seed, ranged_deps, None)
+    }
+
+    /// Full-option constructor: dependence plugin plus an optional
+    /// deterministic [`FaultPlan`] (fault-injection harness; `None` outside
+    /// tests/benches).
+    pub fn new_with_options(
+        kind: RuntimeKind,
+        num_threads: usize,
+        params: DdastParams,
+        tracing: bool,
+        seed: u64,
+        ranged_deps: bool,
+        fault_plan: Option<Arc<FaultPlan>>,
+    ) -> Arc<Self> {
         assert!(num_threads >= 1, "need at least the main thread");
         // GOMP-like: a single central *locked* ready queue all threads hit
         // (the comparator models a centralized contended runtime, so it
@@ -142,12 +255,16 @@ impl RuntimeShared {
         // slot onto worker 0's buffer via `worker % buffers.len()`,
         // silently merging two threads' streams.)
         let trace_slots = num_threads + usize::from(kind == RuntimeKind::CentralDast);
+        // The signal directory gets one parking slot per *context*, like the
+        // trace rings: the centralized design's DAS thread parks (timed) on
+        // the extra slot beyond the workers, so shutdown and the watchdog
+        // can wake it instead of waiting out a blind sleep.
         Arc::new(RuntimeShared {
             kind,
             params,
             tunables: Arc::new(crate::coordinator::autotune::TunableParams::new(params)),
             num_threads,
-            queues: QueueSystem::new(num_threads),
+            queues: QueueSystem::with_park_slots(num_threads, trace_slots),
             ready,
             dispatcher: Dispatcher::new(),
             root: Wd::root(),
@@ -155,6 +272,9 @@ impl RuntimeShared {
             stats: RtStats::default(),
             tracer: if tracing { Some(Tracer::new(trace_slots)) } else { None },
             ranged_deps,
+            fault_plan,
+            first_panic: SpinLock::new(None),
+            watchdog: Watchdog::new(),
             shutdown: AtomicBool::new(false),
             next_task_id: AtomicU64::new(1),
         })
@@ -229,6 +349,64 @@ impl RuntimeShared {
             && self.queues.pending_exact() == 0
             && self.ready.ready_count_exact() == 0
             && self.queues.signals_quiescent()
+    }
+
+    // ---- failure containment ---------------------------------------------
+
+    /// The installed fault-injection plan, if any (tests/telemetry).
+    pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.fault_plan.as_ref()
+    }
+
+    /// Draw a fault decision for `site` — `false` (one branch) when no plan
+    /// is installed or the site is disarmed.
+    #[inline]
+    pub(crate) fn fault_inject(&self, site: FaultSite) -> bool {
+        self.fault_plan.as_ref().is_some_and(|p| p.should_inject(site))
+    }
+
+    /// Failure summary so far: `None` while the run is clean, the sticky
+    /// counters plus the first panic message once anything failed.
+    pub fn task_errors(&self) -> Option<TaskErrors> {
+        let tasks_failed = self.stats.tasks_failed.get();
+        let tasks_cancelled = self.stats.tasks_cancelled.get();
+        if tasks_failed == 0 && tasks_cancelled == 0 {
+            return None;
+        }
+        Some(TaskErrors { tasks_failed, tasks_cancelled, first_panic: self.first_panic.lock().clone() })
+    }
+
+    /// One hang-watchdog pass, piggybacked on the idle paths (the DDAST
+    /// sweep's empty-handed exits, the DAS loop's idle tier, timed-park
+    /// timeouts). Detects "work outstanding + workers parked + no progress
+    /// for [`WATCHDOG_DEADLINE`]" and self-heals: re-raises every worker
+    /// with queued messages, wakes all parked slots, counts the recovery.
+    /// Returns whether it healed. Cheap when healthy: two relaxed loads and
+    /// a compare.
+    pub fn watchdog_tick(&self) -> bool {
+        if self.shutdown_requested() || !self.watchdog.stale(WATCHDOG_DEADLINE) {
+            return false;
+        }
+        let signals = self.queues.signals();
+        if signals.parked_count() == 0 {
+            return false;
+        }
+        if self.queues.pending() == 0 && self.ready.ready_count() == 0 {
+            return false;
+        }
+        // Self-heal: restore the raise for every worker that still has
+        // queued messages (a swallowed raise leaves the directory clean
+        // while the queue is not), then wake everything parked — spurious
+        // wakes re-park, a stalled wake is delivered late instead of never.
+        for w in 0..self.queues.num_workers() {
+            if self.queues.workers[w].pending() > 0 {
+                signals.raise(w);
+            }
+        }
+        signals.wake_all();
+        self.watchdog.note_progress();
+        self.stats.watchdog_recoveries.inc();
+        true
     }
 
     // ---- tracing helpers -------------------------------------------------
@@ -310,13 +488,27 @@ impl RuntimeShared {
     /// message traffic through [`SignalDirectory::raise`]'s wake hook, but
     /// ready-pool pushes have no raise — this is their wake edge. One fence
     /// plus a bitmap load when nobody is parked (the common case).
+    ///
+    /// Fault site [`FaultSite::WakeEdge`]: an injected fault swallows the
+    /// wake (an unbounded delay) — the timed-park recheck cadence and the
+    /// hang watchdog must then deliver the work anyway.
     #[inline]
     fn wake_for_ready(&self, n: usize) {
+        if self.fault_inject(FaultSite::WakeEdge) {
+            return;
+        }
         self.queues.signals().wake_parked(n);
     }
 
     fn process_submit_direct(&self, worker: usize, task: Arc<Wd>) {
-        let parent = task.parent.upgrade().expect("parent outlives children");
+        let Some(parent) = task.parent.upgrade() else {
+            // Teardown after failure: the parent WD was already reclaimed,
+            // so the submission has no domain to enter. Degrade to a
+            // counted cancellation instead of asserting — the poisoned run
+            // must still reach quiescence and join.
+            self.orphaned_submit(task);
+            return;
+        };
         let domain = parent.child_domain_with(self.ranged_deps);
         task.set_state(WdState::Submitted);
         self.stats.graph_submits.inc();
@@ -325,6 +517,21 @@ impl RuntimeShared {
             self.ready.push(worker, task);
             self.wake_for_ready(1);
         }
+    }
+
+    /// Counted graceful degradation for a submission whose parent WD is
+    /// already gone (reachable only during teardown after a failure):
+    /// cancel the task and settle the outstanding gauge, with no
+    /// `child_done`/domain traffic — there is no parent left to notify.
+    fn orphaned_submit(&self, task: Arc<Wd>) {
+        self.stats.teardown_degradations.inc();
+        task.set_state(WdState::Submitted);
+        task.set_state(WdState::Cancelled);
+        task.drop_body();
+        self.stats.tasks_cancelled.inc();
+        task.set_state(WdState::DoneHandled);
+        task.set_state(WdState::Deletable);
+        self.stats.tasks_outstanding.dec();
     }
 
     /// Manager-side handling of a single Submit Task Message — the
@@ -373,8 +580,15 @@ impl RuntimeShared {
             {
                 j += 1;
             }
-            let parent =
-                batch.submits[i].parent.upgrade().expect("parent outlives children");
+            let Some(parent) = batch.submits[i].parent.upgrade() else {
+                // Teardown after failure: the whole same-parent run is
+                // orphaned — degrade each task instead of asserting.
+                for task in batch.submits[i..j].iter().cloned() {
+                    self.orphaned_submit(task);
+                }
+                i = j;
+                continue;
+            };
             let domain = parent.child_domain_with(self.ranged_deps);
             for task in &batch.submits[i..j] {
                 task.set_state(WdState::Submitted);
@@ -396,25 +610,64 @@ impl RuntimeShared {
             self.finalize_task(mgr_worker, &msg.task);
         }
         self.queues.messages_processed(n);
+        self.watchdog.note_progress();
         self.trace_gauges(mgr_worker);
     }
 
     /// Life-cycle step 5/6: remove from graph, wake successors, run the
     /// deletion-state protocol. Called by the worker itself (Sync/GOMP) or
     /// by a manager thread (DDAST).
+    ///
+    /// **Poison propagation**: when `task` died ([`WdState::Failed`] or
+    /// [`WdState::Cancelled`]), every successor its finish releases is
+    /// cancelled instead of made ready — and, having no body to run, is
+    /// finalized immediately on a local worklist (iterative, so a long
+    /// poisoned chain cannot overflow the stack). Each cancelled task runs
+    /// this same full protocol: graph removal, `DoneHandled`/`Deletable`,
+    /// parent accounting, wake edge — accounting never leaks, it only
+    /// skips the bodies.
     fn finalize_task(&self, worker: usize, task: &Arc<Wd>) {
-        let parent = task.parent.upgrade().expect("parent outlives children");
+        // Lazily filled: the happy path never allocates.
+        let mut poisoned: Vec<Arc<Wd>> = Vec::new();
+        self.finalize_one(worker, task, &mut poisoned);
+        while let Some(dead) = poisoned.pop() {
+            self.finalize_one(worker, &dead, &mut poisoned);
+        }
+    }
+
+    fn finalize_one(&self, worker: usize, task: &Arc<Wd>, poisoned: &mut Vec<Arc<Wd>>) {
+        let Some(parent) = task.parent.upgrade() else {
+            // Teardown after failure: the parent WD was already reclaimed.
+            // Its domain (and with it any successors) is gone too — settle
+            // this task's own accounting and degrade gracefully.
+            self.stats.teardown_degradations.inc();
+            task.set_state(WdState::DoneHandled);
+            if task.children_live() == 0 {
+                task.set_state(WdState::Deletable);
+            }
+            self.stats.tasks_outstanding.dec();
+            return;
+        };
         if !task.deps.is_empty() {
             let domain = parent.child_domain_with(self.ranged_deps);
             self.stats.graph_finishes.inc();
             let ready = domain.finish(task);
-            for t in &ready {
-                t.set_state(WdState::Ready);
-            }
-            let released = ready.len();
-            self.ready.push_batch(worker, ready);
-            if released > 0 {
-                self.wake_for_ready(released);
+            if task.is_poisoned() {
+                for t in &ready {
+                    t.set_state(WdState::Cancelled);
+                    t.drop_body();
+                    self.stats.tasks_cancelled.inc();
+                }
+                poisoned.extend(ready);
+            } else {
+                for t in &ready {
+                    t.set_state(WdState::Ready);
+                }
+                let released = ready.len();
+                self.ready.push_batch(worker, ready);
+                if released > 0 {
+                    self.wake_for_ready(released);
+                }
             }
         }
         // §3.1: deletion synchronization through an extra state rather than
@@ -432,7 +685,9 @@ impl RuntimeShared {
             // registration is visible here and gets a targeted wake.
             if let Some(w) = parent.take_waiter() {
                 self.stats.taskwait_wake_edges.inc();
-                self.queues.signals().wake_worker(w);
+                if !self.fault_inject(FaultSite::WakeEdge) {
+                    self.queues.signals().wake_worker(w);
+                }
             }
             if parent.done_handled() {
                 parent.set_state(WdState::Deletable);
@@ -441,6 +696,18 @@ impl RuntimeShared {
     }
 
     /// Execute a ready task on `worker` (life-cycle steps 3–5).
+    ///
+    /// **Panic isolation**: the body runs inside a
+    /// `catch_unwind(AssertUnwindSafe(..))` boundary. A panicking body can
+    /// no longer unwind through `worker_loop` (killing the worker and
+    /// leaking its parked bit and the parent's `children_live`): the task
+    /// lands in [`WdState::Failed`], the panic is recorded for
+    /// [`RuntimeShared::task_errors`], and the task takes the **same**
+    /// finalize route as a successful one — successor poisoning included.
+    /// `AssertUnwindSafe` is sound here because the only state crossing the
+    /// boundary is the body itself (consumed either way) and shared runtime
+    /// structures whose invariants are maintained by their own atomics and
+    /// locks, not by the body's completion.
     pub fn run_task(self: &Arc<Self>, worker: usize, task: Arc<Wd>) {
         task.set_state(WdState::Running);
         if let Some(t) = &self.tracer {
@@ -457,24 +724,59 @@ impl RuntimeShared {
                 ctx.task_stack.push(Arc::clone(&task));
             }
         });
-        body();
+        // Fault site `TaskBody`: panic inside the boundary instead of
+        // running the body, exercising the Failed path end to end.
+        let inject = self.fault_inject(FaultSite::TaskBody);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            if inject {
+                panic!("injected fault: task body");
+            }
+            body();
+        }));
+        // The pop runs on the unwind path too: a panicking task must not
+        // leave itself on the stack as the parent of later spawns.
         CTX.with(|c| {
             if let Some(ctx) = c.borrow_mut().as_mut() {
                 let popped = ctx.task_stack.pop();
                 debug_assert!(popped.is_some_and(|p| p.id == task.id));
             }
         });
-        task.set_state(WdState::Finished);
-        self.stats.tasks_executed.inc();
+        match outcome {
+            Ok(()) => {
+                task.set_state(WdState::Finished);
+                self.stats.tasks_executed.inc();
+            }
+            Err(payload) => {
+                task.set_state(WdState::Failed);
+                self.stats.tasks_failed.inc();
+                self.record_panic(&task, payload.as_ref());
+            }
+        }
         if let Some(t) = &self.tracer {
             t.record(worker, TraceKind::TaskEnd { worker, id: task.id.0 });
             t.record(worker, TraceKind::State { worker, state: ThreadState::Idle, label: "" });
         }
+        self.watchdog.note_progress();
         match self.kind {
             RuntimeKind::Sync | RuntimeKind::GompLike => self.finalize_task(worker, &task),
             RuntimeKind::Ddast | RuntimeKind::CentralDast => self.queues.push_done(worker, task),
         }
         self.trace_gauges(worker);
+    }
+
+    /// Record the first caught task panic for [`TaskErrors::first_panic`].
+    fn record_panic(&self, task: &Arc<Wd>, payload: &(dyn std::any::Any + Send)) {
+        let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+            s
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.as_str()
+        } else {
+            "non-string panic payload"
+        };
+        let mut slot = self.first_panic.lock();
+        if slot.is_none() {
+            *slot = Some(format!("task {:?} ({}) panicked: {msg}", task.id, task.label));
+        }
     }
 
     /// One scheduling attempt for `worker`: run a ready task, else notify
@@ -587,6 +889,13 @@ impl RuntimeShared {
                 if signals.is_raised(w) {
                     signals.try_claim(w);
                 }
+                // Fault site `DrainBatch`: defer this worker's drain to a
+                // later sweep. Re-raise so the deferral cannot strand the
+                // messages behind a clean directory.
+                if wq.pending() > 0 && self.fault_inject(FaultSite::DrainBatch) {
+                    signals.raise(w);
+                    continue;
+                }
                 // Drain-to-empty in bounded chunks through the batch path:
                 // the graph pays one shard-acquisition set per chunk, the
                 // chunk bound keeps the reusable buffer small, and the
@@ -613,7 +922,35 @@ impl RuntimeShared {
                 break;
             }
             idle += 1;
-            idle_backoff(idle);
+            if idle < PARK_AFTER {
+                // Spin/yield tiers only — the sleep tier starts at
+                // PARK_AFTER and is replaced by the timed park below.
+                idle_backoff(idle);
+                continue;
+            }
+            self.watchdog_tick();
+            // Timed park on the DAS slot's own directory entry (the extra
+            // slot beyond the workers — see the constructor). Formerly the
+            // last blind `idle_backoff` sleep in the runtime: shutdown's
+            // `wake_all` and the watchdog now cut the wait short instead of
+            // waiting out the quantum. The park stays *timed*: message
+            // pushes raise the directory, but a raise-wake may land on a
+            // parked worker rather than this slot, so an indefinite park
+            // could strand the queue — the timeout preserves the old
+            // worst-case drain latency (one IDLE_RECHECK quantum) while
+            // wakes make the common case prompt.
+            let signals = self.queues.signals();
+            if !signals.begin_park(worker_slot) {
+                idle_backoff(idle);
+                continue;
+            }
+            if self.queues.pending() > 0 || self.shutdown_requested() {
+                signals.cancel_park(worker_slot);
+                idle = PARK_RETRY_IDLE;
+                continue;
+            }
+            signals.park_timeout(worker_slot, IDLE_RECHECK);
+            idle = PARK_RETRY_IDLE;
         }
         clear_ctx();
     }
@@ -630,7 +967,13 @@ impl RuntimeShared {
     /// announce → re-check → commit cycle after one progress attempt).
     fn commit_park(&self, worker: usize) -> u32 {
         let signals = self.queues.signals();
-        let woke = if self.park_wake_condition() {
+        // An armed wake-edge fault site may swallow the very wake an
+        // indefinite park relies on: under such a plan every park is timed,
+        // so injected wake losses stay inside the recovery envelope (the
+        // recheck cadence redelivers what the fault withheld).
+        let wake_faults_armed =
+            self.fault_plan.as_ref().is_some_and(|p| p.armed(FaultSite::WakeEdge));
+        let woke = if self.park_wake_condition() || wake_faults_armed {
             signals.park_timeout(worker, IDLE_RECHECK)
         } else {
             signals.park(worker);
@@ -639,6 +982,9 @@ impl RuntimeShared {
         if woke {
             PARK_RETRY_IDLE
         } else {
+            // Timed out with work visible this thread could not act on —
+            // the cheap moment to ask whether everyone else is stuck too.
+            self.watchdog_tick();
             PARK_AFTER
         }
     }
@@ -728,19 +1074,25 @@ const DAS_BATCH: usize = 64;
 /// work, shutdown drains), it now parks wakeably for the same quantum.
 const IDLE_RECHECK: std::time::Duration = std::time::Duration::from_micros(100);
 
+/// How long the runtime may go without useful work — while work is
+/// outstanding and workers sit parked — before an idle pass declares a
+/// stall and self-heals (re-raise + wake_all). 50 timed-park quanta: far
+/// above any healthy scheduling gap, far below a test timeout.
+const WATCHDOG_DEADLINE: Duration = Duration::from_millis(5);
+
 /// Idle back-off: spin briefly, then yield, then sleep. The sleep tier
 /// matters when the host is oversubscribed (more runtime threads than
 /// cores — always true on this 1-core box): pure spin/yield starves
-/// whoever holds actual work (e.g. the PJRT service thread). **Only the
-/// DAS thread still reaches the blind sleep tier on a supported path**
-/// (its wake conditions are not directory signals): the worker loop and
-/// `taskwait_on` call this with `idle < PARK_AFTER` — spin/yield tiers —
-/// and replace the sleep with directory parking (timed via
-/// [`IDLE_RECHECK`] when work is visible they cannot act on, indefinite
-/// plus wake edges otherwise). The one exception is the degenerate
-/// contended-slot fallback (an external thread sharing a pool worker's
-/// id, where no parker or wake edge is available): that keeps the full
-/// ladder rather than yield-spinning a core away.
+/// whoever holds actual work (e.g. the PJRT service thread). **No loop
+/// reaches the blind sleep tier on a supported path anymore**: the worker
+/// loop, `taskwait_on` *and* the DAS thread call this with
+/// `idle < PARK_AFTER` — spin/yield tiers — and replace the sleep with
+/// directory parking (timed via [`IDLE_RECHECK`] when work is visible
+/// they cannot act on — always for the DAS slot — indefinite plus wake
+/// edges otherwise). The one exception is the degenerate contended-slot
+/// fallback (an external thread sharing a pool worker's id, where no
+/// parker or wake edge is available): that keeps the full ladder rather
+/// than yield-spinning a core away.
 #[inline]
 fn idle_backoff(idle: u32) {
     if idle < 16 {
@@ -909,6 +1261,67 @@ mod tests {
         let signals = rt.queues.signals();
         assert!(signals.begin_park(0));
         signals.park(0);
+        clear_ctx();
+    }
+
+    #[test]
+    fn panicking_task_fails_and_accounting_settles() {
+        let rt = rt(RuntimeKind::Sync);
+        let root = Arc::clone(&rt.root);
+        let wd = rt.spawn_from(0, &root, vec![], "boomer", Box::new(|| panic!("boom")));
+        drain(&rt);
+        // The panic was contained: the task died Failed, finalized fully,
+        // and the taskwait returned.
+        assert_eq!(rt.stats.tasks_failed.get(), 1);
+        assert_eq!(rt.stats.tasks_executed.get(), 0);
+        assert_eq!(rt.stats.tasks_outstanding.get(), 0);
+        assert_eq!(wd.state(), WdState::Deletable);
+        assert!(rt.quiescent());
+        let errs = rt.task_errors().expect("a failed run reports errors");
+        assert_eq!(errs.tasks_failed, 1);
+        assert_eq!(errs.tasks_cancelled, 0);
+        let msg = errs.first_panic.expect("panic message recorded");
+        assert!(msg.contains("boom") && msg.contains("boomer"), "{msg}");
+        clear_ctx();
+    }
+
+    #[test]
+    fn failed_task_poisons_dependents_transitively() {
+        let rt = rt(RuntimeKind::Sync);
+        let root = Arc::clone(&rt.root);
+        let ran = Arc::new(AtomicUsize::new(0));
+        rt.spawn_from(0, &root, vec![dep_out(1)], "head", Box::new(|| panic!("head died")));
+        // A chain behind the head (In 1 → Out 2, then In 2) plus a sibling
+        // reader: poison must flow through *released* edges transitively.
+        let r1 = Arc::clone(&ran);
+        let mid = rt.spawn_from(
+            0,
+            &root,
+            vec![dep_in(1), dep_out(2)],
+            "mid",
+            Box::new(move || {
+                r1.fetch_add(1, Ordering::Relaxed);
+            }),
+        );
+        let r2 = Arc::clone(&ran);
+        let tail = rt.spawn_from(0, &root, vec![dep_in(2)], "tail", Box::new(move || {
+            r2.fetch_add(1, Ordering::Relaxed);
+        }));
+        let r3 = Arc::clone(&ran);
+        let sib = rt.spawn_from(0, &root, vec![dep_in(1)], "sib", Box::new(move || {
+            r3.fetch_add(1, Ordering::Relaxed);
+        }));
+        drain(&rt);
+        assert_eq!(ran.load(Ordering::Relaxed), 0, "no poisoned body ran");
+        assert_eq!(rt.stats.tasks_failed.get(), 1);
+        assert_eq!(rt.stats.tasks_cancelled.get(), 3);
+        for (wd, name) in [(&mid, "mid"), (&tail, "tail"), (&sib, "sib")] {
+            assert_eq!(wd.state(), WdState::Deletable, "{name} finalized fully");
+        }
+        assert_eq!(rt.stats.tasks_outstanding.get(), 0);
+        assert!(rt.quiescent(), "poisoned graph drains to quiescence");
+        let errs = rt.task_errors().unwrap();
+        assert_eq!((errs.tasks_failed, errs.tasks_cancelled), (1, 3));
         clear_ctx();
     }
 

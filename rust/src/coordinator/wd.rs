@@ -6,6 +6,15 @@
 //! §3.1 trick: instead of a third message type for deletion, a state marks
 //! when the Done Task Message has been fully processed so the WD can be
 //! reclaimed safely.
+//!
+//! The failure-containment plane adds two terminal-outcome states between
+//! `Finished` and `DoneHandled`: a panicking body lands in **`Failed`**
+//! (instead of `Finished`), and a task poisoned by a failed predecessor is
+//! **`Cancelled`** (instead of `Ready`) — both then run the *normal*
+//! finalize path (`DoneHandled → Deletable`), so successor notification,
+//! `children_live` accounting and the taskwait wake edge never leak. The
+//! numbering keeps every dead task `is_finished()`: submitters must not
+//! chain new dependences on a corpse.
 
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Weak};
@@ -35,10 +44,17 @@ pub enum WdState {
     Running = 3,
     /// Step 5: body finished; successors not yet notified.
     Finished = 4,
+    /// Body panicked (caught at the execution boundary); successors not yet
+    /// notified. Finalizes normally, but poisons its dependents.
+    Failed = 5,
+    /// Poisoned by a failed/cancelled predecessor: the body never runs, the
+    /// task finalizes normally. Placed ≥ `Finished` so submitters treat it
+    /// as a completed predecessor.
+    Cancelled = 6,
     /// Done Task Message processed: successors notified, removed from graph.
-    DoneHandled = 5,
+    DoneHandled = 7,
     /// Step 6: no children alive either — safe to reclaim.
-    Deletable = 6,
+    Deletable = 8,
 }
 
 impl WdState {
@@ -49,8 +65,10 @@ impl WdState {
             2 => WdState::Ready,
             3 => WdState::Running,
             4 => WdState::Finished,
-            5 => WdState::DoneHandled,
-            6 => WdState::Deletable,
+            5 => WdState::Failed,
+            6 => WdState::Cancelled,
+            7 => WdState::DoneHandled,
+            8 => WdState::Deletable,
             _ => unreachable!("invalid WdState {v}"),
         }
     }
@@ -156,9 +174,20 @@ impl Wd {
 
     /// Has the body finished executing? Checked under the domain lock by
     /// the graph code to decide whether a would-be predecessor still counts.
+    /// `Failed` and `Cancelled` tasks count as finished: a dead task can
+    /// never run, so chaining a new dependence on it would wait forever.
     #[inline]
     pub fn is_finished(&self) -> bool {
         self.state.load(Ordering::Acquire) >= WdState::Finished as u8
+    }
+
+    /// Did this task die (panic or poison) rather than complete? Meaningful
+    /// from the moment of death until the finalizer advances the state to
+    /// `DoneHandled` — exactly the window in which the finalizer decides
+    /// whether the released successors must be poisoned.
+    #[inline]
+    pub fn is_poisoned(&self) -> bool {
+        matches!(self.state(), WdState::Failed | WdState::Cancelled)
     }
 
     /// Take the body for execution. Panics if taken twice — a task must run
@@ -168,6 +197,13 @@ impl Wd {
             .lock()
             .take()
             .unwrap_or_else(|| panic!("task {:?} body taken twice", self.id))
+    }
+
+    /// Drop the body without running it — a cancelled task releases its
+    /// captures (Arcs, buffers) at cancellation time instead of holding
+    /// them until the `Wd` itself is reclaimed. Idempotent.
+    pub fn drop_body(&self) {
+        drop(self.body.lock().take());
     }
 
     /// Add `n` pending predecessors. Called under the domain lock during
@@ -335,6 +371,36 @@ mod tests {
         wd.set_state(WdState::DoneHandled);
         assert!(wd.done_handled());
         wd.set_state(WdState::Deletable);
+    }
+
+    #[test]
+    fn failed_and_cancelled_are_finished_and_finalize_forward() {
+        // A panicked body: Running → Failed → DoneHandled → Deletable, and
+        // a poisoned dependent: Submitted → Cancelled → DoneHandled →
+        // Deletable. Both read as finished (submitters must skip corpses)
+        // and as poisoned until done-handled.
+        let failed = mk(10);
+        failed.set_state(WdState::Submitted);
+        failed.set_state(WdState::Ready);
+        failed.set_state(WdState::Running);
+        failed.set_state(WdState::Failed);
+        assert!(failed.is_finished());
+        assert!(failed.is_poisoned());
+        assert!(!failed.done_handled());
+        failed.set_state(WdState::DoneHandled);
+        assert!(failed.done_handled());
+        assert!(!failed.is_poisoned(), "poison window closes at DoneHandled");
+        failed.set_state(WdState::Deletable);
+
+        let cancelled = mk(11);
+        cancelled.set_state(WdState::Submitted);
+        cancelled.set_state(WdState::Cancelled);
+        assert!(cancelled.is_finished());
+        assert!(cancelled.is_poisoned());
+        cancelled.drop_body();
+        cancelled.drop_body(); // idempotent
+        cancelled.set_state(WdState::DoneHandled);
+        cancelled.set_state(WdState::Deletable);
     }
 
     #[test]

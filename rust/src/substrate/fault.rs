@@ -1,0 +1,221 @@
+//! Deterministic fault injection for the failure-containment plane.
+//!
+//! A [`FaultPlan`] is a seeded decision stream over **named sites** in the
+//! runtime: every place instrumented for injection asks
+//! [`FaultPlan::should_inject`] and gets a reproducible yes/no drawn from
+//! one shared xorshift64* stream ([`XorShift64::step`] on an atomic state
+//! word, so any thread may draw). The sites the runtime instruments:
+//!
+//! * [`FaultSite::TaskBody`] — the executing worker panics *inside* the
+//!   `catch_unwind` boundary instead of running the body, exercising the
+//!   Failed → poison → finalize path end to end;
+//! * [`FaultSite::WakeEdge`] — a ready-push / wake-edge wake is swallowed
+//!   (an unbounded delay), exercising the timed-park recheck cadence and
+//!   the hang watchdog's re-raise/wake self-heal;
+//! * [`FaultSite::DrainBatch`] — a manager defers a claimed worker's batch
+//!   drain to a later activation (the worker is re-raised, not lost),
+//!   exercising the no-lost-raise retry paths.
+//!
+//! Decisions are counted per site (`draws` / `injected`), so stress tests
+//! can assert that a scenario actually exercised the fault — a fault plan
+//! that never fires proves nothing. With a fixed seed and a
+//! single-threaded driver the decision sequence is bit-for-bit
+//! reproducible; under a multi-threaded pool the *stream* is still
+//! deterministic, only its interleaving across threads varies.
+//!
+//! The plan is intentionally dumb: it owns no clocks and spawns no
+//! threads. Delays are realized by the *caller* (skipping a wake, deferring
+//! a drain), so the injected behaviours stay inside the runtime's own
+//! recovery envelope instead of racing an external timer.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::substrate::stats::Counter;
+use crate::substrate::XorShift64;
+
+/// Named injection sites (indices into the per-site tables).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum FaultSite {
+    /// Panic instead of running a task body.
+    TaskBody = 0,
+    /// Swallow a ready-push / wake-edge wake.
+    WakeEdge = 1,
+    /// Defer a claimed worker's batch drain (worker re-raised).
+    DrainBatch = 2,
+}
+
+/// Number of named sites (table size).
+pub const NUM_FAULT_SITES: usize = 3;
+
+/// Rate denominator: rates are expressed out of `1 << 16`. A rate of
+/// [`FAULT_ALWAYS`] injects on every draw.
+pub const FAULT_ALWAYS: u32 = 1 << 16;
+
+/// A seeded, shareable fault-injection plan. See the module docs.
+pub struct FaultPlan {
+    /// Shared xorshift64* state; drawn via CAS so any thread can pull from
+    /// the one deterministic stream.
+    state: AtomicU64,
+    /// Per-site injection rate out of [`FAULT_ALWAYS`]. 0 = site disabled
+    /// (no draw, no counter traffic — the happy path stays one branch).
+    rates: [u32; NUM_FAULT_SITES],
+    /// Draws per site (only armed sites count).
+    draws: [Counter; NUM_FAULT_SITES],
+    /// Injections per site.
+    injected: [Counter; NUM_FAULT_SITES],
+}
+
+impl FaultPlan {
+    /// A plan with every site disabled. Arm sites with
+    /// [`FaultPlan::with_rate`].
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            state: AtomicU64::new(XorShift64::new(seed).state()),
+            rates: [0; NUM_FAULT_SITES],
+            draws: std::array::from_fn(|_| Counter::new()),
+            injected: std::array::from_fn(|_| Counter::new()),
+        }
+    }
+
+    /// Arm `site` at `rate` out of [`FAULT_ALWAYS`] (clamped).
+    pub fn with_rate(mut self, site: FaultSite, rate: u32) -> FaultPlan {
+        self.rates[site as usize] = rate.min(FAULT_ALWAYS);
+        self
+    }
+
+    /// Is `site` armed at all? One array load — cheap enough for hot paths
+    /// that want to skip building injection arguments.
+    #[inline]
+    pub fn armed(&self, site: FaultSite) -> bool {
+        self.rates[site as usize] > 0
+    }
+
+    /// Draw the next decision for `site`. Disabled sites return `false`
+    /// without touching the stream. The stream is shared across sites: for
+    /// a given seed, the whole-plan decision sequence is fixed by the
+    /// order in which armed sites are hit.
+    pub fn should_inject(&self, site: FaultSite) -> bool {
+        let rate = self.rates[site as usize];
+        if rate == 0 {
+            return false;
+        }
+        self.draws[site as usize].inc();
+        let hit = if rate >= FAULT_ALWAYS {
+            true
+        } else {
+            // One xorshift step, CAS-published so concurrent draws never
+            // reuse a state word; the high 16 bits are the uniform sample.
+            let mut cur = self.state.load(Ordering::Relaxed);
+            loop {
+                let (next, out) = XorShift64::step(cur);
+                match self.state.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break (out >> 48) < rate as u64,
+                    Err(observed) => cur = observed,
+                }
+            }
+        };
+        if hit {
+            self.injected[site as usize].inc();
+        }
+        hit
+    }
+
+    /// Draws taken at `site` (armed sites only).
+    pub fn draws(&self, site: FaultSite) -> u64 {
+        self.draws[site as usize].get()
+    }
+
+    /// Injections fired at `site`.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.injected[site as usize].get()
+    }
+
+    /// Total injections across all sites.
+    pub fn total_injected(&self) -> u64 {
+        self.injected.iter().map(Counter::get).sum()
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let draws: [u64; NUM_FAULT_SITES] = std::array::from_fn(|i| self.draws[i].get());
+        let injected: [u64; NUM_FAULT_SITES] = std::array::from_fn(|i| self.injected[i].get());
+        f.debug_struct("FaultPlan")
+            .field("rates", &self.rates)
+            .field("draws", &draws)
+            .field("injected", &injected)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sites_never_inject_or_draw() {
+        let plan = FaultPlan::new(7);
+        for _ in 0..1000 {
+            assert!(!plan.should_inject(FaultSite::TaskBody));
+            assert!(!plan.should_inject(FaultSite::WakeEdge));
+        }
+        assert_eq!(plan.draws(FaultSite::TaskBody), 0);
+        assert_eq!(plan.total_injected(), 0);
+        assert!(!plan.armed(FaultSite::TaskBody));
+    }
+
+    #[test]
+    fn always_rate_injects_every_draw() {
+        let plan = FaultPlan::new(7).with_rate(FaultSite::TaskBody, FAULT_ALWAYS);
+        assert!(plan.armed(FaultSite::TaskBody));
+        for _ in 0..100 {
+            assert!(plan.should_inject(FaultSite::TaskBody));
+        }
+        assert_eq!(plan.draws(FaultSite::TaskBody), 100);
+        assert_eq!(plan.injected(FaultSite::TaskBody), 100);
+    }
+
+    #[test]
+    fn same_seed_same_decision_sequence() {
+        let a = FaultPlan::new(42).with_rate(FaultSite::DrainBatch, FAULT_ALWAYS / 2);
+        let b = FaultPlan::new(42).with_rate(FaultSite::DrainBatch, FAULT_ALWAYS / 2);
+        let sa: Vec<bool> = (0..500).map(|_| a.should_inject(FaultSite::DrainBatch)).collect();
+        let sb: Vec<bool> = (0..500).map(|_| b.should_inject(FaultSite::DrainBatch)).collect();
+        assert_eq!(sa, sb);
+        assert!(sa.iter().any(|&x| x), "half rate fired at least once in 500");
+        assert!(sa.iter().any(|&x| !x), "half rate skipped at least once in 500");
+    }
+
+    #[test]
+    fn rate_roughly_respected() {
+        let plan = FaultPlan::new(3).with_rate(FaultSite::WakeEdge, FAULT_ALWAYS / 4);
+        let hits =
+            (0..10_000).filter(|_| plan.should_inject(FaultSite::WakeEdge)).count() as f64;
+        let frac = hits / 10_000.0;
+        assert!((0.2..0.3).contains(&frac), "frac={frac}");
+        assert_eq!(plan.draws(FaultSite::WakeEdge), 10_000);
+        assert_eq!(plan.injected(FaultSite::WakeEdge), hits as u64);
+    }
+
+    #[test]
+    fn concurrent_draws_never_lose_counts() {
+        let plan =
+            std::sync::Arc::new(FaultPlan::new(9).with_rate(FaultSite::TaskBody, FAULT_ALWAYS / 2));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = std::sync::Arc::clone(&plan);
+            handles.push(std::thread::spawn(move || {
+                (0..5_000).filter(|_| p.should_inject(FaultSite::TaskBody)).count() as u64
+            }));
+        }
+        let hits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(plan.draws(FaultSite::TaskBody), 20_000);
+        assert_eq!(plan.injected(FaultSite::TaskBody), hits);
+    }
+}

@@ -8,6 +8,7 @@
 //! discrete-event simulator and cheap atomic statistics.
 
 pub mod deque;
+pub mod fault;
 pub mod park;
 pub mod rcu;
 pub mod signal;
@@ -19,6 +20,7 @@ pub mod vtime;
 pub mod stats;
 
 pub use deque::{CachePadded, ShardedCounter, Steal, WsDeque};
+pub use fault::{FaultPlan, FaultSite, FAULT_ALWAYS};
 pub use park::Parker;
 pub use rcu::RcuCell;
 pub use region::{RegionKey, RegionSet};

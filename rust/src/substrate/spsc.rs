@@ -15,8 +15,31 @@
 //! atomic ops.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Segment-lock acquisitions that found the mutex poisoned and recovered
+/// (see [`lock_poison_recoveries`]).
+static LOCK_POISON_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+
+/// How many times any queue's segment lock was taken back from a poisoned
+/// state. The queue's invariants live in the atomic head/tail indices, not
+/// in the guarded segment list, so a panic that poisons the mutex (a worker
+/// dying mid-push during a failed run's teardown) leaves the data valid —
+/// refusing to shut down over it would turn one contained failure into a
+/// wedged process. Nonzero values are telemetry for such teardowns.
+pub fn lock_poison_recoveries() -> u64 {
+    LOCK_POISON_RECOVERIES.load(Ordering::Relaxed)
+}
+
+/// Take `m` even if poisoned, counting the recovery (teardown-after-failure
+/// graceful degradation — doc on [`lock_poison_recoveries`]).
+fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        LOCK_POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+        poisoned.into_inner()
+    })
+}
 
 /// Number of slots per segment. 256 slots keeps the segment under 4 KiB for
 /// pointer-sized payloads so producer/consumer touch disjoint cache lines
@@ -107,7 +130,7 @@ impl<T> SpscQueue<T> {
         let t = self.tail.load(Ordering::Relaxed);
         let seg_off = t % SEGMENT_LEN;
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock_recovering(&self.inner);
             // `base` is maintained under this same lock, so the producer's
             // segment arithmetic cannot race with segment retirement.
             let rel = (t - inner.base) / SEGMENT_LEN;
@@ -154,7 +177,7 @@ impl<T> SpscQueue<T> {
         let seg_off = h % SEGMENT_LEN;
         let value;
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock_recovering(&self.inner);
             debug_assert!(h >= inner.base && h < inner.base + SEGMENT_LEN);
             let seg = inner.segs.front_mut().unwrap();
             value = seg.slots[seg_off].take();

@@ -1,0 +1,300 @@
+//! Deterministic fault-injection suite for the failure-containment plane
+//! (EXPERIMENTS.md §Failure containment):
+//!
+//! * **TaskBody** faults — injected panics land tasks in `Failed`, poison
+//!   their dependents into `Cancelled`, and must never hang `taskwait`;
+//!   the accounting identity `executed + failed + cancelled == spawned`
+//!   holds on every exit path.
+//! * **WakeEdge** faults — swallowed wakes are an unbounded *delay*, not a
+//!   loss: an armed wake-edge site forces every park to be timed, so the
+//!   recheck cadence (plus the hang watchdog) redelivers what the fault
+//!   withheld.
+//! * **DrainBatch** faults — a manager that defers a worker's drain must
+//!   re-raise the worker, so the deferred batch is picked up by a later
+//!   sweep instead of rotting in a clean-directory queue.
+//! * **Shutdown under fire** — shutdown requested while waiters are parked
+//!   and panics are being injected must still join every thread and settle
+//!   all gauges, repeated across rounds to sweep the race window.
+//!
+//! Scenarios run across the `Ddast`, `CentralDast` and `GompLike`
+//! organizations; the plans are seeded, so each round's decision *stream*
+//! is reproducible (which worker observes a given decision still depends
+//! on scheduling, which is exactly the surface being stressed).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ddast::coordinator::{dep_out, DdastParams, DepMode, RuntimeKind, RuntimeShared, TaskSystem};
+use ddast::substrate::{FaultPlan, FaultSite, FAULT_ALWAYS};
+
+const KINDS: [RuntimeKind; 3] =
+    [RuntimeKind::Ddast, RuntimeKind::CentralDast, RuntimeKind::GompLike];
+
+/// A quarter of all task bodies panic (seeded stream), over eight inout
+/// chains: taskwait must still return, the failure must surface through
+/// `taskwait_checked`, and every spawned task must end in exactly one of
+/// executed / failed / cancelled.
+#[test]
+fn injected_panics_never_hang_taskwait() {
+    const TASKS: u64 = 300;
+    for kind in KINDS {
+        let plan =
+            Arc::new(FaultPlan::new(0xDEAD_0001).with_rate(FaultSite::TaskBody, FAULT_ALWAYS / 4));
+        let ts = TaskSystem::builder()
+            .kind(kind)
+            .num_threads(4)
+            .fault_plan(Arc::clone(&plan))
+            .build();
+        let rt = ts.runtime().clone();
+        for i in 0..TASKS {
+            // Eight independent chains: a failure mid-chain poisons the
+            // chain's tail, so cancellations are observed alongside panics.
+            ts.spawn(&[(i % 8, DepMode::Inout)], || {});
+        }
+        let errs = ts
+            .taskwait_checked()
+            .expect_err("a quarter of 300 bodies panicked; the run cannot be clean");
+        let executed = rt.stats.tasks_executed.get();
+        let failed = rt.stats.tasks_failed.get();
+        let cancelled = rt.stats.tasks_cancelled.get();
+        assert!(failed > 0, "kind={kind:?}: no injected panic landed");
+        assert!(cancelled > 0, "kind={kind:?}: no poisoned dependent observed");
+        assert_eq!(executed + failed + cancelled, TASKS, "kind={kind:?}: task leaked");
+        assert_eq!(failed, plan.injected(FaultSite::TaskBody), "kind={kind:?}");
+        assert_eq!(
+            plan.draws(FaultSite::TaskBody),
+            executed + failed,
+            "kind={kind:?}: cancelled bodies must never draw (they are dropped unrun)"
+        );
+        assert_eq!((errs.tasks_failed, errs.tasks_cancelled), (failed, cancelled));
+        let msg = errs.first_panic.expect("first panic recorded");
+        assert!(msg.contains("injected fault"), "kind={kind:?}: {msg}");
+        assert!(rt.quiescent(), "kind={kind:?}");
+        assert!(!rt.root.waiter_registered(), "kind={kind:?}: dangling registration");
+        // The error summary is sticky: shutdown reports the same failures.
+        let at_shutdown = ts.shutdown_checked().expect_err("sticky errors survive shutdown");
+        assert_eq!(at_shutdown.tasks_failed, failed, "kind={kind:?}");
+        assert!(rt.quiescent(), "kind={kind:?} after shutdown");
+    }
+}
+
+/// Single-worker poison determinism: the head of a dependence fan always
+/// panics (rate `FAULT_ALWAYS`), so exactly one task fails and exactly its
+/// three released readers are cancelled — same counts on every run, every
+/// organization.
+#[test]
+fn poison_cancels_dependents_deterministically() {
+    for kind in KINDS {
+        let plan =
+            Arc::new(FaultPlan::new(0xDEAD_0002).with_rate(FaultSite::TaskBody, FAULT_ALWAYS));
+        let ts = TaskSystem::builder()
+            .kind(kind)
+            .num_threads(1)
+            .fault_plan(Arc::clone(&plan))
+            .build();
+        let rt = ts.runtime().clone();
+        ts.spawn(&[(42, DepMode::Out)], || {});
+        for _ in 0..3 {
+            ts.spawn(&[(42, DepMode::In)], || {});
+        }
+        let errs = ts.taskwait_checked().expect_err("the head always panics");
+        assert_eq!(errs.tasks_failed, 1, "kind={kind:?}");
+        assert_eq!(errs.tasks_cancelled, 3, "kind={kind:?}");
+        assert_eq!(rt.stats.tasks_executed.get(), 0, "kind={kind:?}: no body may run");
+        assert_eq!(plan.draws(FaultSite::TaskBody), 1, "kind={kind:?}: only the head draws");
+        assert!(rt.quiescent(), "kind={kind:?}");
+        ts.shutdown();
+        assert!(rt.quiescent(), "kind={kind:?} after shutdown");
+    }
+}
+
+/// A plan with no armed site must be indistinguishable from no plan: no
+/// draws, no injections, a clean checked result — the overhead A/B in
+/// `bench_harness::contention` leans on exactly this inertness.
+#[test]
+fn disarmed_plan_is_inert() {
+    let plan = Arc::new(FaultPlan::new(0xDEAD_0003));
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(2)
+        .fault_plan(Arc::clone(&plan))
+        .build();
+    let hits = Arc::new(AtomicU64::new(0));
+    for i in 0..100u64 {
+        let h = Arc::clone(&hits);
+        ts.spawn(&[(i % 4, DepMode::Inout)], move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    ts.taskwait_checked().expect("a disarmed plan never fails a run");
+    assert_eq!(hits.load(Ordering::Relaxed), 100);
+    assert_eq!(plan.total_injected(), 0);
+    for site in [FaultSite::TaskBody, FaultSite::WakeEdge, FaultSite::DrainBatch] {
+        assert_eq!(plan.draws(site), 0, "disarmed site {site:?} must not even draw");
+    }
+    ts.shutdown_checked().expect("still clean at shutdown");
+}
+
+/// Every ready-task wake edge is swallowed (`FAULT_ALWAYS`): the runtime
+/// must degrade to bounded-latency delivery (armed wake-edge plans force
+/// timed parks), never to a hang — all bodies run, the run stays clean.
+#[test]
+fn swallowed_wake_edges_cannot_hang_the_runtime() {
+    for kind in KINDS {
+        let plan =
+            Arc::new(FaultPlan::new(0xDEAD_0004).with_rate(FaultSite::WakeEdge, FAULT_ALWAYS));
+        let ts = TaskSystem::builder()
+            .kind(kind)
+            .num_threads(3)
+            .fault_plan(Arc::clone(&plan))
+            .build();
+        let rt = ts.runtime().clone();
+        let hits = Arc::new(AtomicU64::new(0));
+        for i in 0..40u64 {
+            let h = Arc::clone(&hits);
+            // Sleepy bodies outlive the spin budgets, so idle workers park
+            // and depend on wakes the plan is swallowing.
+            ts.spawn(&[(i % 4, DepMode::Inout)], move || {
+                std::thread::sleep(Duration::from_micros(200));
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        ts.taskwait_checked().expect("wake faults delay work; they must not fail it");
+        assert_eq!(hits.load(Ordering::Relaxed), 40, "kind={kind:?}");
+        assert!(
+            plan.injected(FaultSite::WakeEdge) > 0,
+            "kind={kind:?}: the armed site never fired — nothing was stressed"
+        );
+        assert!(rt.quiescent(), "kind={kind:?}");
+        ts.shutdown();
+        assert!(rt.quiescent(), "kind={kind:?} after shutdown");
+    }
+}
+
+/// Stage the exact pathology the watchdog exists for — queued work, a
+/// swallowed raise (directory clean), a parked worker, stale progress —
+/// and verify one tick detects it, restores the raise, and stamps progress
+/// so it does not double-fire. The healed work then drains normally.
+#[test]
+fn watchdog_detects_and_heals_a_stalled_runtime() {
+    let rt = RuntimeShared::new(RuntimeKind::Ddast, 2, DdastParams::tuned(2), false, 42);
+    rt.register_ddast();
+    let root = Arc::clone(&rt.root);
+    // A queued Submit nobody is draining (no pool threads exist here; the
+    // test thread drives everything by hand).
+    rt.spawn_from(0, &root, vec![dep_out(7)], "stalled", Box::new(|| {}));
+    let signals = rt.queues.signals();
+    // Swallow the raise: the directory reads clean while the queue is not.
+    assert!(signals.try_claim(0), "spawn raised worker 0");
+    assert!(!signals.is_raised(0));
+    // Announce a parked worker on slot 1 (announce-only: the slot's owner
+    // thread never existed, so nothing blocks).
+    assert!(signals.begin_park(1));
+    assert!(!rt.watchdog_tick(), "progress is not stale yet — a fresh runtime never trips");
+    std::thread::sleep(Duration::from_millis(8)); // > WATCHDOG_DEADLINE (5ms)
+    assert!(rt.watchdog_tick(), "stale + parked + pending work is a stall");
+    assert_eq!(rt.stats.watchdog_recoveries.get(), 1);
+    assert!(signals.is_raised(0), "the heal restored the swallowed raise");
+    assert_eq!(signals.parked_count(), 0, "the heal woke the parked slot");
+    assert!(!rt.watchdog_tick(), "healing stamps progress; no double-fire");
+    assert_eq!(rt.stats.watchdog_recoveries.get(), 1);
+    // The re-raised work is reachable again: a normal drain finishes it.
+    rt.taskwait_on(0, &root);
+    assert_eq!(rt.stats.tasks_executed.get(), 1);
+    assert!(rt.quiescent());
+}
+
+/// Managers that defer a drain (`DrainBatch` at 50%) must leave the worker
+/// re-raised, so deferred batches complete on a later sweep: every body
+/// still runs, and the site's injection counter proves deferrals happened.
+/// (GompLike has no manager plane, so the site never draws there.)
+#[test]
+fn deferred_drains_still_complete() {
+    for kind in [RuntimeKind::Ddast, RuntimeKind::CentralDast] {
+        let plan = Arc::new(
+            FaultPlan::new(0xDEAD_0005).with_rate(FaultSite::DrainBatch, FAULT_ALWAYS / 2),
+        );
+        let ts = TaskSystem::builder()
+            .kind(kind)
+            .num_threads(2)
+            .fault_plan(Arc::clone(&plan))
+            .build();
+        let rt = ts.runtime().clone();
+        let hits = Arc::new(AtomicU64::new(0));
+        let mut expected = 0u64;
+        let mut rounds = 0u32;
+        loop {
+            rounds += 1;
+            for i in 0..50u64 {
+                let h = Arc::clone(&hits);
+                ts.spawn(&[(i % 4, DepMode::Inout)], move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            expected += 50;
+            ts.taskwait();
+            assert_eq!(hits.load(Ordering::Relaxed), expected, "kind={kind:?}");
+            assert!(rt.quiescent(), "kind={kind:?}");
+            if plan.injected(FaultSite::DrainBatch) > 0 || rounds >= 50 {
+                break;
+            }
+        }
+        assert!(
+            plan.injected(FaultSite::DrainBatch) > 0,
+            "kind={kind:?}: no drain was ever deferred within {rounds} rounds"
+        );
+        ts.shutdown();
+        assert!(rt.quiescent(), "kind={kind:?} after shutdown");
+    }
+}
+
+/// Shutdown racing a parked taskwait *while panics are being injected*:
+/// ten rounds per organization sweep the shutdown request across the
+/// park/finalize window. Every round must join the killer thread, drain
+/// through `shutdown`, and settle the accounting identity — injected
+/// failures change which bucket a task lands in, never whether it lands.
+#[test]
+fn shutdown_while_parked_under_injected_panics() {
+    const TASKS: u64 = 60;
+    for kind in KINDS {
+        for round in 0..10u64 {
+            let plan = Arc::new(
+                FaultPlan::new(0x0BAD_5EED ^ round)
+                    .with_rate(FaultSite::TaskBody, FAULT_ALWAYS / 3)
+                    .with_rate(FaultSite::WakeEdge, FAULT_ALWAYS / 6)
+                    .with_rate(FaultSite::DrainBatch, FAULT_ALWAYS / 6),
+            );
+            let ts = TaskSystem::builder().kind(kind).num_threads(3).fault_plan(plan).build();
+            let rt = ts.runtime().clone();
+            for i in 0..TASKS {
+                ts.spawn(&[(i % 6, DepMode::Inout)], || {
+                    std::thread::sleep(Duration::from_micros(100));
+                });
+            }
+            // All spawns are in before the race starts (spawning into a
+            // runtime that is shutting down is a caller error by contract).
+            let rt2 = rt.clone();
+            let killer = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(1 + round % 3));
+                rt2.request_shutdown();
+            });
+            ts.taskwait();
+            killer.join().expect("the shutdown requester must never die");
+            ts.shutdown();
+            let executed = rt.stats.tasks_executed.get();
+            let failed = rt.stats.tasks_failed.get();
+            let cancelled = rt.stats.tasks_cancelled.get();
+            assert_eq!(
+                executed + failed + cancelled,
+                TASKS,
+                "kind={kind:?} round={round}: task leaked through the shutdown race"
+            );
+            assert!(rt.quiescent(), "kind={kind:?} round={round}");
+            assert!(
+                !rt.root.waiter_registered(),
+                "kind={kind:?} round={round}: dangling taskwait registration"
+            );
+        }
+    }
+}

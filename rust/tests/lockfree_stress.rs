@@ -181,12 +181,19 @@ fn contention_ab_smoke_and_json() {
         budget_adapt.new.acquisitions
     );
 
+    // Containment overhead: an armed (zero-impact) fault harness must not
+    // change happy-path semantics — both sides complete every task.
+    let fault_overhead = contention::fault_overhead_ab(2_000);
+    assert_eq!(fault_overhead.old.acquisitions, 2_000);
+    assert_eq!(fault_overhead.new.acquisitions, 2_000);
+
     let json = contention::suite_to_json(
         &reports,
         &sweeps,
         &park_wake,
         &taskwait_park,
         &budget_adapt,
+        &fault_overhead,
         "cargo test contention_ab_smoke_and_json",
     );
     assert!(json.contains("\"contended_reduction\""));
@@ -195,6 +202,7 @@ fn contention_ab_smoke_and_json() {
     assert!(json.contains("\"park_wake\""));
     assert!(json.contains("\"taskwait_park\""));
     assert!(json.contains("\"budget_adapt\""));
+    assert!(json.contains("\"fault_overhead\""));
     let path = contention::default_json_path();
     if contention::write_suite_json(
         &path,
@@ -203,6 +211,7 @@ fn contention_ab_smoke_and_json() {
         &park_wake,
         &taskwait_park,
         &budget_adapt,
+        &fault_overhead,
         "cargo test contention_ab_smoke_and_json",
     ) {
         eprintln!("refreshed {}", path.display());
@@ -216,6 +225,7 @@ fn contention_ab_smoke_and_json() {
     eprintln!("{}", contention::render_park_wake(&park_wake));
     eprintln!("{}", contention::render_taskwait_park(&taskwait_park));
     eprintln!("{}", contention::render_budget_adapt(&budget_adapt));
+    eprintln!("{}", contention::render_fault_overhead(&fault_overhead));
 }
 
 /// Acceptance guard for the request-plane refactor: during a sparse-traffic
