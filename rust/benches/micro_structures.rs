@@ -49,6 +49,16 @@ fn main() {
     println!("\n== containment A/B: no fault plan vs armed harness ==\n");
     let fault_overhead = contention::fault_overhead_ab(50_000);
     print!("{}", contention::render_fault_overhead(&fault_overhead));
+    println!("\n== graph replay A/B: resolve every iteration vs record-once-replay-N ==\n");
+    let mut replay = None;
+    for threads in [2usize, 4, 8] {
+        let ab = contention::replay_ab(threads, 200);
+        print!("  {threads} threads: {}", contention::render_replay(&ab));
+        if threads == 4 {
+            replay = Some(ab); // representative mid-width pair for the JSON
+        }
+    }
+    let replay = replay.expect("thread sweep includes 4");
     println!();
     let path = contention::default_json_path();
     if contention::write_suite_json(
@@ -59,6 +69,7 @@ fn main() {
         &taskwait_park,
         &budget_adapt,
         &fault_overhead,
+        &replay,
         "cargo bench --bench micro_structures",
     ) {
         println!("wrote {}\n", path.display());

@@ -627,6 +627,103 @@ pub fn fault_overhead_ab(tasks: u64) -> AbReport {
     AbReport { old: drill(tasks, None), new: drill(tasks, Some(armed)) }
 }
 
+/// Record-once-replay-N drill: the same iterated submission stream — 8
+/// independent inout chains of 8 tasks (64 tasks/iteration) on the Ddast
+/// organization — run `iters` times fully resolved vs recorded once and
+/// replayed `iters` times through the frozen
+/// [`GraphRecording`](crate::coordinator::GraphRecording). The counters
+/// make the claim exact rather than statistical: the resolved side pays at
+/// least one dependence-shard acquisition per submit plus a Submit and a
+/// Done message per task per iteration; the replayed side's deltas across
+/// the measured loop are asserted to be *zero* shard acquisitions and zero
+/// graph submits, with manager-message totals frozen at the single
+/// recorded iteration's. `acquisitions` reports the dependence-shard
+/// acquisition delta across the measured iterations; `elapsed_ns` the
+/// makespan of those iterations.
+pub fn replay_ab(threads: usize, iters: u64) -> AbReport {
+    use crate::coordinator::api::TaskSystem;
+    use crate::coordinator::dep::dep_inout;
+    use crate::coordinator::pool::RuntimeKind;
+    use crate::coordinator::replay::{ReplayOutcome, ReplayTask};
+
+    const CHAINS: u64 = 8;
+    const LEN: u64 = 8;
+    const TASKS: u64 = CHAINS * LEN;
+
+    // One iteration's submission stream: round-robin across the chains so
+    // consecutive stream positions hit different regions (the resolved
+    // side's shard traffic is spread, not pathological).
+    fn mk_tasks() -> Vec<ReplayTask> {
+        (0..LEN)
+            .flat_map(|_| 0..CHAINS)
+            .map(|c| ReplayTask::new(vec![dep_inout(7_000_000 + c)], "replay-drill", || {}))
+            .collect()
+    }
+
+    // Old side: resolve every iteration through the dependence domain.
+    let old = {
+        let ts = TaskSystem::builder()
+            .kind(RuntimeKind::Ddast)
+            .num_threads(threads)
+            .seed(31)
+            .build();
+        let rt = Arc::clone(ts.runtime());
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let rec = ts.record_iteration(mk_tasks());
+            assert!(rec.is_none(), "recording must stay off on the resolved side");
+        }
+        let elapsed_ns = t0.elapsed().as_nanos() as u64;
+        let domain =
+            rt.root.child_domain_opt().expect("resolved iterations create the root domain");
+        let acq = domain.lock_stats().0;
+        assert_eq!(rt.stats.graph_submits.get(), TASKS * iters, "every task resolved");
+        assert!(acq >= TASKS * iters, "at least one shard acquisition per submit");
+        ts.shutdown();
+        assert_eq!(rt.stats.mgr_msgs.get(), 2 * TASKS * iters, "Submit + Done per task");
+        SideReport { acquisitions: acq, elapsed_ns, ..SideReport::default() }
+    };
+
+    // New side: record iteration 0, replay the measured `iters`.
+    let new = {
+        let ts = TaskSystem::builder()
+            .kind(RuntimeKind::Ddast)
+            .num_threads(threads)
+            .seed(31)
+            .record_graphs(true)
+            .build();
+        let rt = Arc::clone(ts.runtime());
+        let rec = ts.record_iteration(mk_tasks()).expect("record_graphs captures iteration 0");
+        let domain =
+            rt.root.child_domain_opt().expect("the recorded iteration resolves normally");
+        let acq0 = domain.lock_stats().0;
+        let submits0 = rt.stats.graph_submits.get();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            assert_eq!(ts.replay(&rec, mk_tasks()), ReplayOutcome::Replayed);
+        }
+        let elapsed_ns = t0.elapsed().as_nanos() as u64;
+        let acq_delta = domain.lock_stats().0 - acq0;
+        assert_eq!(acq_delta, 0, "replay must never touch a dependence shard");
+        assert_eq!(
+            rt.stats.graph_submits.get(),
+            submits0,
+            "replay must never submit to the graph"
+        );
+        assert_eq!(rt.stats.replay_hits.get(), iters, "every measured iteration replayed");
+        ts.shutdown();
+        assert_eq!(rt.stats.tasks_executed.get(), TASKS * (iters + 1), "no task lost");
+        assert_eq!(
+            rt.stats.mgr_msgs.get(),
+            2 * TASKS,
+            "only the recorded iteration pays manager messages"
+        );
+        SideReport { acquisitions: acq_delta, elapsed_ns, ..SideReport::default() }
+    };
+
+    AbReport { old, new }
+}
+
 /// Drain one worker's queue pair (both sweep variants must do identical
 /// per-worker work or the A/B acquisition counts stop being comparable).
 fn drain_pair(qs: &QueueSystem, worker: usize) -> u64 {
@@ -780,8 +877,9 @@ fn sweep_json_inline(s: &SweepReport) -> String {
 /// Serialize the full suite: per-thread-count reports (each carrying the
 /// `batch_submit` drill), the sparse-traffic sweep series, the
 /// park-vs-sleep wake-latency pair, the taskwait-wake pair, the
-/// adaptive-batch-budget pair and the failure-containment overhead pair —
-/// the shape `BENCH_contention.json` carries.
+/// adaptive-batch-budget pair, the failure-containment overhead pair and
+/// the record/replay pair — the shape `BENCH_contention.json` carries.
+#[allow(clippy::too_many_arguments)]
 pub fn suite_to_json(
     reports: &[ContentionReport],
     sweeps: &[SweepReport],
@@ -789,6 +887,7 @@ pub fn suite_to_json(
     taskwait_park: &AbReport,
     budget_adapt: &AbReport,
     fault_overhead: &AbReport,
+    replay: &AbReport,
     generated_by: &str,
 ) -> String {
     let reports_json: Vec<String> =
@@ -799,14 +898,15 @@ pub fn suite_to_json(
         "{{\n  \"generated_by\": \"{}\",\n  \"reports\": [\n{}\n  ],\n  \
          \"signal_sweep\": [\n{}\n  ],\n  \"park_wake\": {},\n  \
          \"taskwait_park\": {},\n  \"budget_adapt\": {},\n  \
-         \"fault_overhead\": {}\n}}\n",
+         \"fault_overhead\": {},\n  \"replay\": {}\n}}\n",
         generated_by,
         reports_json.join(",\n"),
         sweeps_json.join(",\n"),
         ab_json(park_wake),
         ab_json(taskwait_park),
         ab_json(budget_adapt),
-        ab_json(fault_overhead)
+        ab_json(fault_overhead),
+        ab_json(replay)
     )
 }
 
@@ -914,6 +1014,18 @@ pub fn render_fault_overhead(ab: &AbReport) -> String {
     )
 }
 
+/// Human-readable line for the record/replay drill.
+pub fn render_replay(ab: &AbReport) -> String {
+    format!(
+        "graph replay — resolve-every-iteration: {} shard acquisitions, {:.2} ms vs \
+         record-once-replay-N: {} acquisitions, {:.2} ms\n",
+        ab.old.acquisitions,
+        ab.old.elapsed_ns as f64 / 1e6,
+        ab.new.acquisitions,
+        ab.new.elapsed_ns as f64 / 1e6
+    )
+}
+
 fn fmt_reduction(x: f64) -> String {
     if x.is_finite() {
         format!("{x:.1}x")
@@ -944,6 +1056,7 @@ pub fn default_json_path() -> std::path::PathBuf {
 
 /// Write the suite to `path` (best-effort; benches must not fail the run
 /// over a read-only checkout).
+#[allow(clippy::too_many_arguments)]
 pub fn write_suite_json(
     path: &std::path::Path,
     reports: &[ContentionReport],
@@ -952,6 +1065,7 @@ pub fn write_suite_json(
     taskwait_park: &AbReport,
     budget_adapt: &AbReport,
     fault_overhead: &AbReport,
+    replay: &AbReport,
     generated_by: &str,
 ) -> bool {
     std::fs::write(
@@ -963,6 +1077,7 @@ pub fn write_suite_json(
             taskwait_park,
             budget_adapt,
             fault_overhead,
+            replay,
             generated_by,
         ),
     )
@@ -1013,7 +1128,8 @@ mod tests {
         let tw = taskwait_park_ab(10);
         let ba = budget_adapt_ab(256);
         let fo = fault_overhead_ab(64);
-        let j = suite_to_json(&reports, &sweeps, &pw, &tw, &ba, &fo, "unit test");
+        let rp = replay_ab(2, 3);
+        let j = suite_to_json(&reports, &sweeps, &pw, &tw, &ba, &fo, &rp, "unit test");
         for key in [
             "\"reports\"",
             "\"signal_sweep\"",
@@ -1021,6 +1137,7 @@ mod tests {
             "\"taskwait_park\"",
             "\"budget_adapt\"",
             "\"fault_overhead\"",
+            "\"replay\"",
             "\"workers\": 32",
             "\"threads\": 2",
         ] {
@@ -1031,6 +1148,22 @@ mod tests {
         assert!(render_taskwait_park(&tw).contains("child-completion"));
         assert!(render_budget_adapt(&ba).contains("token grabs"));
         assert!(render_fault_overhead(&fo).contains("happy-path tasks"));
+        assert!(render_replay(&rp).contains("record-once-replay-N"));
+    }
+
+    #[test]
+    fn replay_drill_zero_acquisitions() {
+        // The drill body already asserts the acceptance counters inline
+        // (zero shard acquisitions, zero graph submits, manager messages
+        // frozen at the recorded iteration); this pins the reported deltas.
+        let iters = 4u64;
+        let ab = replay_ab(2, iters);
+        assert_eq!(ab.new.acquisitions, 0, "replayed iterations take no shard locks");
+        assert!(
+            ab.old.acquisitions >= 64 * iters,
+            "resolved side pays >= 1 acquisition per task: {}",
+            ab.old.acquisitions
+        );
     }
 
     #[test]

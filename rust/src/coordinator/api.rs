@@ -21,7 +21,8 @@ use crate::coordinator::dep::{DepMode, Dependence};
 use crate::coordinator::pool::{
     clear_ctx, current_ctx, install_ctx, RuntimeKind, RuntimeShared, TaskErrors,
 };
-use crate::coordinator::wd::Wd;
+use crate::coordinator::replay::{self, GraphRecording, ReplayOutcome, ReplayRun, ReplayTask};
+use crate::coordinator::wd::{TaskBody, Wd};
 use crate::substrate::{FaultPlan, RegionKey};
 
 /// Builder for [`TaskSystem`].
@@ -36,6 +37,7 @@ pub struct TaskSystemBuilder {
     ranged: bool,
     seed: u64,
     fault_plan: Option<Arc<FaultPlan>>,
+    record_graphs: bool,
 }
 
 impl Default for TaskSystemBuilder {
@@ -51,6 +53,7 @@ impl Default for TaskSystemBuilder {
             ranged: false,
             seed: 0xDDA57,
             fault_plan: None,
+            record_graphs: false,
         }
     }
 }
@@ -123,6 +126,17 @@ impl TaskSystemBuilder {
         self
     }
 
+    /// Enable the record/replay plane:
+    /// [`TaskSystem::record_iteration`] then captures a [`GraphRecording`]
+    /// of each iteration's resolved dependence graph, which
+    /// [`TaskSystem::replay`] re-executes with zero dependence resolution.
+    /// Off (the default), both degrade to plain resolved execution and the
+    /// edge-capture hook stays a never-taken non-atomic branch.
+    pub fn record_graphs(mut self, on: bool) -> Self {
+        self.record_graphs = on;
+        self
+    }
+
     pub fn build(self) -> TaskSystem {
         let params = self.params.unwrap_or_else(|| DdastParams::tuned(self.num_threads));
         let rt = RuntimeShared::new_with_options(
@@ -171,7 +185,15 @@ impl TaskSystemBuilder {
                     .expect("spawn dast manager"),
             );
         }
-        TaskSystem { inner: Arc::new(Inner { rt, threads: Mutex::new(threads), autotuner }) }
+        TaskSystem {
+            inner: Arc::new(Inner {
+                rt,
+                threads: Mutex::new(threads),
+                autotuner,
+                record_graphs: self.record_graphs,
+                replay_cache: Mutex::new(None),
+            }),
+        }
     }
 }
 
@@ -179,6 +201,13 @@ struct Inner {
     rt: Arc<RuntimeShared>,
     threads: Mutex<Vec<JoinHandle<()>>>,
     autotuner: Option<Arc<crate::coordinator::autotune::AutoTuner>>,
+    /// Record/replay plane enabled (TaskSystemBuilder::record_graphs).
+    record_graphs: bool,
+    /// The arena run bound to the recording replayed last — reused while
+    /// the caller keeps replaying the same recording, rebuilt (and
+    /// re-installed into the runtime's RCU slot) when a different one
+    /// arrives.
+    replay_cache: Mutex<Option<Arc<ReplayRun>>>,
 }
 
 /// Handle to a running task system. Cloneable; capture clones inside task
@@ -255,6 +284,82 @@ impl TaskSystem {
             None => Ok(()),
             Some(e) => Err(e),
         }
+    }
+
+    // ---- record/replay plane (EXPERIMENTS.md §Graph replay) --------------
+
+    /// Run one iteration's `tasks` to completion through full dependence
+    /// resolution, capturing a [`GraphRecording`] of the resolved graph
+    /// when [`TaskSystemBuilder::record_graphs`] is on (`None` otherwise —
+    /// recording off degrades to plain resolved execution). The capture is
+    /// synthetic (a sequential pass over the submission stream against a
+    /// throwaway recording domain), so the recorded edge set is the full
+    /// program-order one regardless of how the live run interleaves.
+    pub fn record_iteration(&self, tasks: Vec<ReplayTask>) -> Option<Arc<GraphRecording>> {
+        if !self.inner.record_graphs {
+            self.run_tasks_resolved(tasks);
+            return None;
+        }
+        let rec = replay::capture(&tasks, self.inner.rt.ranged_deps);
+        self.run_tasks_resolved(tasks);
+        self.inner.rt.stats.recordings_captured.inc();
+        Some(rec)
+    }
+
+    /// Re-execute a recorded iteration with **zero dependence resolution**:
+    /// no `DepDomain` shard acquisitions, no Submit/Done messages through
+    /// the request plane, no per-iteration descriptor allocation — the
+    /// pre-sized arena is recycled and completion counts down the recorded
+    /// in-degrees directly. If `tasks`' submission stream hashes
+    /// differently from the recording (structure changed), the iteration
+    /// transparently falls back to full resolution.
+    ///
+    /// Must be driven from outside task bodies (it waits on the root, like
+    /// the iteration drivers), and by one driver at a time — two concurrent
+    /// `replay` calls would both wait on the root and race the arena
+    /// install. Bodies may still spawn nested tasks, which resolve
+    /// normally, provided they `taskwait` their children before returning.
+    pub fn replay(&self, rec: &Arc<GraphRecording>, tasks: Vec<ReplayTask>) -> ReplayOutcome {
+        let rt = &self.inner.rt;
+        if replay::stream_hash_of(&tasks) != rec.stream_hash() {
+            rt.stats.replay_fallbacks.inc();
+            self.run_tasks_resolved(tasks);
+            return ReplayOutcome::FellBack;
+        }
+        let run = {
+            let mut cache = self
+                .inner
+                .replay_cache
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            match cache.as_ref() {
+                Some(run) if Arc::ptr_eq(&run.rec, rec) => Arc::clone(run),
+                _ => {
+                    let run = ReplayRun::new(rt, Arc::clone(rec));
+                    rt.replay_install(Arc::clone(&run));
+                    *cache = Some(Arc::clone(&run));
+                    run
+                }
+            }
+        };
+        let bodies: Vec<TaskBody> = tasks.into_iter().map(|t| t.body).collect();
+        let (rt, worker, parent) = self.ctx();
+        assert!(
+            Arc::ptr_eq(&parent, &rt.root),
+            "replay must be driven from outside task bodies"
+        );
+        replay::run_iteration(&rt, &run, worker, bodies);
+        ReplayOutcome::Replayed
+    }
+
+    /// Fallback/off-mode iteration: spawn every task from the root and
+    /// wait. (Direct `spawn_from` — the bodies are already boxed.)
+    fn run_tasks_resolved(&self, tasks: Vec<ReplayTask>) {
+        let (rt, worker, parent) = self.ctx();
+        for t in tasks {
+            rt.spawn_from(worker, &parent, t.deps, t.label, t.body);
+        }
+        rt.taskwait_on(worker, &parent);
     }
 
     /// Resolve the calling thread's context; threads outside the pool act

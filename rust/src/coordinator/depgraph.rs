@@ -39,6 +39,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::coordinator::replay::EdgeRecorder;
 use crate::coordinator::wd::Wd;
 use crate::substrate::{CachePadded, Counter, RegionKey, SpinLock, SpinLockGuard};
 
@@ -85,6 +86,12 @@ pub struct DepDomain {
     /// finish must now track the task's own dependence count, not the
     /// domain's total region count — guarded by tests and the bench).
     finish_visits: Counter,
+    /// Edge-capture hook for the record/replay plane. Only the throwaway
+    /// capture domains built by `replay::capture` carry a recorder; it is
+    /// fixed at construction, so when recording is off the per-edge cost
+    /// is one branch on a plain (non-atomic) `Option` — provably
+    /// zero-atomic.
+    recorder: Option<Arc<EdgeRecorder>>,
 }
 
 impl Default for DepDomain {
@@ -111,6 +118,7 @@ impl DepDomain {
             use_ranges: false,
             tasks_in_graph: Counter::new(),
             finish_visits: Counter::new(),
+            recorder: None,
         }
     }
 
@@ -123,7 +131,25 @@ impl DepDomain {
             use_ranges: true,
             tasks_in_graph: Counter::new(),
             finish_visits: Counter::new(),
+            recorder: None,
         }
+    }
+
+    /// A capture domain for the record/replay plane: every dependence edge
+    /// appended during submission is mirrored into `recorder` (under the
+    /// same shard lock that guards the append). Not reachable from any
+    /// public constructor — production domains always run with recording
+    /// off.
+    pub(crate) fn new_recording(recorder: Arc<EdgeRecorder>, ranged: bool) -> Self {
+        let mut domain = if ranged { Self::new_ranged() } else { Self::new() };
+        domain.recorder = Some(recorder);
+        domain
+    }
+
+    /// Is the edge-capture hook armed? (False on every public constructor.)
+    #[inline]
+    pub fn recording(&self) -> bool {
+        self.recorder.is_some()
     }
 
     /// Number of lock shards (diagnostics / A-B bench).
@@ -198,9 +224,10 @@ impl DepDomain {
     /// predecessors). The caller is responsible for scheduling it then.
     pub fn submit(&self, task: &Arc<Wd>) -> bool {
         {
+            let rec = self.recorder.as_deref();
             if self.use_ranges {
                 let mut stripe = self.stripes[0].lock();
-                Self::submit_ranged(&mut stripe, task);
+                Self::submit_ranged(&mut stripe, task, rec);
             } else {
                 let mut guards = self.lock_shards(&task.deps);
                 for dep in &task.deps {
@@ -209,6 +236,7 @@ impl DepDomain {
                         guards[i].as_mut().expect("dep's shard locked"),
                         task,
                         dep,
+                        rec,
                     );
                 }
             }
@@ -245,10 +273,11 @@ impl DepDomain {
             return;
         }
         {
+            let rec = self.recorder.as_deref();
             if self.use_ranges {
                 let mut stripe = self.stripes[0].lock();
                 for task in tasks {
-                    Self::submit_ranged(&mut stripe, task);
+                    Self::submit_ranged(&mut stripe, task, rec);
                 }
             } else {
                 let mut mask = 0u64;
@@ -265,6 +294,7 @@ impl DepDomain {
                             guards[i].as_mut().expect("dep's shard locked"),
                             task,
                             dep,
+                            rec,
                         );
                     }
                 }
@@ -278,11 +308,14 @@ impl DepDomain {
         }
     }
 
-    /// Process one dependence against its (locked) shard.
+    /// Process one dependence against its (locked) shard. `rec` mirrors
+    /// every appended edge for the record/replay plane (armed only on
+    /// capture domains — `None` elsewhere, one never-taken branch per site).
     fn submit_exact_dep(
         stripe: &mut Stripe,
         task: &Arc<Wd>,
         dep: &crate::coordinator::dep::Dependence,
+        rec: Option<&EdgeRecorder>,
     ) {
         let entry = stripe.entries.entry(dep.region.base).or_default();
         let mode = dep.mode;
@@ -292,6 +325,9 @@ impl DepDomain {
                 if !w.is_finished() && w.id != task.id {
                     w.successors.lock().push(Arc::clone(task));
                     task.add_preds(1);
+                    if let Some(rec) = rec {
+                        rec.edge(w.id, task.id);
+                    }
                 }
             }
         }
@@ -301,6 +337,9 @@ impl DepDomain {
                 if !r.is_finished() && r.id != task.id {
                     r.successors.lock().push(Arc::clone(task));
                     task.add_preds(1);
+                    if let Some(rec) = rec {
+                        rec.edge(r.id, task.id);
+                    }
                 }
             }
             // WAW on the last unfinished writer (only needed when
@@ -312,6 +351,9 @@ impl DepDomain {
                     if !w.is_finished() && w.id != task.id {
                         w.successors.lock().push(Arc::clone(task));
                         task.add_preds(1);
+                        if let Some(rec) = rec {
+                            rec.edge(w.id, task.id);
+                        }
                     }
                 }
             }
@@ -327,7 +369,7 @@ impl DepDomain {
     /// orders after every unfinished prior accessor whose region overlaps
     /// conflictingly. Self-registration is on the task's exact region; the
     /// scan matches by overlap.
-    fn submit_ranged(stripe: &mut Stripe, task: &Arc<Wd>) {
+    fn submit_ranged(stripe: &mut Stripe, task: &Arc<Wd>, rec: Option<&EdgeRecorder>) {
         for dep in &task.deps {
             let mode = dep.mode;
             for (region, entry) in stripe.ranged.iter() {
@@ -339,6 +381,9 @@ impl DepDomain {
                     if !w.is_finished() && w.id != task.id {
                         w.successors.lock().push(Arc::clone(task));
                         task.add_preds(1);
+                        if let Some(rec) = rec {
+                            rec.edge(w.id, task.id);
+                        }
                     }
                 }
                 // WAR: a writer orders after overlapping readers.
@@ -347,6 +392,9 @@ impl DepDomain {
                         if !r.is_finished() && r.id != task.id {
                             r.successors.lock().push(Arc::clone(task));
                             task.add_preds(1);
+                            if let Some(rec) = rec {
+                                rec.edge(r.id, task.id);
+                            }
                         }
                     }
                 }

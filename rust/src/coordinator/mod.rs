@@ -14,6 +14,7 @@ pub mod dispatcher;
 pub mod messages;
 pub mod pool;
 pub mod ready;
+pub mod replay;
 pub mod trace;
 pub mod wd;
 
@@ -26,5 +27,6 @@ pub use dispatcher::{Dispatcher, LockedDispatcher};
 pub use messages::{MsgBatch, QueueSystem};
 pub use pool::{RuntimeKind, RuntimeShared, TaskErrors};
 pub use ready::{LockedReadyPools, PoolContention, ReadyPools};
+pub use replay::{GraphRecording, ReplayOutcome, ReplayTask};
 pub use trace::{LockedTracer, ThreadState, TraceEvent, TraceKind, Tracer};
 pub use wd::{TaskId, Wd, WdState};

@@ -30,9 +30,10 @@ use crate::coordinator::dep::Dependence;
 use crate::coordinator::dispatcher::Dispatcher;
 use crate::coordinator::messages::{DoneTaskMsg, MsgBatch, QueueSystem};
 use crate::coordinator::ready::ReadyPools;
+use crate::coordinator::replay::ReplayRun;
 use crate::coordinator::trace::{ThreadState, TraceKind, Tracer};
 use crate::coordinator::wd::{TaskBody, TaskId, Wd, WdState};
-use crate::substrate::{Counter, FaultPlan, FaultSite, SpinLock};
+use crate::substrate::{Counter, FaultPlan, FaultSite, RcuCell, SpinLock};
 
 /// Which runtime organization to run (paper §6.1's compared runtimes, plus
 /// the authors' earlier centralized design [7] for lineage comparison).
@@ -94,6 +95,14 @@ pub struct RtStats {
     /// Teardown paths that degraded gracefully instead of asserting (e.g. a
     /// parent `Wd` already reclaimed while a poisoned run shuts down).
     pub teardown_degradations: Counter,
+    /// Iterations executed through the replay plane (recorded graph, zero
+    /// dependence resolution — EXPERIMENTS.md §Graph replay).
+    pub replay_hits: Counter,
+    /// Replay requests whose submission-stream hash mismatched the
+    /// recording, transparently executed through full resolution instead.
+    pub replay_fallbacks: Counter,
+    /// Graph recordings captured in record mode.
+    pub recordings_captured: Counter,
 }
 
 /// Failure summary of a run — the payload of the non-breaking checked APIs
@@ -202,6 +211,13 @@ pub struct RuntimeShared {
     watchdog: Watchdog,
     shutdown: AtomicBool,
     next_task_id: AtomicU64,
+    /// The installed replay run, if any (record/replay plane). RCU snapshot:
+    /// `run_task` reads it once per task (one Acquire load) to recognize
+    /// arena descriptors, which finalize in place instead of going through
+    /// the graph or the request plane. Installed once per recording — not
+    /// per iteration — so the cell's retire list stays bounded by the
+    /// number of distinct recordings replayed.
+    replay: RcuCell<Option<Arc<ReplayRun>>>,
 }
 
 impl RuntimeShared {
@@ -277,6 +293,7 @@ impl RuntimeShared {
             watchdog: Watchdog::new(),
             shutdown: AtomicBool::new(false),
             next_task_id: AtomicU64::new(1),
+            replay: RcuCell::new(None),
         })
     }
 
@@ -323,6 +340,19 @@ impl RuntimeShared {
     #[inline]
     pub fn fresh_task_id(&self) -> TaskId {
         TaskId(self.next_task_id.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Reserve `n` consecutive task ids and return the first. The replay
+    /// arena claims its block up front so arena membership is a single
+    /// range check in `run_task`.
+    #[inline]
+    pub(crate) fn reserve_task_ids(&self, n: u64) -> u64 {
+        self.next_task_id.fetch_add(n, Ordering::Relaxed)
+    }
+
+    /// Install `run` as the active replay run (replacing any previous one).
+    pub(crate) fn replay_install(&self, run: Arc<ReplayRun>) {
+        self.replay.update(|_| (Some(Arc::clone(&run)), ()));
     }
 
     #[inline]
@@ -493,7 +523,7 @@ impl RuntimeShared {
     /// wake (an unbounded delay) — the timed-park recheck cadence and the
     /// hang watchdog must then deliver the work anyway.
     #[inline]
-    fn wake_for_ready(&self, n: usize) {
+    pub(crate) fn wake_for_ready(&self, n: usize) {
         if self.fault_inject(FaultSite::WakeEdge) {
             return;
         }
@@ -757,11 +787,99 @@ impl RuntimeShared {
             t.record(worker, TraceKind::State { worker, state: ThreadState::Idle, label: "" });
         }
         self.watchdog.note_progress();
+        // Replay plane: arena descriptors bypass the graph *and* the
+        // request plane for every organization — their successors are
+        // recorded, so the countdown finalize runs right here on the
+        // executing worker (no Done message, no shard acquisition). Cost
+        // when no run is installed: one RCU load and a `None` branch.
+        if let Some(run) = self.replay.read() {
+            if run.owns(task.id) {
+                self.replay_finalize(worker, &task, run);
+                self.trace_gauges(worker);
+                return;
+            }
+        }
         match self.kind {
             RuntimeKind::Sync | RuntimeKind::GompLike => self.finalize_task(worker, &task),
             RuntimeKind::Ddast | RuntimeKind::CentralDast => self.queues.push_done(worker, task),
         }
         self.trace_gauges(worker);
+    }
+
+    /// Replay-plane finalize: like
+    /// [`finalize_task`](RuntimeShared::finalize_task), but successors come
+    /// from the recorded graph instead of a `DepDomain::finish`, and the
+    /// countdown is each successor's recycled `preds` counter. Poison
+    /// propagation walks the same local worklist: a failed replay task
+    /// cancels exactly the successor cone the recording captured.
+    fn replay_finalize(&self, worker: usize, task: &Arc<Wd>, run: &Arc<ReplayRun>) {
+        let mut poisoned: Vec<Arc<Wd>> = Vec::new();
+        self.replay_finalize_one(worker, task, run, &mut poisoned);
+        while let Some(dead) = poisoned.pop() {
+            self.replay_finalize_one(worker, &dead, run, &mut poisoned);
+        }
+    }
+
+    fn replay_finalize_one(
+        &self,
+        worker: usize,
+        task: &Arc<Wd>,
+        run: &Arc<ReplayRun>,
+        poisoned: &mut Vec<Arc<Wd>>,
+    ) {
+        let idx = run.index_of(task.id);
+        // Recorded-successor countdown — the replay analogue of
+        // `DepDomain::finish`, with zero shard traffic. Multi-edges were
+        // recorded once per pending-predecessor increment, so releasing
+        // once per recorded edge balances exactly.
+        let mut ready: Vec<Arc<Wd>> = Vec::new();
+        for &s in run.rec.succs(idx) {
+            let succ = &run.arena[s as usize];
+            if succ.release_pred() {
+                ready.push(Arc::clone(succ));
+            }
+        }
+        if task.is_poisoned() {
+            for t in &ready {
+                t.set_state(WdState::Cancelled);
+                t.drop_body();
+                self.stats.tasks_cancelled.inc();
+            }
+            poisoned.extend(ready);
+        } else {
+            for t in &ready {
+                t.set_state(WdState::Ready);
+            }
+            let released = ready.len();
+            if released > 0 {
+                self.ready.push_batch(worker, ready);
+                self.wake_for_ready(released);
+            }
+        }
+        // Same deletion-state protocol and parent accounting as
+        // `finalize_one`; the parent of every arena task is the root, which
+        // outlives the runtime, so the teardown degradation arm is
+        // defensive only.
+        task.set_state(WdState::DoneHandled);
+        if task.children_live() == 0 {
+            task.set_state(WdState::Deletable);
+        }
+        self.stats.tasks_outstanding.dec();
+        let Some(parent) = task.parent.upgrade() else {
+            self.stats.teardown_degradations.inc();
+            return;
+        };
+        if parent.child_done() {
+            if let Some(w) = parent.take_waiter() {
+                self.stats.taskwait_wake_edges.inc();
+                if !self.fault_inject(FaultSite::WakeEdge) {
+                    self.queues.signals().wake_worker(w);
+                }
+            }
+            if parent.done_handled() {
+                parent.set_state(WdState::Deletable);
+            }
+        }
     }
 
     /// Record the first caught task panic for [`TaskErrors::first_panic`].

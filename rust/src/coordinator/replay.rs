@@ -1,0 +1,395 @@
+//! Graph memoization + replay (EXPERIMENTS.md §Graph replay).
+//!
+//! Iterative workloads (Matmul tiles, N-Body steps, SparseLU sweeps)
+//! resubmit a *structurally identical* task graph every iteration, and pay
+//! full dependence resolution — shard acquisitions, Submit/Done messages,
+//! per-iteration graph insertion — for the same answer each time. This
+//! module deletes that hot path for the repeat case, following the
+//! Taskgraph framework (Yu et al. 2022, PAPERS.md): resolve the graph
+//! **once**, freeze the result, and re-execute later iterations through
+//! per-task atomic in-degree countdowns with direct ready-deque refills.
+//!
+//! * **Record** ([`capture`]) replays the submission stream through a
+//!   throwaway [`DepDomain`] carrying an [`EdgeRecorder`] — sequentially,
+//!   in program order, with nothing executing — and freezes the recorded
+//!   edge multiset, per-task successor lists, initial in-degrees and the
+//!   ready seed order into an immutable [`GraphRecording`]. Because no
+//!   task finishes during capture, the edge set is the *maximal*
+//!   (program-order) one: a superset of what any live resolved run could
+//!   have enforced, so a replay is never less ordered than resolution.
+//! * **Key** ([`stream_hash_of`]) is an FNV-1a hash of the submission
+//!   stream — dep addresses + modes + program order. A replay request
+//!   whose stream hashes differently transparently falls back to full
+//!   resolution ([`ReplayOutcome::FellBack`]).
+//! * **Replay** ([`ReplayRun`] + [`run_iteration`]) re-arms a pre-sized
+//!   arena of recycled [`Wd`] descriptors (ids reserved once, bodies and
+//!   in-degrees re-installed per iteration — zero per-iteration graph
+//!   insertion), seeds the recorded ready order straight into the ready
+//!   deques, and lets the normal workers run it. Completion bypasses the
+//!   request plane entirely: `run_task` recognizes arena descriptors and
+//!   finalizes them in place via the recorded successor lists
+//!   (`RuntimeShared::replay_finalize`) — no `DepDomain` shard
+//!   acquisitions, no Submit/Done messages, for **every** organization.
+//!   Parking, taskwait wake edges and failure containment are unchanged:
+//!   a panic during replay still poisons its successor cone, through the
+//!   recorded edges instead of the graph.
+//!
+//! Replay iterations must be driven from outside task bodies (the drivers
+//! taskwait on the root), and a recording is only valid on the
+//! [`TaskSystem`](crate::coordinator::TaskSystem) that will replay it —
+//! the capture honours that system's exact/ranged dependence semantics.
+
+use std::sync::{Arc, Weak};
+
+use crate::coordinator::dep::DepMode;
+use crate::coordinator::depgraph::DepDomain;
+use crate::coordinator::pool::RuntimeShared;
+use crate::coordinator::wd::{TaskBody, TaskId, Wd, WdState};
+use crate::substrate::SpinLock;
+
+/// One task of a replayable iteration: the declared dependences (the
+/// submission stream the recording is keyed on), a static label, and the
+/// body for this iteration.
+pub struct ReplayTask {
+    pub deps: Vec<crate::coordinator::dep::Dependence>,
+    pub label: &'static str,
+    pub body: TaskBody,
+}
+
+impl ReplayTask {
+    pub fn new<F: FnOnce() + Send + 'static>(
+        deps: Vec<crate::coordinator::dep::Dependence>,
+        label: &'static str,
+        body: F,
+    ) -> ReplayTask {
+        ReplayTask { deps, label, body: Box::new(body) }
+    }
+}
+
+/// How [`TaskSystem::replay`](crate::coordinator::TaskSystem::replay)
+/// executed an iteration.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ReplayOutcome {
+    /// The submission stream matched the recording: executed through the
+    /// arena countdown path, zero dependence resolution.
+    Replayed,
+    /// The stream hash mismatched: executed through full resolution
+    /// (counted in `RtStats::replay_fallbacks`).
+    FellBack,
+}
+
+/// Mirrors every dependence edge appended during submission. Installed
+/// only on the throwaway capture domains built by [`capture`]; production
+/// domains carry `None` and pay a single never-taken branch per edge site
+/// (no atomics — the "recording off" fast path).
+#[derive(Default)]
+pub(crate) struct EdgeRecorder {
+    edges: SpinLock<Vec<(u64, u64)>>,
+}
+
+impl EdgeRecorder {
+    pub(crate) fn new() -> EdgeRecorder {
+        EdgeRecorder { edges: SpinLock::new(Vec::new()) }
+    }
+
+    /// Record one `pred -> succ` edge. Called under the shard lock at the
+    /// exact points `DepDomain` pairs a successor-list push with
+    /// `add_preds(1)`, so the recorded multiset matches the countdown
+    /// total edge for edge (multi-edges included — each one is a real
+    /// pending-predecessor increment the replay must count down).
+    #[inline]
+    pub(crate) fn edge(&self, pred: TaskId, succ: TaskId) {
+        self.edges.lock().push((pred.0, succ.0));
+    }
+
+    pub(crate) fn snapshot(&self) -> Vec<(u64, u64)> {
+        self.edges.lock().clone()
+    }
+}
+
+/// The frozen result of resolving one iteration's submission stream.
+/// Immutable after capture; shared by reference between the driver and
+/// the runtime's replay finalizer.
+pub struct GraphRecording {
+    stream_hash: u64,
+    /// Per-task successor indices, multiplicity preserved (one entry per
+    /// recorded edge — each is one in-degree count the successor awaits).
+    succs: Vec<Vec<u32>>,
+    /// Initial pending-predecessor count per task.
+    in_degree: Vec<u32>,
+    /// Indices of tasks ready at submission time, in submission order.
+    ready_seed: Vec<u32>,
+    labels: Vec<&'static str>,
+}
+
+impl GraphRecording {
+    pub fn num_tasks(&self) -> usize {
+        self.in_degree.len()
+    }
+
+    pub fn stream_hash(&self) -> u64 {
+        self.stream_hash
+    }
+
+    /// Total recorded edges (multiplicity included).
+    pub fn edge_count(&self) -> usize {
+        self.succs.iter().map(Vec::len).sum()
+    }
+
+    pub fn ready_seed(&self) -> &[u32] {
+        &self.ready_seed
+    }
+
+    pub fn in_degree(&self, i: usize) -> u32 {
+        self.in_degree[i]
+    }
+
+    pub(crate) fn succs(&self, i: usize) -> &[u32] {
+        &self.succs[i]
+    }
+}
+
+#[inline]
+fn fnv1a(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hash of the submission stream: task count, per-task dep count, and per
+/// dep the region address, length and mode — all in program order. Any
+/// structural change (different regions, modes, counts or order) yields a
+/// different key and forces the fallback path.
+pub(crate) fn stream_hash_of(tasks: &[ReplayTask]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    h = fnv1a(h, tasks.len() as u64);
+    for t in tasks {
+        h = fnv1a(h, t.deps.len() as u64);
+        for d in &t.deps {
+            h = fnv1a(h, d.region.base);
+            h = fnv1a(h, d.region.len);
+            let mode = match d.mode {
+                DepMode::In => 0,
+                DepMode::Out => 1,
+                DepMode::Inout => 2,
+            };
+            h = fnv1a(h, mode);
+        }
+    }
+    h
+}
+
+/// Resolve `tasks`' dependences once, sequentially, against a throwaway
+/// recording domain, and freeze the result. Phantom descriptors (ids =
+/// submission indices) stand in for the real tasks, so recorded edges
+/// translate directly to arena offsets; nothing executes and the phantoms
+/// are dropped with the scratch domain before this returns.
+pub(crate) fn capture(tasks: &[ReplayTask], ranged: bool) -> Arc<GraphRecording> {
+    let n = tasks.len();
+    let recorder = Arc::new(EdgeRecorder::new());
+    let domain = DepDomain::new_recording(Arc::clone(&recorder), ranged);
+    let phantoms: Vec<Arc<Wd>> = tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| Wd::new(TaskId(i as u64), t.deps.clone(), t.label, Weak::new(), Box::new(|| {})))
+        .collect();
+    let mut ready_seed = Vec::new();
+    for (i, p) in phantoms.iter().enumerate() {
+        let ready = if p.deps.is_empty() {
+            // Mirror spawn_from's no-dep fast path: the task never enters
+            // the graph; dropping the submission guard makes it ready.
+            p.release_pred()
+        } else {
+            domain.submit(p)
+        };
+        if ready {
+            ready_seed.push(i as u32);
+        }
+    }
+    let mut succs = vec![Vec::new(); n];
+    let mut edges_in = vec![0u32; n];
+    for (pred, succ) in recorder.snapshot() {
+        succs[pred as usize].push(succ as u32);
+        edges_in[succ as usize] += 1;
+    }
+    // The guard is released, so what remains pending is exactly the real
+    // in-degree — and every increment went through a recorded edge site.
+    let in_degree: Vec<u32> = phantoms.iter().map(|p| p.pending_preds() as u32).collect();
+    debug_assert_eq!(
+        in_degree, edges_in,
+        "recorded edges must account for every pending predecessor"
+    );
+    Arc::new(GraphRecording {
+        stream_hash: stream_hash_of(tasks),
+        succs,
+        in_degree,
+        ready_seed,
+        labels: tasks.iter().map(|t| t.label).collect(),
+    })
+}
+
+/// A recording bound to a runtime: the pre-sized arena of recyclable
+/// descriptors plus the contiguous id block that lets `run_task` recognize
+/// arena tasks with one range check. Installed once per recording into
+/// `RuntimeShared`'s RCU slot; iterations only re-arm the arena.
+pub(crate) struct ReplayRun {
+    pub(crate) rec: Arc<GraphRecording>,
+    pub(crate) arena: Vec<Arc<Wd>>,
+    base_id: u64,
+}
+
+impl ReplayRun {
+    pub(crate) fn new(rt: &Arc<RuntimeShared>, rec: Arc<GraphRecording>) -> Arc<ReplayRun> {
+        let n = rec.num_tasks();
+        let base_id = rt.reserve_task_ids(n as u64);
+        let arena: Vec<Arc<Wd>> = (0..n)
+            .map(|i| {
+                Wd::new(
+                    TaskId(base_id + i as u64),
+                    Vec::new(),
+                    rec.labels[i],
+                    Arc::downgrade(&rt.root),
+                    Box::new(|| {}),
+                )
+            })
+            .collect();
+        Arc::new(ReplayRun { rec, arena, base_id })
+    }
+
+    /// Does `id` belong to this run's arena? Ids are reserved as one
+    /// contiguous block, so membership is a single wrapping range check.
+    #[inline]
+    pub(crate) fn owns(&self, id: TaskId) -> bool {
+        id.0.wrapping_sub(self.base_id) < self.arena.len() as u64
+    }
+
+    #[inline]
+    pub(crate) fn index_of(&self, id: TaskId) -> usize {
+        debug_assert!(self.owns(id));
+        (id.0 - self.base_id) as usize
+    }
+}
+
+/// Execute one recorded iteration: re-arm every arena descriptor with its
+/// body and recorded in-degree, account the tasks on the root, seed the
+/// recorded ready order into the deques, and taskwait. All in-degrees are
+/// installed *before* anything is seeded, so no countdown can release a
+/// descriptor still being recycled — the submission guard is unnecessary.
+/// Safe to call again immediately on return: the taskwait only returns
+/// once every arena descriptor has been finalized to `Deletable`.
+pub(crate) fn run_iteration(
+    rt: &Arc<RuntimeShared>,
+    run: &Arc<ReplayRun>,
+    worker: usize,
+    bodies: Vec<TaskBody>,
+) {
+    let n = run.rec.num_tasks();
+    assert_eq!(bodies.len(), n, "replay bodies must match the recording's task count");
+    if n == 0 {
+        return;
+    }
+    for (i, body) in bodies.into_iter().enumerate() {
+        run.arena[i].recycle_for_replay(body, run.rec.in_degree[i] as usize);
+        rt.root.child_created();
+    }
+    rt.stats.tasks_created.add(n as u64);
+    rt.stats.tasks_outstanding.add(n as u64);
+    rt.stats.replay_hits.inc();
+    let mut seeds = Vec::with_capacity(run.rec.ready_seed.len());
+    for &i in &run.rec.ready_seed {
+        let t = &run.arena[i as usize];
+        t.set_state(WdState::Ready);
+        seeds.push(Arc::clone(t));
+    }
+    let released = seeds.len();
+    rt.ready.push_batch(worker, seeds);
+    rt.wake_for_ready(released);
+    let root = Arc::clone(&rt.root);
+    rt.taskwait_on(worker, &root);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dep::{dep_in, dep_inout, dep_out, Dependence};
+
+    fn t(deps: Vec<Dependence>) -> ReplayTask {
+        ReplayTask::new(deps, "t", || {})
+    }
+
+    #[test]
+    fn capture_chain_and_independent_topology() {
+        // 0 -> 1 -> 2 on one inout region; 3 independent (no deps).
+        let tasks = vec![
+            t(vec![dep_inout(10)]),
+            t(vec![dep_inout(10)]),
+            t(vec![dep_inout(10)]),
+            t(vec![]),
+        ];
+        let rec = capture(&tasks, false);
+        assert_eq!(rec.num_tasks(), 4);
+        assert_eq!(rec.ready_seed(), &[0, 3]);
+        assert_eq!((0..4).map(|i| rec.in_degree(i)).collect::<Vec<_>>(), vec![0, 1, 1, 0]);
+        assert_eq!(rec.succs(0), &[1]);
+        assert_eq!(rec.succs(1), &[2]);
+        assert!(rec.succs(2).is_empty() && rec.succs(3).is_empty());
+        assert_eq!(rec.edge_count(), 2);
+    }
+
+    #[test]
+    fn capture_preserves_multi_edges() {
+        // 0 writes two regions, 1 reads both: two RAW edges, in-degree 2.
+        let tasks = vec![
+            t(vec![dep_out(1), dep_out(2)]),
+            t(vec![dep_in(1), dep_in(2)]),
+        ];
+        let rec = capture(&tasks, false);
+        assert_eq!(rec.succs(0), &[1, 1], "both edges kept — each is one countdown");
+        assert_eq!(rec.in_degree(1), 2);
+        assert_eq!(rec.ready_seed(), &[0]);
+    }
+
+    #[test]
+    fn capture_fan_out_and_war() {
+        // writer 0; readers 1,2 (RAW); writer 3 (WAR x2 + WAW).
+        let tasks = vec![
+            t(vec![dep_out(7)]),
+            t(vec![dep_in(7)]),
+            t(vec![dep_in(7)]),
+            t(vec![dep_out(7)]),
+        ];
+        let rec = capture(&tasks, false);
+        assert_eq!(rec.in_degree(1), 1);
+        assert_eq!(rec.in_degree(2), 1);
+        assert_eq!(rec.in_degree(3), 3, "WAR on both readers + conservative WAW");
+        assert_eq!(rec.ready_seed(), &[0]);
+        let mut s0 = rec.succs(0).to_vec();
+        s0.sort_unstable();
+        assert_eq!(s0, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn capture_ranged_overlap() {
+        let w = Dependence::new(crate::substrate::RegionKey { base: 0, len: 100 }, DepMode::Out);
+        let r = Dependence::new(crate::substrate::RegionKey { base: 50, len: 100 }, DepMode::In);
+        let rec = capture(&[t(vec![w]), t(vec![r])], true);
+        assert_eq!(rec.in_degree(1), 1, "overlapping ranged RAW edge captured");
+        assert_eq!(rec.succs(0), &[1]);
+    }
+
+    #[test]
+    fn stream_hash_keys_on_structure_only() {
+        let a = vec![t(vec![dep_in(1)]), t(vec![dep_out(2)])];
+        let b = vec![t(vec![dep_in(1)]), t(vec![dep_out(2)])];
+        assert_eq!(stream_hash_of(&a), stream_hash_of(&b), "same stream, same key");
+        let addr = vec![t(vec![dep_in(9)]), t(vec![dep_out(2)])];
+        let mode = vec![t(vec![dep_out(1)]), t(vec![dep_out(2)])];
+        let order = vec![t(vec![dep_out(2)]), t(vec![dep_in(1)])];
+        let count = vec![t(vec![dep_in(1)])];
+        for other in [&addr, &mode, &order, &count] {
+            assert_ne!(stream_hash_of(&a), stream_hash_of(other));
+        }
+    }
+}

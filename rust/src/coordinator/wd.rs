@@ -227,6 +227,32 @@ impl Wd {
         self.preds.load(Ordering::Acquire)
     }
 
+    /// Re-arm a replay-arena descriptor for the next recorded iteration:
+    /// install the fresh body and the recorded in-degree, and rewind the
+    /// life cycle to `Created`. This is the **only** sanctioned backward
+    /// state transition in the runtime — it deliberately bypasses
+    /// [`set_state`](Wd::set_state)'s forward-only check, and is sound only
+    /// because the caller (`replay::run_iteration`) re-arms every
+    /// descriptor *before* seeding any, on a quiesced arena: the previous
+    /// iteration's taskwait returned, so every descriptor is `Deletable`
+    /// with no waiter, no successor list and no live children. No
+    /// submission guard is needed — nothing can release a predecessor
+    /// until seeding starts.
+    pub(crate) fn recycle_for_replay(&self, body: TaskBody, preds: usize) {
+        debug_assert!(
+            matches!(self.state(), WdState::Created | WdState::Deletable),
+            "recycling a descriptor still in flight: {:?} (task {:?})",
+            self.state(),
+            self.id
+        );
+        debug_assert_eq!(self.children_live(), 0, "recycle with live children ({:?})", self.id);
+        debug_assert!(!self.waiter_registered(), "recycle with dangling waiter ({:?})", self.id);
+        debug_assert!(self.successors.lock().is_empty(), "arena tasks never chain successors");
+        *self.body.lock() = Some(body);
+        self.preds.store(preds, Ordering::Release);
+        self.state.store(WdState::Created as u8, Ordering::SeqCst);
+    }
+
     /// Register a newly created child (for taskwait and deletion safety).
     #[inline]
     pub fn child_created(&self) {

@@ -10,7 +10,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::TaskSystem;
+use crate::coordinator::wd::TaskBody;
+use crate::coordinator::{GraphRecording, ReplayTask, TaskSystem};
 use crate::workloads::spec::{CostClass, TaskGraphSpec};
 
 /// Per-task observation: global sequence numbers at body start/end.
@@ -23,7 +24,7 @@ pub struct ExecutionLog {
 }
 
 impl ExecutionLog {
-    fn new(n: usize) -> Arc<Self> {
+    pub fn new(n: usize) -> Arc<Self> {
         Arc::new(ExecutionLog {
             start: (0..n).map(|_| AtomicU64::new(u64::MAX)).collect(),
             end: (0..n).map(|_| AtomicU64::new(u64::MAX)).collect(),
@@ -94,14 +95,24 @@ fn task_ns(cost: &CostClass, opt: &ExecOptions) -> u64 {
     ns.min(opt.max_task_ns)
 }
 
-fn spawn_task(ts: &TaskSystem, spec: &Arc<TaskGraphSpec>, log: &Arc<ExecutionLog>, id: usize, opt: ExecOptions) {
+/// Synthesize task `id`'s body: log the start tick, busy-spin the cost
+/// class, spawn + taskwait children (creator tasks), log the end tick.
+/// Shared by the resolved spawner and the replay drivers, so recorded and
+/// replayed iterations run bit-identical bodies.
+fn make_body(
+    ts: &TaskSystem,
+    spec: &Arc<TaskGraphSpec>,
+    log: &Arc<ExecutionLog>,
+    id: usize,
+    opt: ExecOptions,
+) -> TaskBody {
     let t = &spec.tasks[id];
     let ts2 = ts.clone();
     let spec2 = Arc::clone(spec);
     let log2 = Arc::clone(log);
     let ns = task_ns(&t.cost, &opt);
     let children = t.children.clone();
-    ts.spawn_full(t.deps.clone(), t.label, move || {
+    Box::new(move || {
         log2.start[id].store(log2.tick(), Ordering::SeqCst);
         spin_for(ns);
         if !children.is_empty() {
@@ -113,7 +124,13 @@ fn spawn_task(ts: &TaskSystem, spec: &Arc<TaskGraphSpec>, log: &Arc<ExecutionLog
             ts2.taskwait();
         }
         log2.end[id].store(log2.tick(), Ordering::SeqCst);
-    });
+    })
+}
+
+fn spawn_task(ts: &TaskSystem, spec: &Arc<TaskGraphSpec>, log: &Arc<ExecutionLog>, id: usize, opt: ExecOptions) {
+    let t = &spec.tasks[id];
+    let body = make_body(ts, spec, log, id, opt);
+    ts.spawn_full(t.deps.clone(), t.label, body);
 }
 
 /// Execute `spec` to completion on `ts`. Returns the execution log.
@@ -124,6 +141,57 @@ pub fn run_spec(ts: &TaskSystem, spec: &Arc<TaskGraphSpec>, opt: ExecOptions) ->
     }
     ts.taskwait();
     log
+}
+
+/// One iteration of `spec` as a replayable submission stream: the
+/// top-level tasks in program order, bodies logging into `log`. Nested
+/// (creator-spawned) tasks are not part of the stream — creators spawn
+/// them from inside their bodies and taskwait them, on replay exactly as
+/// on resolution.
+pub fn tasks_for(
+    ts: &TaskSystem,
+    spec: &Arc<TaskGraphSpec>,
+    log: &Arc<ExecutionLog>,
+    opt: ExecOptions,
+) -> Vec<ReplayTask> {
+    spec.top_level()
+        .into_iter()
+        .map(|id| {
+            let t = &spec.tasks[id];
+            ReplayTask { deps: t.deps.clone(), label: t.label, body: make_body(ts, spec, log, id, opt) }
+        })
+        .collect()
+}
+
+/// Iterate `spec` `iterations` times through the record/replay plane:
+/// iteration 0 runs fully resolved (capturing a [`GraphRecording`] when
+/// the builder's `record_graphs` flag is on); later iterations replay the
+/// recording with zero dependence resolution. With recording off every
+/// iteration simply resolves — same results, no replay. Returns the
+/// recording (if captured) and one [`ExecutionLog`] per iteration.
+pub fn run_spec_replayed(
+    ts: &TaskSystem,
+    spec: &Arc<TaskGraphSpec>,
+    iterations: usize,
+    opt: ExecOptions,
+) -> (Option<Arc<GraphRecording>>, Vec<Arc<ExecutionLog>>) {
+    let mut recording = None;
+    let mut logs = Vec::with_capacity(iterations);
+    for _ in 0..iterations {
+        let log = ExecutionLog::new(spec.tasks.len());
+        let tasks = tasks_for(ts, spec, &log, opt);
+        match &recording {
+            Some(rec) => {
+                // The stream is identical by construction; a fallback here
+                // would still run the iteration correctly (resolved), and
+                // tests pin it down via RtStats::replay_hits.
+                ts.replay(rec, tasks);
+            }
+            None => recording = ts.record_iteration(tasks),
+        }
+        logs.push(log);
+    }
+    (recording, logs)
 }
 
 #[cfg(test)]

@@ -187,6 +187,28 @@ fn contention_ab_smoke_and_json() {
     assert_eq!(fault_overhead.old.acquisitions, 2_000);
     assert_eq!(fault_overhead.new.acquisitions, 2_000);
 
+    // Record/replay: replayed iterations must take zero dependence-shard
+    // acquisitions while the resolved baseline pays >= 1 per task per
+    // iteration (the drill also asserts zero graph submits and frozen
+    // manager-message totals internally, at every thread count).
+    let replay_iters = 6u64;
+    let mut replay = contention::replay_ab(2, replay_iters);
+    for threads in [4usize, 8] {
+        let ab = contention::replay_ab(threads, replay_iters);
+        assert_eq!(
+            ab.new.acquisitions, 0,
+            "replay must stay shard-free at {threads} threads"
+        );
+        assert!(
+            ab.old.acquisitions >= 64 * replay_iters,
+            "resolved side pays per-task shard locks at {threads} threads"
+        );
+        if threads == 4 {
+            replay = ab; // representative mid-width pair for the JSON
+        }
+    }
+    assert_eq!(replay.new.acquisitions, 0);
+
     let json = contention::suite_to_json(
         &reports,
         &sweeps,
@@ -194,6 +216,7 @@ fn contention_ab_smoke_and_json() {
         &taskwait_park,
         &budget_adapt,
         &fault_overhead,
+        &replay,
         "cargo test contention_ab_smoke_and_json",
     );
     assert!(json.contains("\"contended_reduction\""));
@@ -203,6 +226,7 @@ fn contention_ab_smoke_and_json() {
     assert!(json.contains("\"taskwait_park\""));
     assert!(json.contains("\"budget_adapt\""));
     assert!(json.contains("\"fault_overhead\""));
+    assert!(json.contains("\"replay\""));
     let path = contention::default_json_path();
     if contention::write_suite_json(
         &path,
@@ -212,6 +236,7 @@ fn contention_ab_smoke_and_json() {
         &taskwait_park,
         &budget_adapt,
         &fault_overhead,
+        &replay,
         "cargo test contention_ab_smoke_and_json",
     ) {
         eprintln!("refreshed {}", path.display());
@@ -226,6 +251,7 @@ fn contention_ab_smoke_and_json() {
     eprintln!("{}", contention::render_taskwait_park(&taskwait_park));
     eprintln!("{}", contention::render_budget_adapt(&budget_adapt));
     eprintln!("{}", contention::render_fault_overhead(&fault_overhead));
+    eprintln!("{}", contention::render_replay(&replay));
 }
 
 /// Acceptance guard for the request-plane refactor: during a sparse-traffic

@@ -1,0 +1,193 @@
+//! Integration suite for the record/replay plane (EXPERIMENTS.md §Graph
+//! replay): serial equivalence of replayed iterations, transparent
+//! fallback on stream-hash mismatch, poison propagation along *recorded*
+//! successor edges, and replay interleaving with the parking taskwait —
+//! across the runtime organizations.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use ddast::coordinator::{dep_inout, ReplayOutcome, ReplayTask, RuntimeKind, TaskSystem};
+use ddast::substrate::{FaultPlan, FaultSite, FAULT_ALWAYS};
+use ddast::workloads::executor::{self, ExecOptions};
+use ddast::workloads::synthetic;
+
+/// Serial equivalence is the acceptance property: every replayed iteration
+/// must respect every dependence edge of the spec, on every organization.
+/// Iteration 0 records, iterations 1..=4 replay (counter-pinned — a silent
+/// fallback would pass the edge checks but fail `replay_hits`).
+#[test]
+fn replayed_iterations_respect_every_edge() {
+    for kind in [
+        RuntimeKind::Ddast,
+        RuntimeKind::CentralDast,
+        RuntimeKind::GompLike,
+        RuntimeKind::Sync,
+    ] {
+        let spec = Arc::new(synthetic::random_dag(60, 9, 3));
+        let ts = TaskSystem::builder()
+            .kind(kind)
+            .num_threads(3)
+            .record_graphs(true)
+            .build();
+        let (rec, logs) = executor::run_spec_replayed(&ts, &spec, 5, ExecOptions::default());
+        let rt = Arc::clone(ts.runtime());
+        ts.shutdown();
+        assert!(rec.is_some(), "{kind:?}: iteration 0 must capture a recording");
+        assert_eq!(rt.stats.recordings_captured.get(), 1, "{kind:?}");
+        assert_eq!(rt.stats.replay_hits.get(), 4, "{kind:?}: iterations 1..=4 replay");
+        assert_eq!(rt.stats.replay_fallbacks.get(), 0, "{kind:?}");
+        let preds = spec.predecessor_edges();
+        for (i, log) in logs.iter().enumerate() {
+            assert!(log.all_ran(), "{kind:?}: iteration {i} lost a task");
+            let bad = log.dependence_violations(&preds);
+            assert!(bad.is_empty(), "{kind:?}: iteration {i} violations {bad:?}");
+        }
+    }
+}
+
+/// With the builder flag off, `run_spec_replayed` must degrade to plain
+/// resolution: no recording, no replay counters, same results.
+#[test]
+fn recording_off_resolves_transparently() {
+    let spec = Arc::new(synthetic::diamonds(6, 4, 0));
+    let ts = TaskSystem::builder().kind(RuntimeKind::Ddast).num_threads(2).build();
+    let (rec, logs) = executor::run_spec_replayed(&ts, &spec, 3, ExecOptions::default());
+    let rt = Arc::clone(ts.runtime());
+    ts.shutdown();
+    assert!(rec.is_none(), "record_graphs off must never capture");
+    assert_eq!(rt.stats.recordings_captured.get(), 0);
+    assert_eq!(rt.stats.replay_hits.get(), 0);
+    assert_eq!(rt.stats.replay_fallbacks.get(), 0);
+    let preds = spec.predecessor_edges();
+    for (i, log) in logs.iter().enumerate() {
+        assert!(log.all_ran(), "iteration {i} lost a task");
+        assert!(log.dependence_violations(&preds).is_empty(), "iteration {i}");
+    }
+}
+
+/// A submission stream whose dependence structure differs from the
+/// recording must fall back to full resolution — and still run every
+/// body. The matching stream afterwards must replay.
+#[test]
+fn stream_hash_mismatch_falls_back_to_resolution() {
+    let hits = Arc::new(AtomicU64::new(0));
+    let mk = |n: u64, hits: &Arc<AtomicU64>| -> Vec<ReplayTask> {
+        (0..4u64)
+            .map(|i| {
+                let h = Arc::clone(hits);
+                ReplayTask::new(vec![dep_inout(900 + i % n)], "hash-drill", move || {
+                    h.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect()
+    };
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(2)
+        .record_graphs(true)
+        .build();
+    let rec = ts.record_iteration(mk(2, &hits)).expect("iteration 0 captures");
+    // Four distinct regions instead of two chained pairs: different
+    // structure, different stream hash, resolved fallback.
+    assert_eq!(ts.replay(&rec, mk(4, &hits)), ReplayOutcome::FellBack);
+    // The original stream shape replays.
+    assert_eq!(ts.replay(&rec, mk(2, &hits)), ReplayOutcome::Replayed);
+    let rt = Arc::clone(ts.runtime());
+    ts.shutdown();
+    assert_eq!(rt.stats.replay_fallbacks.get(), 1);
+    assert_eq!(rt.stats.replay_hits.get(), 1);
+    assert_eq!(hits.load(Ordering::SeqCst), 12, "all three iterations ran every body");
+}
+
+/// A task failed during replay must poison its *recorded* successor cone
+/// exactly like a resolved run poisons dependents: with TaskBody injection
+/// always on, each iteration fails the chain head and the independent
+/// task (the only bodies that run) and cancels the five chain successors.
+/// Broken propagation on the replay side would instead run — and fail —
+/// all fourteen tasks (failed=14, cancelled=5).
+#[test]
+fn replay_failure_poisons_recorded_cone() {
+    let plan = Arc::new(FaultPlan::new(0xBAD).with_rate(FaultSite::TaskBody, FAULT_ALWAYS));
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(2)
+        .record_graphs(true)
+        .fault_plan(plan)
+        .build();
+    let mk = || -> Vec<ReplayTask> {
+        let mut v: Vec<ReplayTask> =
+            (0..6).map(|_| ReplayTask::new(vec![dep_inout(77)], "chain", || {})).collect();
+        v.push(ReplayTask::new(vec![dep_inout(99)], "independent", || {}));
+        v
+    };
+    let rec = ts.record_iteration(mk()).expect("iteration 0 captures");
+    assert_eq!(ts.replay(&rec, mk()), ReplayOutcome::Replayed);
+    let rt = Arc::clone(ts.runtime());
+    ts.shutdown();
+    assert_eq!(rt.stats.tasks_failed.get(), 4, "chain head + independent, both iterations");
+    assert_eq!(rt.stats.tasks_cancelled.get(), 10, "five-task cone, both iterations");
+    assert_eq!(rt.stats.tasks_executed.get(), 0, "no body completes under FAULT_ALWAYS");
+}
+
+/// Replay must compose with the parking taskwait: two parallel spinners
+/// feeding a joined finale leave the replay driver idle whenever a pool
+/// worker runs the tail, so across enough rounds the driver parks and a
+/// recorded-successor finalize delivers the child-completion wake edge.
+/// Counter deltas are taken after the recorded iteration so the parks are
+/// attributable to *replayed* iterations.
+#[test]
+fn replay_interleaves_with_parked_taskwait() {
+    fn spin_us(us: u64) {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed().as_micros() < u128::from(us) {
+            std::hint::spin_loop();
+        }
+    }
+    for kind in [RuntimeKind::Ddast, RuntimeKind::CentralDast, RuntimeKind::GompLike] {
+        let ts = TaskSystem::builder()
+            .kind(kind)
+            .num_threads(3)
+            .record_graphs(true)
+            .build();
+        let mk = || -> Vec<ReplayTask> {
+            vec![
+                ReplayTask::new(vec![dep_inout(501)], "spin-a", || spin_us(300)),
+                ReplayTask::new(vec![dep_inout(502)], "spin-b", || spin_us(300)),
+                ReplayTask::new(
+                    vec![dep_inout(501), dep_inout(502)],
+                    "finale",
+                    || spin_us(50),
+                ),
+            ]
+        };
+        let rec = ts.record_iteration(mk()).expect("iteration 0 captures");
+        let rt = Arc::clone(ts.runtime());
+        let parks0 = rt.stats.taskwait_parks.get();
+        let wakes0 = rt.stats.taskwait_wake_edges.get();
+        let mut rounds = 0u64;
+        while rounds < 200 {
+            assert_eq!(ts.replay(&rec, mk()), ReplayOutcome::Replayed, "{kind:?}");
+            rounds += 1;
+            if rt.stats.taskwait_parks.get() > parks0
+                && rt.stats.taskwait_wake_edges.get() > wakes0
+            {
+                break;
+            }
+        }
+        ts.shutdown();
+        assert!(
+            rt.stats.taskwait_parks.get() > parks0,
+            "{kind:?}: the replay driver never parked in {rounds} rounds"
+        );
+        assert!(
+            rt.stats.taskwait_wake_edges.get() > wakes0,
+            "{kind:?}: no wake edge reached the parked driver"
+        );
+        assert_eq!(
+            rt.stats.tasks_executed.get(),
+            3 * (rounds + 1),
+            "{kind:?}: every iteration ran all three tasks"
+        );
+    }
+}
