@@ -59,6 +59,13 @@ fn main() {
         }
     }
     let replay = replay.expect("thread sweep includes 4");
+    println!("\n== topology A/B: flat vs two-level directory, uniform vs socket-ordered steal, broadcast vs dependence-targeted wake ==\n");
+    let mut topology = Vec::new();
+    for (sockets, wps) in [(2usize, 16usize), (4, 8), (4, 32)] {
+        let t = contention::topology_ab(sockets, wps, 2_000);
+        print!("{}", contention::render_topology(&t));
+        topology.push(t);
+    }
     println!();
     let path = contention::default_json_path();
     if contention::write_suite_json(
@@ -70,6 +77,7 @@ fn main() {
         &budget_adapt,
         &fault_overhead,
         &replay,
+        &topology,
         "cargo bench --bench micro_structures",
     ) {
         println!("wrote {}\n", path.display());

@@ -26,7 +26,7 @@ use crate::coordinator::messages::QueueSystem;
 use crate::coordinator::ready::{LockedReadyPools, PoolContention, ReadyPools};
 use crate::coordinator::trace::{LockedTracer, TraceKind, Tracer};
 use crate::coordinator::wd::{TaskId, Wd, WdState};
-use crate::substrate::{FaultPlan, FaultSite, SignalDirectory};
+use crate::substrate::{FaultPlan, FaultSite, SignalDirectory, Topology};
 
 /// One side of an A/B measurement.
 #[derive(Clone, Copy, Debug, Default)]
@@ -609,6 +609,7 @@ pub fn fault_overhead_ab(tasks: u64) -> AbReport {
             23,
             false,
             plan,
+            None,
         );
         let root = Arc::clone(&rt.root);
         let t0 = Instant::now();
@@ -722,6 +723,198 @@ pub fn replay_ab(threads: usize, iters: u64) -> AbReport {
     };
 
     AbReport { old, new }
+}
+
+/// The topology A/B at one machine shape (sockets × workers-per-socket):
+/// the three tentpole claims of the topology plane, each counter-verified
+/// against the *same* structures configured flat (the pre-topology
+/// layout).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TopologyReport {
+    pub sockets: usize,
+    pub workers: usize,
+    pub rounds: u64,
+    /// Directory sweep: `acquisitions` = worker words loaded past the
+    /// summary gate per claiming drain (flat vs two-level) — the claim is
+    /// that a two-level scan touches only dirty-socket words.
+    pub sweep: AbReport,
+    /// Steal victim order: `acquisitions` = steals in the all-local
+    /// window, `contended` = steals that crossed a socket while same-
+    /// socket work existed (uniform-random vs socket-ordered scan).
+    pub steal: AbReport,
+    /// Wake targeting: `acquisitions` = wake rounds, `contended` = wakes
+    /// that landed on a worker other than the registered waiter
+    /// (directory broadcast vs dependence-targeted edge).
+    pub dep_wake: AbReport,
+}
+
+/// Two-level-directory sweep drill: every round raises a fixed burst of
+/// workers in the **last socket** and fully drains the directory with a
+/// claiming scan. Deterministic and single-threaded, so the word-visit
+/// counters are exact: the flat layout pays visits across the whole
+/// single-socket word range every drain, the two-level layout only loads
+/// the dirty socket's words (± one split-start visit when the rotor lands
+/// inside it).
+fn topology_sweep_side(
+    sockets: usize,
+    workers_per_socket: usize,
+    rounds: u64,
+    two_level: bool,
+) -> SideReport {
+    let workers = sockets * workers_per_socket;
+    let topo =
+        if two_level { Topology::new(sockets, workers_per_socket) } else { Topology::flat(workers) };
+    let dir = SignalDirectory::new_with_topology(workers, topo);
+    let dirty_base = (sockets - 1) * workers_per_socket;
+    let burst = 3usize.min(workers_per_socket);
+    let mut claimed = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for k in 0..burst {
+            dir.raise(dirty_base + k);
+        }
+        claimed += dir.scan_rotor().count() as u64;
+    }
+    assert_eq!(claimed, rounds * burst as u64, "every raise claimed exactly once");
+    SideReport {
+        acquisitions: dir.word_visits(),
+        elapsed_ns: t0.elapsed().as_nanos() as u64,
+        ..SideReport::default()
+    }
+}
+
+/// Socket-ordered steal drill: worker 0 (socket 0) steals with every other
+/// worker's deque pre-filled. The victim is recovered from the stolen
+/// task's id, so locality is scored identically on both sides — against
+/// the *shape*, regardless of what the pools were configured with. The
+/// measured window is the first `(workers_per_socket - 1) × per_victim`
+/// steals, during which socket-local work exists by construction.
+/// Returns `(window_steals, remote_in_window, total_stolen)`.
+fn topology_steal_side(
+    sockets: usize,
+    workers_per_socket: usize,
+    per_victim: u64,
+    two_level: bool,
+) -> (u64, u64, u64) {
+    let workers = sockets * workers_per_socket;
+    let shape = Topology::new(sockets, workers_per_socket);
+    let topo = if two_level { shape } else { Topology::flat(workers) };
+    let pools = ReadyPools::new_with_topology(workers, 11, topo);
+    for v in 1..workers {
+        for i in 0..per_victim {
+            pools.push(v, mk_task(((v as u64) << 32) | (i + 1)));
+        }
+    }
+    let window = (workers_per_socket as u64 - 1) * per_victim;
+    let (mut taken, mut remote_in_window) = (0u64, 0u64);
+    while let Some(wd) = pools.get(0) {
+        let victim = (wd.id.0 >> 32) as usize;
+        if taken < window && shape.socket_of(victim) != 0 {
+            remote_in_window += 1;
+        }
+        taken += 1;
+    }
+    assert_eq!(taken, (workers as u64 - 1) * per_victim, "no task stranded");
+    if two_level {
+        // Cross-check the pools' own locality counters against the
+        // id-derived scoring: a socket-ordered scan crosses sockets only
+        // after its local round came up dry.
+        let (local, remote) = pools.steal_locality();
+        assert_eq!(local + remote, taken, "every steal classified");
+        assert_eq!(remote, (workers as u64 - workers_per_socket as u64) * per_victim);
+    }
+    (window, remote_in_window, taken)
+}
+
+/// Dependence-targeted wake drill: one waiter slot (socket 0) and one
+/// parked decoy per remote socket. Old side: the pre-topology path — the
+/// finisher broadcasts one `wake_parked` into the directory, landing on
+/// whichever parked bit the rotating scan meets first. New side: the
+/// waiter registers on the predecessor `Wd` and the finisher claims the
+/// registration and wakes *that* worker. A round is a mistarget when the
+/// wake landed on a decoy while the real waiter stayed parked.
+fn topology_dep_wake_side(
+    sockets: usize,
+    workers_per_socket: usize,
+    rounds: u64,
+    targeted: bool,
+) -> SideReport {
+    let workers = sockets * workers_per_socket;
+    let dir =
+        SignalDirectory::new_with_topology(workers, Topology::new(sockets, workers_per_socket));
+    let pred = mk_task(1);
+    let target = 2usize.min(workers_per_socket - 1); // socket 0
+    let decoys: Vec<usize> = (1..sockets).map(|s| s * workers_per_socket + 1).collect();
+    let mut mistargets = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for &d in &decoys {
+            assert!(dir.begin_park(d));
+        }
+        assert!(dir.begin_park(target));
+        if targeted {
+            let token = pred.register_waiter(target).expect("slot starts empty");
+            let w = pred.take_waiter().expect("finisher claims the registration");
+            assert!(dir.wake_worker(w), "the registered waiter was parked");
+            assert!(!pred.clear_waiter(token), "claimed token is dead");
+        } else {
+            assert_eq!(dir.wake_parked(1), 1, "one parked slot woken");
+        }
+        // Scoring: if the target's bit is still set, the wake landed on a
+        // decoy. `begin_park` doubles as the probe (false = still parked).
+        if !dir.begin_park(target) {
+            mistargets += 1;
+        }
+        dir.cancel_park(target);
+        for &d in &decoys {
+            dir.cancel_park(d);
+        }
+    }
+    SideReport {
+        acquisitions: rounds,
+        contended: mistargets,
+        elapsed_ns: t0.elapsed().as_nanos() as u64,
+        ..SideReport::default()
+    }
+}
+
+/// Run the full topology A/B at one shape. All three drills are
+/// deterministic (single-threaded, counter-verified) so the report is a
+/// proof artifact, not a timing sample.
+pub fn topology_ab(sockets: usize, workers_per_socket: usize, rounds: u64) -> TopologyReport {
+    assert!(sockets >= 2, "the A/B needs a remote socket");
+    assert!(workers_per_socket >= 2);
+    let workers = sockets * workers_per_socket;
+
+    let sweep = AbReport {
+        old: topology_sweep_side(sockets, workers_per_socket, rounds, false),
+        new: topology_sweep_side(sockets, workers_per_socket, rounds, true),
+    };
+
+    let per_victim = 4u64;
+    let steal = {
+        let mk = |(window, remote, total): (u64, u64, u64), elapsed_ns| SideReport {
+            acquisitions: window,
+            contended: remote,
+            cas_attempts: total,
+            elapsed_ns,
+            ..SideReport::default()
+        };
+        let t0 = Instant::now();
+        let old = topology_steal_side(sockets, workers_per_socket, per_victim, false);
+        let old_ns = t0.elapsed().as_nanos() as u64;
+        let t0 = Instant::now();
+        let new = topology_steal_side(sockets, workers_per_socket, per_victim, true);
+        let new_ns = t0.elapsed().as_nanos() as u64;
+        AbReport { old: mk(old, old_ns), new: mk(new, new_ns) }
+    };
+
+    let dep_wake = AbReport {
+        old: topology_dep_wake_side(sockets, workers_per_socket, rounds, false),
+        new: topology_dep_wake_side(sockets, workers_per_socket, rounds, true),
+    };
+
+    TopologyReport { sockets, workers, rounds, sweep, steal, dep_wake }
 }
 
 /// Drain one worker's queue pair (both sweep variants must do identical
@@ -874,11 +1067,25 @@ fn sweep_json_inline(s: &SweepReport) -> String {
     )
 }
 
+fn topology_json_inline(t: &TopologyReport) -> String {
+    format!(
+        "{{\"sockets\": {}, \"workers\": {}, \"rounds\": {}, \"sweep\": {}, \
+         \"steal\": {}, \"dep_wake\": {}}}",
+        t.sockets,
+        t.workers,
+        t.rounds,
+        ab_json(&t.sweep),
+        ab_json(&t.steal),
+        ab_json(&t.dep_wake)
+    )
+}
+
 /// Serialize the full suite: per-thread-count reports (each carrying the
 /// `batch_submit` drill), the sparse-traffic sweep series, the
 /// park-vs-sleep wake-latency pair, the taskwait-wake pair, the
-/// adaptive-batch-budget pair, the failure-containment overhead pair and
-/// the record/replay pair — the shape `BENCH_contention.json` carries.
+/// adaptive-batch-budget pair, the failure-containment overhead pair, the
+/// record/replay pair and the per-shape topology series — the shape
+/// `BENCH_contention.json` carries.
 #[allow(clippy::too_many_arguments)]
 pub fn suite_to_json(
     reports: &[ContentionReport],
@@ -888,17 +1095,21 @@ pub fn suite_to_json(
     budget_adapt: &AbReport,
     fault_overhead: &AbReport,
     replay: &AbReport,
+    topology: &[TopologyReport],
     generated_by: &str,
 ) -> String {
     let reports_json: Vec<String> =
         reports.iter().map(|r| format!("    {}", report_json_inline(r))).collect();
     let sweeps_json: Vec<String> =
         sweeps.iter().map(|s| format!("    {}", sweep_json_inline(s))).collect();
+    let topology_json: Vec<String> =
+        topology.iter().map(|t| format!("    {}", topology_json_inline(t))).collect();
     format!(
         "{{\n  \"generated_by\": \"{}\",\n  \"reports\": [\n{}\n  ],\n  \
          \"signal_sweep\": [\n{}\n  ],\n  \"park_wake\": {},\n  \
          \"taskwait_park\": {},\n  \"budget_adapt\": {},\n  \
-         \"fault_overhead\": {},\n  \"replay\": {}\n}}\n",
+         \"fault_overhead\": {},\n  \"replay\": {},\n  \
+         \"topology\": [\n{}\n  ]\n}}\n",
         generated_by,
         reports_json.join(",\n"),
         sweeps_json.join(",\n"),
@@ -906,7 +1117,8 @@ pub fn suite_to_json(
         ab_json(taskwait_park),
         ab_json(budget_adapt),
         ab_json(fault_overhead),
-        ab_json(replay)
+        ab_json(replay),
+        topology_json.join(",\n")
     )
 }
 
@@ -1034,6 +1246,32 @@ fn fmt_reduction(x: f64) -> String {
     }
 }
 
+/// Human-readable block for one topology A/B shape.
+pub fn render_topology(t: &TopologyReport) -> String {
+    format!(
+        "topology — {}x{} ({} workers), {} rounds:\n  \
+         sweep word visits: flat {} vs two-level {} ({:.1}x fewer)\n  \
+         cross-socket steals in the all-local window: uniform {}/{} vs \
+         socket-ordered {}/{}\n  \
+         wake mistargets: broadcast {}/{} vs dependence-targeted {}/{}\n",
+        t.sockets,
+        t.workers / t.sockets.max(1),
+        t.workers,
+        t.rounds,
+        t.sweep.old.acquisitions,
+        t.sweep.new.acquisitions,
+        t.sweep.old.acquisitions as f64 / t.sweep.new.acquisitions.max(1) as f64,
+        t.steal.old.contended,
+        t.steal.old.acquisitions,
+        t.steal.new.contended,
+        t.steal.new.acquisitions,
+        t.dep_wake.old.contended,
+        t.dep_wake.old.acquisitions,
+        t.dep_wake.new.contended,
+        t.dep_wake.new.acquisitions
+    )
+}
+
 /// Human-readable line for one sweep A/B.
 pub fn render_sweep(s: &SweepReport) -> String {
     format!(
@@ -1066,6 +1304,7 @@ pub fn write_suite_json(
     budget_adapt: &AbReport,
     fault_overhead: &AbReport,
     replay: &AbReport,
+    topology: &[TopologyReport],
     generated_by: &str,
 ) -> bool {
     std::fs::write(
@@ -1078,6 +1317,7 @@ pub fn write_suite_json(
             budget_adapt,
             fault_overhead,
             replay,
+            topology,
             generated_by,
         ),
     )
@@ -1129,7 +1369,8 @@ mod tests {
         let ba = budget_adapt_ab(256);
         let fo = fault_overhead_ab(64);
         let rp = replay_ab(2, 3);
-        let j = suite_to_json(&reports, &sweeps, &pw, &tw, &ba, &fo, &rp, "unit test");
+        let topo = [topology_ab(2, 4, 16)];
+        let j = suite_to_json(&reports, &sweeps, &pw, &tw, &ba, &fo, &rp, &topo, "unit test");
         for key in [
             "\"reports\"",
             "\"signal_sweep\"",
@@ -1138,6 +1379,9 @@ mod tests {
             "\"budget_adapt\"",
             "\"fault_overhead\"",
             "\"replay\"",
+            "\"topology\"",
+            "\"sockets\": 2",
+            "\"dep_wake\"",
             "\"workers\": 32",
             "\"threads\": 2",
         ] {
@@ -1149,6 +1393,55 @@ mod tests {
         assert!(render_budget_adapt(&ba).contains("token grabs"));
         assert!(render_fault_overhead(&fo).contains("happy-path tasks"));
         assert!(render_replay(&rp).contains("record-once-replay-N"));
+        assert!(render_topology(&topo[0]).contains("wake mistargets"));
+    }
+
+    #[test]
+    fn topology_drills_counter_verify_the_claims() {
+        // The ISSUE's acceptance shape: 4 sockets × 8 workers. All three
+        // drills are deterministic, so these are equalities and hard
+        // bounds, not statistical expectations.
+        let t = topology_ab(4, 8, 64);
+        assert_eq!((t.sockets, t.workers), (4, 32));
+        // Sweep: the two-level scan loads at most the dirty socket's words
+        // (one per round here) plus at most one split-start extra; the
+        // flat layout pays strictly more.
+        assert!(
+            t.sweep.new.acquisitions <= 2 * t.rounds,
+            "two-level sweep must visit only dirty-socket words: {} visits / {} rounds",
+            t.sweep.new.acquisitions,
+            t.rounds
+        );
+        // The flat-vs-two-level word-load contrast only exists once the
+        // flat layout spans multiple words (> 64 workers): 4 × 64.
+        let big = topology_ab(4, 64, 32);
+        assert!(big.sweep.new.acquisitions <= 2 * big.rounds);
+        assert!(
+            big.sweep.old.acquisitions > big.sweep.new.acquisitions,
+            "flat sweep must pay more word loads: old={} new={}",
+            big.sweep.old.acquisitions,
+            big.sweep.new.acquisitions
+        );
+        // Steal: while same-socket work exists, ≥90% of socket-ordered
+        // steals stay local (here: all of them, the scan is exhaustive
+        // before crossing); the uniform scan crosses sockets constantly.
+        assert!(
+            t.steal.new.contended * 10 <= t.steal.new.acquisitions,
+            "socket-ordered steals must be ≥90% local in the window: {}/{} remote",
+            t.steal.new.contended,
+            t.steal.new.acquisitions
+        );
+        assert!(t.steal.old.contended > t.steal.new.contended);
+        // Dependence-targeted wakes always land on the registered waiter;
+        // the broadcast side mistargets whenever its rotating scan starts
+        // in a decoy's socket (3 of 4 rounds at this shape).
+        assert_eq!(t.dep_wake.new.contended, 0, "zero broadcast wakes on the dep path");
+        assert!(
+            t.dep_wake.old.contended >= t.rounds / 2,
+            "broadcast must mistarget the decoys: {}/{}",
+            t.dep_wake.old.contended,
+            t.rounds
+        );
     }
 
     #[test]

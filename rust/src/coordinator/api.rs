@@ -23,7 +23,7 @@ use crate::coordinator::pool::{
 };
 use crate::coordinator::replay::{self, GraphRecording, ReplayOutcome, ReplayRun, ReplayTask};
 use crate::coordinator::wd::{TaskBody, Wd};
-use crate::substrate::{FaultPlan, RegionKey};
+use crate::substrate::{FaultPlan, RegionKey, Topology};
 
 /// Builder for [`TaskSystem`].
 pub struct TaskSystemBuilder {
@@ -38,6 +38,7 @@ pub struct TaskSystemBuilder {
     seed: u64,
     fault_plan: Option<Arc<FaultPlan>>,
     record_graphs: bool,
+    topology: Option<Topology>,
 }
 
 impl Default for TaskSystemBuilder {
@@ -54,6 +55,7 @@ impl Default for TaskSystemBuilder {
             seed: 0xDDA57,
             fault_plan: None,
             record_graphs: false,
+            topology: None,
         }
     }
 }
@@ -137,6 +139,19 @@ impl TaskSystemBuilder {
         self
     }
 
+    /// Inject a machine [`Topology`] (sockets × workers-per-socket)
+    /// instead of detecting it from the OS. The topology shapes the
+    /// two-level signal directory, the locality-biased wake victim
+    /// selection, and the socket-ordered steal scan; it is widened
+    /// automatically if it cannot cover `num_threads`. Tests and the
+    /// simulator's machine models use this to pin a shape; production
+    /// callers normally rely on detection (`DDAST_TOPOLOGY=SxW` env
+    /// override, then Linux sysfs NUMA nodes, then flat).
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topology = Some(topo);
+        self
+    }
+
     pub fn build(self) -> TaskSystem {
         let params = self.params.unwrap_or_else(|| DdastParams::tuned(self.num_threads));
         let rt = RuntimeShared::new_with_options(
@@ -147,6 +162,7 @@ impl TaskSystemBuilder {
             self.seed,
             self.ranged,
             self.fault_plan,
+            self.topology,
         );
         let mut autotuner = None;
         if self.kind == RuntimeKind::Ddast {
@@ -263,6 +279,31 @@ impl TaskSystem {
     ) {
         let (rt, worker, parent) = self.ctx();
         rt.spawn_from(worker, &parent, deps, label, Box::new(body));
+    }
+
+    /// [`TaskSystem::spawn_full`] returning the task's work descriptor, so
+    /// the caller can later block on *this specific task* with
+    /// [`TaskSystem::wait_for`] instead of a full `taskwait` barrier.
+    pub fn spawn_handle<F: FnOnce() + Send + 'static>(
+        &self,
+        deps: Vec<Dependence>,
+        label: &'static str,
+        body: F,
+    ) -> Arc<Wd> {
+        let (rt, worker, parent) = self.ctx();
+        rt.spawn_from(worker, &parent, deps, label, Box::new(body))
+    }
+
+    /// Wait until one specific task (a [`TaskSystem::spawn_handle`]
+    /// result) has completed and been finalized — the point-to-point
+    /// alternative to the `taskwait` barrier. While blocked the calling
+    /// thread keeps executing ready tasks; when nothing is actionable it
+    /// parks with a **dependence-targeted wake edge** registered on the
+    /// predecessor itself, and the predecessor's finalizer wakes exactly
+    /// this thread (no directory broadcast).
+    pub fn wait_for(&self, task: &Arc<Wd>) {
+        let (rt, worker, _parent) = self.ctx();
+        rt.taskwait_task(worker, task);
     }
 
     /// `#pragma omp taskwait`: wait until all children of the *current*
@@ -510,6 +551,44 @@ mod tests {
         // Sticky: the poisoned run stays poisoned through teardown.
         let err = ts.shutdown_checked().unwrap_err();
         assert_eq!(err.tasks_failed, 1);
+    }
+
+    #[test]
+    fn wait_for_blocks_on_one_task_not_the_barrier() {
+        let ts = TaskSystem::new_ddast(2);
+        let first = Arc::new(AtomicU64::new(0));
+        let f = Arc::clone(&first);
+        let handle = ts.spawn_handle(vec![], "first", move || {
+            f.store(7, Ordering::SeqCst);
+        });
+        ts.wait_for(&handle);
+        // The specific predecessor is fully finalized once wait_for
+        // returns — not merely executed.
+        assert_eq!(first.load(Ordering::SeqCst), 7);
+        assert!(handle.done_handled());
+        ts.shutdown();
+    }
+
+    #[test]
+    fn injected_topology_shapes_the_directory() {
+        let ts = TaskSystem::builder()
+            .kind(RuntimeKind::Ddast)
+            .num_threads(4)
+            .topology(Topology::new(2, 2))
+            .build();
+        let rt = ts.runtime();
+        assert_eq!(rt.topo.sockets(), 2);
+        assert_eq!(rt.queues.signals().sockets(), 2);
+        let v = Arc::new(AtomicU64::new(0));
+        for _ in 0..32 {
+            let v = Arc::clone(&v);
+            ts.spawn(&[], move || {
+                v.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        ts.taskwait();
+        assert_eq!(v.load(Ordering::SeqCst), 32);
+        ts.shutdown();
     }
 
     #[test]

@@ -80,8 +80,10 @@ impl Default for DdastParams {
 /// * spin budget reset on progress, decrement on an empty round, exit at
 ///   zero (lines 24–25).
 ///
-/// The directory's rotor starts successive scans at successive workers, so
-/// one noisy producer cannot starve the others of manager attention.
+/// The scan starts in the manager's own socket (two-level directory,
+/// `scan_near`) and its rotor starts successive scans at successive
+/// workers within it, so one noisy producer cannot starve the others of
+/// manager attention and a manager drains cache-near queues first.
 ///
 /// Returns `true` if at least one message was satisfied (the Functionality
 /// Dispatcher uses this for its idle accounting).
@@ -122,7 +124,12 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
     // by a claiming scan over the signal directory.
     loop {
         let mut total_cnt: usize = 0;
-        let mut scan = dir.scan_rotor();
+        // Locality-biased sweep: start in the manager's own socket (its
+        // neighbours' queues share the cache hierarchy), rotor-rotated
+        // within the socket so co-located producers still take turns; the
+        // scan wraps across every socket, so remote raisers are never
+        // starved — topology biases the order, not the coverage.
+        let mut scan = dir.scan_near(me);
         loop {
             // Line 7: early exit when enough parallelism is uncovered. The
             // sharded gauge's relaxed sweep is fine here — this is the hot

@@ -28,7 +28,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::wd::Wd;
-use crate::substrate::{ShardedCounter, SignalDirectory, SpscQueue};
+use crate::substrate::{ShardedCounter, SignalDirectory, SpscQueue, Topology};
 
 /// Request to insert a created task into the dependence graph.
 #[derive(Debug)]
@@ -205,6 +205,19 @@ impl QueueSystem {
     /// first `num_workers` slots carry work-signal raises; the extras are
     /// parking-only.
     pub fn with_park_slots(num_workers: usize, park_slots: usize) -> Self {
+        Self::with_topology(
+            num_workers,
+            park_slots,
+            Topology::word_grain(park_slots.max(num_workers).max(1)),
+        )
+    }
+
+    /// Like [`QueueSystem::with_park_slots`], but the signal directory is
+    /// laid out along `topo` (two-level: socket summary → per-worker bits),
+    /// so manager sweeps and wake scans only touch dirty sockets. The
+    /// runtime passes its resolved [`Topology`]; the default above keeps
+    /// the flat word-grain layout.
+    pub fn with_topology(num_workers: usize, park_slots: usize, topo: Topology) -> Self {
         debug_assert!(park_slots >= num_workers);
         QueueSystem {
             workers: (0..num_workers).map(|_| WorkerQueues::new()).collect(),
@@ -212,7 +225,10 @@ impl QueueSystem {
             // update the gauge (satellite fix: cells sized from the actual
             // thread count instead of the fixed 16).
             pending: ShardedCounter::with_shards(num_workers + 2),
-            signals: SignalDirectory::new(park_slots.max(num_workers).max(1)),
+            signals: SignalDirectory::new_with_topology(
+                park_slots.max(num_workers).max(1),
+                topo,
+            ),
         }
     }
 

@@ -33,7 +33,7 @@ use crate::coordinator::ready::ReadyPools;
 use crate::coordinator::replay::ReplayRun;
 use crate::coordinator::trace::{ThreadState, TraceKind, Tracer};
 use crate::coordinator::wd::{TaskBody, TaskId, Wd, WdState};
-use crate::substrate::{Counter, FaultPlan, FaultSite, RcuCell, SpinLock};
+use crate::substrate::{Counter, FaultPlan, FaultSite, RcuCell, SpinLock, Topology};
 
 /// Which runtime organization to run (paper §6.1's compared runtimes, plus
 /// the authors' earlier centralized design [7] for lineage comparison).
@@ -84,6 +84,10 @@ pub struct RtStats {
     /// Child-completion wake edges fired: a finalizer's decrement-to-zero
     /// claimed a parent's waiter registration and woke its worker slot.
     pub taskwait_wake_edges: Counter,
+    /// Dependence-targeted wake edges fired: a finalizer claimed a waiter
+    /// registered **on the finishing task itself** (`taskwait_task`) and
+    /// woke exactly that worker — point-to-point, never a broadcast.
+    pub dep_wake_edges: Counter,
     /// Task bodies that panicked (caught at the execution boundary).
     pub tasks_failed: Counter,
     /// Tasks poisoned by a failed/cancelled predecessor: body dropped
@@ -190,6 +194,10 @@ pub struct RuntimeShared {
     /// future work); the DDAST callback snapshots these on entry.
     tunables: Arc<crate::coordinator::autotune::TunableParams>,
     pub num_threads: usize,
+    /// Resolved socket shape (builder override → `DDAST_TOPOLOGY` env →
+    /// OS detection → flat). Steers the signal directory's two-level
+    /// layout, steal victim order and wake victim selection.
+    pub topo: Topology,
     pub queues: QueueSystem,
     pub ready: ReadyPools,
     pub dispatcher: Dispatcher,
@@ -241,12 +249,14 @@ impl RuntimeShared {
         seed: u64,
         ranged_deps: bool,
     ) -> Arc<Self> {
-        Self::new_with_options(kind, num_threads, params, tracing, seed, ranged_deps, None)
+        Self::new_with_options(kind, num_threads, params, tracing, seed, ranged_deps, None, None)
     }
 
     /// Full-option constructor: dependence plugin plus an optional
     /// deterministic [`FaultPlan`] (fault-injection harness; `None` outside
-    /// tests/benches).
+    /// tests/benches) plus an optional [`Topology`] override (`None` →
+    /// [`Topology::detect`]: `DDAST_TOPOLOGY` env, then OS NUMA nodes,
+    /// then flat).
     pub fn new_with_options(
         kind: RuntimeKind,
         num_threads: usize,
@@ -255,15 +265,17 @@ impl RuntimeShared {
         seed: u64,
         ranged_deps: bool,
         fault_plan: Option<Arc<FaultPlan>>,
+        topology: Option<Topology>,
     ) -> Arc<Self> {
         assert!(num_threads >= 1, "need at least the main thread");
+        let topo = topology.unwrap_or_else(|| Topology::detect(num_threads)).cover(num_threads);
         // GOMP-like: a single central *locked* ready queue all threads hit
         // (the comparator models a centralized contended runtime, so it
         // deliberately skips the per-thread lock-free deques).
         let ready = if kind == RuntimeKind::GompLike {
             ReadyPools::new_central(seed)
         } else {
-            ReadyPools::new(num_threads, seed)
+            ReadyPools::new_with_topology(num_threads, seed, topo)
         };
         // Trace rings are sized by the *actual* number of recording
         // contexts: the centralized design's DAS thread records from an
@@ -280,7 +292,8 @@ impl RuntimeShared {
             params,
             tunables: Arc::new(crate::coordinator::autotune::TunableParams::new(params)),
             num_threads,
-            queues: QueueSystem::with_park_slots(num_threads, trace_slots),
+            topo,
+            queues: QueueSystem::with_topology(num_threads, trace_slots, topo),
             ready,
             dispatcher: Dispatcher::new(),
             root: Wd::root(),
@@ -493,7 +506,7 @@ impl RuntimeShared {
             debug_assert!(became_ready);
             wd.set_state(WdState::Ready);
             self.ready.push(worker, Arc::clone(&wd));
-            self.wake_for_ready(1);
+            self.wake_for_ready(worker, 1);
             self.trace_gauges(worker);
             return wd;
         }
@@ -519,15 +532,20 @@ impl RuntimeShared {
     /// ready-pool pushes have no raise — this is their wake edge. One fence
     /// plus a bitmap load when nobody is parked (the common case).
     ///
+    /// `worker` is the thread whose deque just received the tasks: the
+    /// wake scan prefers a parked worker on *that deque's socket* (it can
+    /// steal the new work without crossing sockets), falling back to the
+    /// remaining sockets in rotation.
+    ///
     /// Fault site [`FaultSite::WakeEdge`]: an injected fault swallows the
     /// wake (an unbounded delay) — the timed-park recheck cadence and the
     /// hang watchdog must then deliver the work anyway.
     #[inline]
-    pub(crate) fn wake_for_ready(&self, n: usize) {
+    pub(crate) fn wake_for_ready(&self, worker: usize, n: usize) {
         if self.fault_inject(FaultSite::WakeEdge) {
             return;
         }
-        self.queues.signals().wake_parked(n);
+        self.queues.signals().wake_parked_near(n, Some(worker));
     }
 
     fn process_submit_direct(&self, worker: usize, task: Arc<Wd>) {
@@ -545,7 +563,7 @@ impl RuntimeShared {
         if domain.submit(&task) {
             task.set_state(WdState::Ready);
             self.ready.push(worker, task);
-            self.wake_for_ready(1);
+            self.wake_for_ready(worker, 1);
         }
     }
 
@@ -634,7 +652,7 @@ impl RuntimeShared {
             }
             let released = batch.ready.len();
             self.ready.push_drain(mgr_worker, &mut batch.ready);
-            self.wake_for_ready(released);
+            self.wake_for_ready(mgr_worker, released);
         }
         for msg in batch.dones.drain(..) {
             self.finalize_task(mgr_worker, &msg.task);
@@ -672,6 +690,7 @@ impl RuntimeShared {
             // this task's own accounting and degrade gracefully.
             self.stats.teardown_degradations.inc();
             task.set_state(WdState::DoneHandled);
+            self.fire_dep_wake(task);
             if task.children_live() == 0 {
                 task.set_state(WdState::Deletable);
             }
@@ -696,13 +715,20 @@ impl RuntimeShared {
                 let released = ready.len();
                 self.ready.push_batch(worker, ready);
                 if released > 0 {
-                    self.wake_for_ready(released);
+                    self.wake_for_ready(worker, released);
                 }
             }
         }
         // §3.1: deletion synchronization through an extra state rather than
         // a third message type.
         task.set_state(WdState::DoneHandled);
+        // Dependence-targeted wake edge: a worker blocked in
+        // `taskwait_task` on *this* task is registered in the task's own
+        // waiter slot. The (SeqCst) `DoneHandled` store above precedes
+        // this claim, pairing with the waiter's register-then-recheck
+        // order — same store-buffer argument as the child-completion edge
+        // below, with `done_handled()` as the condition.
+        self.fire_dep_wake(task);
         if task.children_live() == 0 {
             task.set_state(WdState::Deletable);
         }
@@ -853,7 +879,7 @@ impl RuntimeShared {
             let released = ready.len();
             if released > 0 {
                 self.ready.push_batch(worker, ready);
-                self.wake_for_ready(released);
+                self.wake_for_ready(worker, released);
             }
         }
         // Same deletion-state protocol and parent accounting as
@@ -861,6 +887,7 @@ impl RuntimeShared {
         // outlives the runtime, so the teardown degradation arm is
         // defensive only.
         task.set_state(WdState::DoneHandled);
+        self.fire_dep_wake(task);
         if task.children_live() == 0 {
             task.set_state(WdState::Deletable);
         }
@@ -878,6 +905,25 @@ impl RuntimeShared {
             }
             if parent.done_handled() {
                 parent.set_state(WdState::Deletable);
+            }
+        }
+    }
+
+    /// Finalizer side of the **dependence-targeted wake edge**: claim a
+    /// waiter registered on the finishing task's own slot
+    /// ([`taskwait_task`](RuntimeShared::taskwait_task)) and wake exactly
+    /// that worker — point-to-point, never a broadcast scan. Must run
+    /// after the task's `DoneHandled` store (the waiter's re-check
+    /// condition). Cost on the hot path: one load when no waiter is
+    /// registered. Same [`FaultSite::WakeEdge`] guard as every other wake
+    /// edge — a swallowed wake is redelivered by the timed-park cadence
+    /// and the watchdog.
+    #[inline]
+    fn fire_dep_wake(&self, task: &Arc<Wd>) {
+        if let Some(w) = task.take_waiter() {
+            self.stats.dep_wake_edges.inc();
+            if !self.fault_inject(FaultSite::WakeEdge) {
+                self.queues.signals().wake_worker(w);
             }
         }
     }
@@ -981,6 +1027,67 @@ impl RuntimeShared {
             self.stats.taskwait_parks.inc();
             idle = self.commit_park(worker);
             task.clear_waiter(token);
+        }
+    }
+
+    /// Block `worker` until a **specific predecessor task** reaches
+    /// `DoneHandled` — the dependence-targeted generalization of
+    /// [`taskwait_on`](RuntimeShared::taskwait_on). Where `taskwait_on`
+    /// parks on "all my children are finished" with a child-completion
+    /// wake edge, this parks on "that one task finished" with the edge
+    /// registered in the *predecessor's own* waiter slot; the
+    /// predecessor's finalizer ([`fire_dep_wake`](RuntimeShared::fire_dep_wake))
+    /// claims the slot and wakes exactly this worker, point-to-point —
+    /// no broadcast scan of the directory on the wake path.
+    ///
+    /// Lost-wakeup proof, same store-buffer discipline as `taskwait_on`
+    /// with `done_handled()` as the condition: the waiter registers
+    /// (SeqCst CAS), announces the park (`begin_park`, SeqCst RMW +
+    /// fence), then re-checks `pred.done_handled()`. The finalizer stores
+    /// `DoneHandled` (SeqCst swap) *before* claiming the slot. In the
+    /// SeqCst total order either the re-check sees the state (and
+    /// cancels), or the claim sees the registration (and wakes).
+    ///
+    /// Like `taskwait_on`, the loop keeps executing ready work
+    /// (`try_make_progress`) while blocked, so waiting on a predecessor
+    /// never idles a core that could run its transitive inputs.
+    pub fn taskwait_task(self: &Arc<Self>, worker: usize, pred: &Arc<Wd>) {
+        let mut idle: u32 = 0;
+        while !pred.done_handled() {
+            if self.try_make_progress(worker) {
+                idle = 0;
+                continue;
+            }
+            idle += 1;
+            if idle < PARK_AFTER {
+                idle_backoff(idle);
+                continue;
+            }
+            // Register BEFORE announcing the park (mirrors `taskwait_on`):
+            // the finalizer claims the slot only after its `DoneHandled`
+            // store, so this order closes the lost-wakeup window.
+            let Some(token) = pred.register_waiter(worker) else {
+                // The slot is taken — either the predecessor's own body is
+                // in a `taskwait_on` (child edge) or another thread already
+                // waits on it. Degenerate fallback: the seed's polite
+                // ladder, identical to `taskwait_on`'s contended arm.
+                idle_backoff(idle);
+                continue;
+            };
+            let signals = self.queues.signals();
+            if !signals.begin_park(worker) {
+                pred.clear_waiter(token);
+                idle_backoff(idle);
+                continue;
+            }
+            if pred.done_handled() {
+                pred.clear_waiter(token);
+                signals.cancel_park(worker);
+                break;
+            }
+            self.stats.taskwait_parks.inc();
+            idle = self.commit_park(worker);
+            pred.clear_waiter(token);
         }
     }
 
@@ -1379,6 +1486,51 @@ mod tests {
         let signals = rt.queues.signals();
         assert!(signals.begin_park(0));
         signals.park(0);
+        clear_ctx();
+    }
+
+    #[test]
+    fn finalize_fires_dependence_targeted_wake_edge() {
+        // The dep-edge mirror of the child-completion test above: the
+        // waiter registers on the *predecessor's own* slot, and the
+        // predecessor's finalizer wakes exactly that worker.
+        let rt = rt(RuntimeKind::Sync);
+        let root = Arc::clone(&rt.root);
+        let pred = rt.spawn_from(0, &root, vec![], "pred", Box::new(|| {}));
+        let token = pred.register_waiter(0).expect("slot starts empty");
+        let task = rt.ready.get(0).expect("no-dep spawn is immediately ready");
+        assert!(Arc::ptr_eq(&task, &pred));
+        rt.run_task(0, task); // Sync: finalizes inline → DoneHandled → dep wake
+        assert!(pred.done_handled());
+        assert_eq!(rt.stats.dep_wake_edges.get(), 1);
+        assert!(!pred.waiter_registered(), "the finalizer claimed the registration");
+        assert!(!pred.clear_waiter(token), "claimed token is dead");
+        // Point-to-point: the wake deposited a token on worker 0's slot,
+        // no directory broadcast happened on this path.
+        let signals = rt.queues.signals();
+        assert!(signals.begin_park(0));
+        signals.park(0);
+        // taskwait_task on an already-finalized predecessor returns
+        // without spinning up a park.
+        rt.taskwait_task(0, &pred);
+        clear_ctx();
+    }
+
+    #[test]
+    fn taskwait_task_blocks_until_specific_predecessor() {
+        let rt = rt(RuntimeKind::Sync);
+        let root = Arc::clone(&rt.root);
+        let hit = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hit);
+        let pred = rt.spawn_from(0, &root, vec![dep_out(3)], "pred", Box::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+        // Single-threaded Sync runtime: taskwait_task itself must execute
+        // the predecessor via try_make_progress before returning.
+        rt.taskwait_task(0, &pred);
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+        assert!(pred.done_handled());
+        drain(&rt);
         clear_ctx();
     }
 

@@ -32,7 +32,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::wd::Wd;
-use crate::substrate::{CachePadded, Counter, ShardedCounter, SpinLock, WsDeque, XorShift64};
+use crate::substrate::{
+    CachePadded, Counter, ShardedCounter, SpinLock, Topology, WsDeque, XorShift64,
+};
 
 /// Aggregate contention statistics of a ready-pool implementation, in the
 /// `SpinLock::stats` vocabulary plus the lock-free CAS proxy. Fuel for
@@ -71,6 +73,15 @@ pub struct ReadyPools {
     queues: PoolQueues,
     ready_count: ShardedCounter,
     steals: Counter,
+    /// Steals whose victim shared the thief's socket (telemetry for the
+    /// topology A/B: ≥ 90% of steals should be local when local work
+    /// exists).
+    local_steals: Counter,
+    /// Steals that crossed a socket boundary.
+    remote_steals: Counter,
+    /// Socket shape steering victim order: same-socket victims are tried
+    /// for a full round before any remote deque is touched.
+    topo: Topology,
     /// Per-slot xorshift state for victim selection (index = thread id).
     /// Only the slot's bound thread draws from it, so a relaxed
     /// load+store suffices; the atomic keeps the API safe if two threads
@@ -80,6 +91,15 @@ pub struct ReadyPools {
 
 impl ReadyPools {
     pub fn new(num_threads: usize, seed: u64) -> Self {
+        Self::new_with_topology(num_threads, seed, Topology::flat(num_threads))
+    }
+
+    /// Like [`ReadyPools::new`], but victim selection follows `topo`:
+    /// thieves scan their own socket's deques (random start, full round)
+    /// before touching a remote socket — each remote socket then gets its
+    /// own random-start round, nearest-rotation order. A flat topology
+    /// reproduces the old uniform-random behaviour exactly.
+    pub fn new_with_topology(num_threads: usize, seed: u64, topo: Topology) -> Self {
         ReadyPools {
             queues: PoolQueues::PerThread(
                 (0..num_threads).map(|_| CachePadded::new(WsDeque::new())).collect(),
@@ -88,6 +108,9 @@ impl ReadyPools {
             // (tests, the main thread before install) also touch the gauge.
             ready_count: ShardedCounter::with_shards(num_threads + 2),
             steals: Counter::new(),
+            local_steals: Counter::new(),
+            remote_steals: Counter::new(),
+            topo: topo.cover(num_threads.max(1)),
             rngs: Self::make_rngs(num_threads, seed),
         }
     }
@@ -99,6 +122,9 @@ impl ReadyPools {
             queues: PoolQueues::Central(SpinLock::new(VecDeque::new())),
             ready_count: ShardedCounter::new(),
             steals: Counter::new(),
+            local_steals: Counter::new(),
+            remote_steals: Counter::new(),
+            topo: Topology::flat(1),
             rngs: Self::make_rngs(1, seed),
         }
     }
@@ -137,6 +163,13 @@ impl ReadyPools {
     #[inline]
     pub fn steal_count(&self) -> u64 {
         self.steals.get()
+    }
+
+    /// (same-socket steals, cross-socket steals) — the topology A/B's
+    /// locality metric. Sums to [`steal_count`](ReadyPools::steal_count).
+    #[inline]
+    pub fn steal_locality(&self) -> (u64, u64) {
+        (self.local_steals.get(), self.remote_steals.get())
     }
 
     /// Push a task that just became ready onto `thread`'s queue.
@@ -203,8 +236,13 @@ impl ReadyPools {
         }
     }
 
-    /// Try to steal from another thread's queue. Victims are scanned
-    /// round-robin from a random start so steals spread out.
+    /// Try to steal from another thread's queue. Victims are scanned in
+    /// topology order: one full round over the thief's own socket (random
+    /// start, so same-socket steals spread out), then the remote sockets
+    /// in nearest-rotation order, each with its own random-start round —
+    /// a remote cache line is only touched after the local socket came up
+    /// dry. Under a flat topology the local round covers every deque and
+    /// this degenerates to the old uniform-random scan.
     fn steal(&self, qs: &[CachePadded<WsDeque<Arc<Wd>>>], me: usize) -> Option<Arc<Wd>> {
         let n = qs.len();
         if n <= 1 {
@@ -217,19 +255,38 @@ impl ReadyPools {
         let rng = &self.rngs[me];
         let (state, draw) = XorShift64::step(rng.load(Ordering::Relaxed));
         rng.store(state, Ordering::Relaxed);
-        let start = ((draw as u128 * n as u128) >> 64) as usize;
-        for k in 0..n {
-            let v = (start + k) % n;
-            if v == me {
+        let my_socket = self.topo.socket_of(me);
+        let sockets = self.topo.sockets();
+        for s in 0..sockets {
+            let sock = (my_socket + s) % sockets;
+            let range = self.topo.socket_range(sock, n);
+            let span = range.len();
+            if span == 0 {
                 continue;
             }
-            // Steal from the *back* (oldest work stays with the owner's
-            // FIFO front; stealing the back grabs the most recently
-            // released — deepest — work, the classic DBF choice).
-            if let Some(t) = qs[v].steal_back() {
-                self.ready_count.dec();
-                self.steals.inc();
-                return Some(t);
+            // Random start within the socket (one draw steers every
+            // round; the per-socket spans make the offsets independent
+            // enough, and determinism per draw keeps the sim replayable).
+            let start = ((draw as u128 * span as u128) >> 64) as usize;
+            for k in 0..span {
+                let v = range.start + (start + k) % span;
+                if v == me {
+                    continue;
+                }
+                // Steal from the *back* (oldest work stays with the
+                // owner's FIFO front; stealing the back grabs the most
+                // recently released — deepest — work, the classic DBF
+                // choice).
+                if let Some(t) = qs[v].steal_back() {
+                    self.ready_count.dec();
+                    self.steals.inc();
+                    if s == 0 {
+                        self.local_steals.inc();
+                    } else {
+                        self.remote_steals.inc();
+                    }
+                    return Some(t);
+                }
             }
         }
         None
@@ -529,6 +586,28 @@ mod tests {
         let set: HashSet<u64> = got.iter().copied().collect();
         assert_eq!(set.len() as u64, TASKS);
         assert_eq!(p.ready_count_exact(), 0, "sharded gauge settles");
+    }
+
+    #[test]
+    fn topology_steal_prefers_local_socket() {
+        // 2 sockets × 2 threads. Thread 1's steals must drain its local
+        // victim (thread 0) before ever touching the remote socket, even
+        // though the remote deque holds work the whole time.
+        let p = ReadyPools::new_with_topology(4, 7, Topology::new(2, 2));
+        for i in 0..20u64 {
+            p.push(0, mk(i * 2 + 1)); // local victim for thread 1
+            p.push(2, mk(i * 2 + 2)); // remote socket's work
+            let got = p.get(1).expect("local steal");
+            assert_eq!(got.id.0 % 2, 1, "stole the local task, got {}", got.id.0);
+        }
+        let (local, remote) = p.steal_locality();
+        assert_eq!((local, remote), (20, 0), "all steals resolved same-socket");
+        // Local socket dry: remote work is still reachable (no starvation).
+        let got = p.get(1).expect("remote fallback");
+        assert_eq!(got.id.0 % 2, 0);
+        let (_, remote) = p.steal_locality();
+        assert_eq!(remote, 1);
+        assert_eq!(p.steal_count(), 21);
     }
 
     #[test]

@@ -273,24 +273,35 @@ impl Wd {
         self.children_live.load(Ordering::SeqCst)
     }
 
-    // ---- taskwait waiter slot (child-completion wake edge) ---------------
+    // ---- taskwait waiter slot (targeted wake edges) ----------------------
 
     /// Register the calling worker as this task's taskwait waiter.
     ///
+    /// One slot carries **two kinds of targeted wake edge**: the
+    /// child-completion edge (a thread blocked in `taskwait_on` on *this
+    /// task's children*, claimed by the finalizer that drives
+    /// `children_live` to zero) and the dependence-targeted edge (a thread
+    /// blocked in `taskwait_task` on *this task itself*, claimed by this
+    /// task's own finalizer right after the `DoneHandled` store). The two
+    /// cannot collide in practice — an in-body `taskwait_on` returns
+    /// before the body finishes, long before finalize — and a cross-claim
+    /// is merely a spurious wake: the claimed waiter re-checks its
+    /// condition and re-registers before parking again.
+    ///
     /// **Ownership rules** (the wake-edge contract — also in the README
-    /// architecture map): only the thread blocked in `taskwait_on` may
-    /// *publish* (CAS `0 → packed`, this method); only the finalizer that
-    /// drives `children_live` to zero may *claim*
+    /// architecture map): only the blocked thread may *publish* (CAS
+    /// `0 → packed`, this method); only a finalizer may *claim*
     /// ([`take_waiter`](Wd::take_waiter)'s swap `→ 0`); and the waiter
     /// *clears its own* registration ([`clear_waiter`](Wd::clear_waiter),
     /// CAS `packed → 0`) after every park attempt, so a registration never
     /// outlives the park it guards.
     ///
-    /// `SeqCst`: pairs with the finalizer's decrement-then-claim — the
-    /// slot and `children_live` accesses need a single total order so
-    /// that either the waiter's post-announce re-check sees the zero, or
+    /// `SeqCst`: pairs with the finalizer's publish-then-claim — the slot
+    /// and the wake condition (`children_live`, or the `DoneHandled`
+    /// state for the dependence edge) need a single total order so that
+    /// either the waiter's post-announce re-check sees the condition, or
     /// the finalizer's claim sees the registration (the store-buffer
-    /// argument in `taskwait_on`).
+    /// argument in `taskwait_on`/`taskwait_task`).
     ///
     /// Returns the token to pass to `clear_waiter`, or `None` when another
     /// waiter is already registered (two taskwaits on one WD — reachable

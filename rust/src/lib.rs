@@ -57,3 +57,4 @@ pub mod bench_harness;
 
 pub use coordinator::{TaskSystem, RuntimeKind, DepMode, DdastParams};
 pub use sim::machine::MachineConfig;
+pub use substrate::Topology;

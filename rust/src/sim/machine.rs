@@ -110,6 +110,10 @@ pub struct MachineConfig {
     pub name: &'static str,
     /// Physical cores (sum over sockets).
     pub cores: usize,
+    /// Sockets (NUMA domains) the cores spread over — the shape behind
+    /// [`MachineConfig::topology`]: KNL and ThunderX are single-socket
+    /// nodes, the Power testbeds are 2 × CPU (Table 1 "2 × IBM ...").
+    pub sockets: usize,
     /// Hardware threads per core.
     pub threads_per_core: usize,
     pub ghz: f64,
@@ -130,6 +134,7 @@ impl MachineConfig {
         MachineConfig {
             name: "knl",
             cores: 64,
+            sockets: 1,
             threads_per_core: 4,
             ghz: 1.3,
             mem_gb: 96,
@@ -151,6 +156,7 @@ impl MachineConfig {
         MachineConfig {
             name: "thunderx",
             cores: 48,
+            sockets: 1,
             threads_per_core: 1,
             ghz: 1.8,
             mem_gb: 64,
@@ -173,6 +179,7 @@ impl MachineConfig {
         MachineConfig {
             name: "power8",
             cores: 20,
+            sockets: 2,
             threads_per_core: 8,
             ghz: 4.0,
             mem_gb: 256,
@@ -189,6 +196,7 @@ impl MachineConfig {
         MachineConfig {
             name: "power9",
             cores: 40,
+            sockets: 2,
             threads_per_core: 4,
             ghz: 3.0,
             mem_gb: 512,
@@ -224,6 +232,15 @@ impl MachineConfig {
             "power9" => 40,   // 1 thread/core
             _ => self.cores,
         }
+    }
+
+    /// The machine's shape as a runtime [`Topology`] for `threads` worker
+    /// threads — what a validation run on `sim`'s models injects via
+    /// `TaskSystem::builder().topology(..)` so the two-level signal
+    /// directory and the socket-ordered steal scan see the Table 1 socket
+    /// split instead of the host's.
+    pub fn topology(&self, threads: usize) -> crate::substrate::Topology {
+        crate::substrate::Topology::with_workers(self.sockets, threads.max(1))
     }
 
     /// Per-thread flop rate when running `n` threads (SMT sharing).
@@ -293,6 +310,22 @@ mod tests {
         assert_eq!(*sweep.last().unwrap(), 64);
         assert_eq!(sweep[0], 1);
         assert!(sweep.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn socket_counts_and_topology_shapes() {
+        assert_eq!(MachineConfig::knl().sockets, 1);
+        assert_eq!(MachineConfig::thunderx().sockets, 1);
+        assert_eq!(MachineConfig::power8().sockets, 2);
+        assert_eq!(MachineConfig::power9().sockets, 2);
+        // power9 at its paper thread count: 2 sockets × 20 workers.
+        let topo = MachineConfig::power9().topology(40);
+        assert_eq!((topo.sockets(), topo.workers_per_socket()), (2, 20));
+        assert!(topo.capacity() >= 40);
+        assert_eq!(topo.socket_of(19), 0);
+        assert_eq!(topo.socket_of(20), 1);
+        // Single-socket machines stay flat.
+        assert!(MachineConfig::knl().topology(64).is_flat());
     }
 
     #[test]

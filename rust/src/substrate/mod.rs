@@ -16,6 +16,7 @@ pub mod spsc;
 pub mod spinlock;
 pub mod region;
 pub mod rng;
+pub mod topology;
 pub mod vtime;
 pub mod stats;
 
@@ -29,4 +30,5 @@ pub use signal::{ScanClaim, SignalDirectory};
 pub use spinlock::{SpinLock, SpinLockGuard};
 pub use spsc::{ConsumerGuard, SpscQueue};
 pub use stats::{Counter, Histogram};
+pub use topology::Topology;
 pub use vtime::{SimDuration, SimTime};

@@ -1,13 +1,14 @@
 //! Work-signal directory: a per-worker "dirty" flag directory with a
-//! hierarchical summary bitmap, so managers visit only the workers that
-//! actually produced requests.
+//! topology-aware two-level summary bitmap, so managers visit only the
+//! workers that actually produced requests — and stay on their own socket
+//! while doing it.
 //!
 //! Before this module, the DDAST callback (paper Listing 2) swept *every*
 //! worker's queue pair per round — an O(workers) walk plus one queue-token
 //! CAS pair per worker even when a single worker was producing. The
 //! directory turns that into O(dirty): workers mark themselves dirty with
 //! one cheap atomic on their own cache line when they enqueue a request,
-//! and managers scan a 64-way summary bitmap to find (and claim) only the
+//! and managers scan a socket-summary bitmap to find (and claim) only the
 //! marked workers. The direction follows Álvarez et al., *Advanced
 //! Synchronization Techniques for Task-based Runtime Systems*
 //! (arXiv:2105.07902), which removes exactly these residual shared-structure
@@ -15,15 +16,27 @@
 //!
 //! ## Structure
 //!
-//! Three levels, ground truth at the bottom:
+//! Three levels, ground truth at the bottom, laid out along a
+//! [`Topology`] (sockets × workers-per-socket):
 //!
 //! 1. **flags** — one cache-padded `AtomicBool` per worker. The worker's
 //!    [`raise`](SignalDirectory::raise) is a single `swap` on a line nobody
 //!    else writes in steady state (managers touch it only to claim).
-//! 2. **words** — a `u64` bitmap, bit = worker, 64 workers per word.
-//!    Written only on a flag *transition* (clean → dirty), so a worker
-//!    spamming requests RMWs its own flag line, not the shared word.
-//! 3. **summary** — one `u64`, bit = word with (possibly) dirty bits.
+//! 2. **words** — `u64` bitmaps laid out **per socket**: socket `s` owns
+//!    words `[s·wps, (s+1)·wps)` (`wps` = words per socket), bit = the
+//!    worker's index *within its socket*. Written only on a flag
+//!    *transition* (clean → dirty), so a worker spamming requests RMWs its
+//!    own flag line, not the shared word — and a raise never dirties a
+//!    word shared with another socket's workers, so steady-state raise
+//!    traffic stays inside the socket's cache domain.
+//! 3. **summary** — one `u64`, bit = **socket** with (possibly) dirty
+//!    workers. A sweep at 128+ workers loads this one word, then only the
+//!    dirty sockets' words — never a clean remote socket's line.
+//!
+//! [`SignalDirectory::new`] keeps the pre-topology layout exactly (one
+//! "socket" per 64-worker word, via [`Topology::word_grain`]);
+//! [`SignalDirectory::new_with_topology`] lays the directory out along a
+//! real machine shape.
 //!
 //! ## No-lost-wakeup protocol
 //!
@@ -39,29 +52,42 @@
 //!   the enqueued message.
 //!
 //! The summary level is maintained conservatively: a scanner that observes
-//! an empty word clears the summary bit and *re-checks* the word, restoring
-//! the bit if a racing raise re-populated it. A summary bit may therefore
-//! be transiently stale in either direction; scans tolerate false positives
-//! (they just load an empty word) and false negatives last at most one
-//! in-flight raise (the raiser re-sets the bit before its `raise` returns).
+//! an empty word clears the socket's summary bit and *re-checks every word
+//! of that socket*, restoring the bit if any is (or was re-)populated. A
+//! summary bit may therefore be transiently stale in either direction;
+//! scans tolerate false positives (they just load an empty word) and false
+//! negatives last at most one in-flight raise (the raiser re-sets the bit
+//! before its `raise` returns).
 //!
 //! ## Fairness
 //!
 //! [`scan_rotor`](SignalDirectory::scan_rotor) starts each scan at a
 //! rotating worker index (shared atomic rotor), so a noisy low-numbered
 //! worker cannot starve higher slots of manager attention.
+//! [`scan_near`](SignalDirectory::scan_near) rotates the same way but
+//! *within the caller's own socket*, so a manager drains local producers
+//! before crossing sockets (the scan still wraps the whole directory —
+//! locality biases the order, it never strands a remote worker).
 //!
 //! ## Parking (event-driven idle workers)
 //!
 //! A fully idle worker — nothing ready, nothing queued, dispatcher
 //! callbacks empty-handed — can *park* on the directory instead of
 //! sleeping blind: it announces itself in a parked-waiter bitmap
-//! ([`begin_park`](SignalDirectory::begin_park)), re-checks its wake
-//! condition, and blocks on its slot's [`Parker`]
-//! ([`park`](SignalDirectory::park)). Producers wake parked waiters
-//! through [`wake_parked`](SignalDirectory::wake_parked) — every
-//! [`raise`](SignalDirectory::raise) does this automatically, so the next
-//! enqueue after a worker parks wakes it.
+//! ([`begin_park`](SignalDirectory::begin_park), same per-socket word
+//! layout as the dirty words), re-checks its wake condition, and blocks on
+//! its slot's [`Parker`] ([`park`](SignalDirectory::park)). Producers wake
+//! parked waiters through [`wake_parked`](SignalDirectory::wake_parked) —
+//! every [`raise`](SignalDirectory::raise) does this automatically, so the
+//! next enqueue after a worker parks wakes it.
+//!
+//! Wake victim selection is **locality-biased and rotor-fair**:
+//! [`wake_parked_near`](SignalDirectory::wake_parked_near) scans the
+//! preferred worker's socket first (the socket whose deque just received
+//! the tasks), falling back to the remaining sockets in rotation — and a
+//! per-call wake rotor rotates the start *bit* inside each word, so
+//! repeated single-task wakes spread over a socket's parked workers
+//! instead of always reviving the lowest-numbered one.
 //!
 //! The no-lost-wakeup argument is the classic store-buffer (Dekker)
 //! pattern, closed with `SeqCst` fences:
@@ -77,44 +103,63 @@
 //! the new work (and cancels the park), or the producer's wake scan sees
 //! the parked bit (and unparks). A wake that races a cancelled park
 //! leaves a token in the `Parker`; the next park attempt consumes it and
-//! falls through to another re-check — spurious, never lost.
+//! falls through to another re-check — spurious, never lost. The argument
+//! is layout-independent: the per-socket words only change *which* lines
+//! the scan reads, not the fence pairing, and
+//! [`wake_all`](SignalDirectory::wake_all) unconditionally walks **every
+//! socket's every word**, so shutdown cannot strand a parked slot behind
+//! a locality preference.
 //!
 //! Two parking refinements serve the runtime's synchronization points:
 //! [`park_timeout`](SignalDirectory::park_timeout) bounds the wait where
 //! the runtime once slept blind (work visible the caller cannot act on),
 //! and [`wake_worker`](SignalDirectory::wake_worker) delivers a *targeted*
-//! wake to one slot — the taskwait child-completion wake edge, where the
-//! finalizer of a parent's last child knows exactly which worker is
-//! parked waiting for it.
+//! wake to one slot — the taskwait child-completion wake edge and the
+//! dependence-targeted wake edge, where the finalizer knows exactly which
+//! worker is parked waiting for it.
 
 use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use crate::substrate::deque::{CachePadded, ShardedCounter};
 use crate::substrate::park::Parker;
 use crate::substrate::stats::Counter;
+use crate::substrate::topology::Topology;
 
 const WORD_BITS: usize = 64;
 
-/// Per-worker dirty directory with a hierarchical summary bitmap.
+/// Per-worker dirty directory with a topology-aware two-level summary.
 /// See the module docs for the protocol.
 pub struct SignalDirectory {
     /// Ground truth: worker w is (possibly) dirty while `flags[w]` is set.
     flags: Box<[CachePadded<AtomicBool>]>,
-    /// Bitmap hint: bit `w % 64` of `words[w / 64]` mirrors `flags[w]`,
+    /// Bitmap hint, laid out per socket (see module docs §Structure),
     /// maintained on transitions only.
     words: Box<[CachePadded<AtomicU64>]>,
-    /// Bitmap hint over `words` (conservative; see module docs).
+    /// Bitmap hint over sockets: bit `s` set while socket `s` has
+    /// (possibly) dirty workers (conservative; see module docs).
     summary: CachePadded<AtomicU64>,
     /// Fairness rotor: successive scans start at successive workers.
     rotor: CachePadded<AtomicUsize>,
+    /// Wake fairness rotor: successive wake scans rotate the start socket
+    /// (when no preference is given) and the start bit within each word.
+    wake_rotor: CachePadded<AtomicUsize>,
+    /// Sockets in the layout (= summary bits in use).
+    sockets: usize,
+    /// Worker slots per socket.
+    slots_per_socket: usize,
+    /// `u64` words per socket (= ceil(slots_per_socket / 64)).
+    words_per_socket: usize,
     /// Raises (worker-side; sharded so the hot path stays on private cells).
     raises: ShardedCounter,
     /// Raises that transitioned clean → dirty and touched the shared word.
     promotions: ShardedCounter,
     /// Successful claims (manager-side).
     claims: Counter,
+    /// Worker words loaded by claiming scans past the summary gate — the
+    /// counter behind the "sweeps visit only dirty sockets" A/B.
+    word_visits: Counter,
     /// Parked-waiter bitmap: bit = worker between `begin_park` and its
-    /// wake/cancel. Same word layout as `words`.
+    /// wake/cancel. Same per-socket word layout as `words`.
     parked: Box<[CachePadded<AtomicU64>]>,
     /// One parking slot per worker (see module docs §Parking).
     parkers: Box<[CachePadded<Parker>]>,
@@ -125,19 +170,39 @@ pub struct SignalDirectory {
 }
 
 impl SignalDirectory {
-    /// A directory for `n` worker slots (1 ..= 4096).
+    /// A directory for `n` worker slots (1 ..= 4096), laid out at word
+    /// grain ([`Topology::word_grain`]) — the flat pre-topology layout:
+    /// one summary bit per 64-worker word.
     pub fn new(n: usize) -> Self {
-        assert!(n >= 1, "directory needs at least one worker slot");
         assert!(n <= WORD_BITS * WORD_BITS, "summary bitmap covers 4096 slots");
-        let nwords = n.div_ceil(WORD_BITS);
+        Self::new_with_topology(n, Topology::word_grain(n))
+    }
+
+    /// A directory for `n` worker slots laid out along `topo` (widened via
+    /// [`Topology::cover`] if the shape is smaller than `n` — directories
+    /// are sized by *slots*, which may exceed the worker count).
+    pub fn new_with_topology(n: usize, topo: Topology) -> Self {
+        assert!(n >= 1, "directory needs at least one worker slot");
+        let topo = topo.cover(n);
+        let slots_per_socket = topo.workers_per_socket();
+        // Trim trailing sockets the slot count never reaches.
+        let sockets = n.div_ceil(slots_per_socket).min(topo.sockets());
+        assert!(sockets <= WORD_BITS, "socket summary bitmap is one u64");
+        let words_per_socket = slots_per_socket.div_ceil(WORD_BITS);
+        let nwords = sockets * words_per_socket;
         SignalDirectory {
             flags: (0..n).map(|_| CachePadded::new(AtomicBool::new(false))).collect(),
             words: (0..nwords).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
             summary: CachePadded::new(AtomicU64::new(0)),
             rotor: CachePadded::new(AtomicUsize::new(0)),
+            wake_rotor: CachePadded::new(AtomicUsize::new(0)),
+            sockets,
+            slots_per_socket,
+            words_per_socket,
             raises: ShardedCounter::with_shards(n + 2),
             promotions: ShardedCounter::with_shards(n + 2),
             claims: Counter::new(),
+            word_visits: Counter::new(),
             parked: (0..nwords).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
             parkers: (0..n).map(|_| CachePadded::new(Parker::new())).collect(),
             parks: Counter::new(),
@@ -156,6 +221,53 @@ impl SignalDirectory {
         self.flags.is_empty()
     }
 
+    /// Sockets in the directory's layout.
+    #[inline]
+    pub fn sockets(&self) -> usize {
+        self.sockets
+    }
+
+    /// Socket of `worker` under the directory's layout.
+    #[inline]
+    pub fn socket_of(&self, worker: usize) -> usize {
+        (worker / self.slots_per_socket).min(self.sockets - 1)
+    }
+
+    /// Word index holding `worker`'s bit (layout introspection — the
+    /// topology A/B counts cross-socket shared words through this).
+    #[inline]
+    pub fn word_of(&self, worker: usize) -> usize {
+        self.locate(worker).0
+    }
+
+    /// Worker words in the directory.
+    #[inline]
+    pub fn word_count(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Worker words loaded by claiming scans past the summary gate.
+    #[inline]
+    pub fn word_visits(&self) -> u64 {
+        self.word_visits.get()
+    }
+
+    /// (word index, bit, socket) of `worker` under the per-socket layout.
+    #[inline]
+    fn locate(&self, worker: usize) -> (usize, u64, usize) {
+        let s = worker / self.slots_per_socket;
+        let local = worker - s * self.slots_per_socket;
+        let wi = s * self.words_per_socket + local / WORD_BITS;
+        (wi, 1u64 << (local % WORD_BITS), s)
+    }
+
+    /// Worker index of bit `b` in word `wi` (inverse of `locate`).
+    #[inline]
+    fn worker_at(&self, wi: usize, b: usize) -> usize {
+        let s = wi / self.words_per_socket;
+        s * self.slots_per_socket + (wi % self.words_per_socket) * WORD_BITS + b
+    }
+
     /// Mark `worker` dirty. Callable from any thread (re-raising a worker
     /// whose budgeted drain left messages behind is done by managers); the
     /// hot path — the worker signalling its own enqueue — is one `AcqRel`
@@ -165,7 +277,9 @@ impl SignalDirectory {
     ///
     /// The wake check runs on *every* raise, not only on clean→dirty
     /// promotions: a stale-dirty flag (raised, queue already drained) must
-    /// not swallow the wakeup for a fresh message behind it.
+    /// not swallow the wakeup for a fresh message behind it. The wake
+    /// prefers the raiser's own socket — the manager it revives drains the
+    /// queue without crossing sockets.
     #[inline]
     pub fn raise(&self, worker: usize) {
         debug_assert!(worker < self.flags.len());
@@ -173,13 +287,12 @@ impl SignalDirectory {
         if !self.flags[worker].swap(true, Ordering::AcqRel) {
             // Clean → dirty transition: propagate up the hierarchy.
             self.promotions.inc();
-            let wi = worker / WORD_BITS;
-            let bit = 1u64 << (worker % WORD_BITS);
+            let (wi, bit, s) = self.locate(worker);
             if self.words[wi].fetch_or(bit, Ordering::AcqRel) == 0 {
-                self.summary.fetch_or(1u64 << wi, Ordering::AcqRel);
+                self.summary.fetch_or(1u64 << s, Ordering::AcqRel);
             }
         }
-        self.wake_parked(1);
+        self.wake_parked_near(1, Some(worker));
     }
 
     /// Is `worker` currently marked dirty? (Racy peek, for telemetry and
@@ -195,8 +308,7 @@ impl SignalDirectory {
     /// worker a queue drain.
     pub fn try_claim(&self, worker: usize) -> bool {
         debug_assert!(worker < self.flags.len());
-        let wi = worker / WORD_BITS;
-        let bit = 1u64 << (worker % WORD_BITS);
+        let (wi, bit, _) = self.locate(worker);
         self.words[wi].fetch_and(!bit, Ordering::AcqRel);
         if self.flags[worker].swap(false, Ordering::AcqRel) {
             self.claims.inc();
@@ -208,14 +320,16 @@ impl SignalDirectory {
 
     /// One scan over the directory starting at `start`, claiming each dirty
     /// worker as it is yielded. The iterator visits every slot position at
-    /// most once (one full rotation), touching only words the summary marks.
+    /// most once (one full rotation), touching only words whose socket the
+    /// summary marks dirty.
     pub fn scan_from(&self, start: usize) -> ScanClaim<'_> {
         let n = self.flags.len();
         let start = start % n;
+        let (start_word, bit, _) = self.locate(start);
         ScanClaim {
             dir: self,
-            start_word: start / WORD_BITS,
-            start_bit: start % WORD_BITS,
+            start_word,
+            start_bit: bit.trailing_zeros() as usize,
             nwords: self.words.len(),
             visit: 0,
             cur_word: 0,
@@ -228,6 +342,20 @@ impl SignalDirectory {
     pub fn scan_rotor(&self) -> ScanClaim<'_> {
         let start = self.rotor.fetch_add(1, Ordering::Relaxed) % self.flags.len();
         self.scan_from(start)
+    }
+
+    /// [`scan_from`](SignalDirectory::scan_from) starting inside
+    /// `worker`'s own socket (rotor-rotated within it), so a manager
+    /// drains same-socket producers before crossing sockets. The scan
+    /// still wraps the whole directory — locality biases the order, it
+    /// never strands a remote worker.
+    pub fn scan_near(&self, worker: usize) -> ScanClaim<'_> {
+        let n = self.flags.len();
+        let s = self.socket_of(worker.min(n - 1));
+        let base = s * self.slots_per_socket;
+        let span = self.slots_per_socket.min(n - base).max(1);
+        let off = self.rotor.fetch_add(1, Ordering::Relaxed) % span;
+        self.scan_from(base + off)
     }
 
     /// First raised worker at index ≥ `start` (flag sweep — the exact
@@ -261,8 +389,7 @@ impl SignalDirectory {
     #[must_use = "a false return means another thread owns the slot; parking anyway double-parks its Parker"]
     pub fn begin_park(&self, worker: usize) -> bool {
         debug_assert!(worker < self.flags.len());
-        let wi = worker / WORD_BITS;
-        let bit = 1u64 << (worker % WORD_BITS);
+        let (wi, bit, _) = self.locate(worker);
         let had = self.parked[wi].fetch_or(bit, Ordering::SeqCst) & bit != 0;
         fence(Ordering::SeqCst);
         !had
@@ -273,8 +400,7 @@ impl SignalDirectory {
     /// slot's `Parker`; the next `park` consumes it and returns immediately
     /// — one spurious loop, never a lost wakeup.
     pub fn cancel_park(&self, worker: usize) {
-        let wi = worker / WORD_BITS;
-        let bit = 1u64 << (worker % WORD_BITS);
+        let (wi, bit, _) = self.locate(worker);
         self.parked[wi].fetch_and(!bit, Ordering::AcqRel);
     }
 
@@ -307,20 +433,21 @@ impl SignalDirectory {
     }
 
     /// Targeted wake for `worker` — the taskwait **child-completion wake
-    /// edge** (`RuntimeShared::finalize_task` → a parent parked in
-    /// `taskwait_on`). Issues the producer-side `SeqCst` fence, claims the
-    /// worker's parked bit if set, and unparks the slot's [`Parker`]
-    /// **unconditionally**: an unclaimed wake merely deposits a token the
-    /// slot's next park attempt consumes — one spurious re-check, never a
-    /// lost wakeup (the waiter it raced is by then awake and re-checking).
-    /// Returns whether a committed announcement was claimed.
+    /// edge** and the **dependence-targeted wake edge**
+    /// (`RuntimeShared::finalize_task` → a waiter parked on a parent's
+    /// children or a predecessor's completion). Issues the producer-side
+    /// `SeqCst` fence, claims the worker's parked bit if set, and unparks
+    /// the slot's [`Parker`] **unconditionally**: an unclaimed wake merely
+    /// deposits a token the slot's next park attempt consumes — one
+    /// spurious re-check, never a lost wakeup (the waiter it raced is by
+    /// then awake and re-checking). Returns whether a committed
+    /// announcement was claimed.
     pub fn wake_worker(&self, worker: usize) -> bool {
         if worker >= self.parkers.len() {
             return false;
         }
         fence(Ordering::SeqCst);
-        let wi = worker / WORD_BITS;
-        let bit = 1u64 << (worker % WORD_BITS);
+        let (wi, bit, _) = self.locate(worker);
         let claimed = self.parked[wi].fetch_and(!bit, Ordering::AcqRel) & bit != 0;
         self.parkers[worker].unpark();
         if claimed {
@@ -329,36 +456,83 @@ impl SignalDirectory {
         claimed
     }
 
-    /// Wake up to `n` parked workers. Issues the producer-side `SeqCst`
-    /// fence (module docs §Parking) before reading the bitmap, so callers
-    /// only need to have *already published* the work being signalled.
-    /// Called by [`raise`](SignalDirectory::raise) for message traffic;
-    /// ready-task producers and shutdown call it directly. Returns the
-    /// number of workers woken.
+    /// Wake up to `n` parked workers with no socket preference (the start
+    /// socket rotates per call). See
+    /// [`wake_parked_near`](SignalDirectory::wake_parked_near).
     pub fn wake_parked(&self, n: usize) -> usize {
+        self.wake_parked_near(n, None)
+    }
+
+    /// Wake up to `n` parked workers, preferring `prefer`'s socket.
+    /// Issues the producer-side `SeqCst` fence (module docs §Parking)
+    /// before reading the bitmap, so callers only need to have *already
+    /// published* the work being signalled. Called by
+    /// [`raise`](SignalDirectory::raise) for message traffic (preferring
+    /// the raiser's socket); ready-task producers pass the worker whose
+    /// deque received the tasks, shutdown wakes all.
+    ///
+    /// Victim selection is two-level and rotor-fair: the preferred socket
+    /// (or, with no preference, a per-call rotating start socket) is
+    /// scanned first, remaining sockets in rotation after it — and inside
+    /// each word the start *bit* rotates per call, so repeated wakes
+    /// don't always revive a socket's lowest-numbered worker. Returns the
+    /// number of workers woken.
+    pub fn wake_parked_near(&self, n: usize, prefer: Option<usize>) -> usize {
+        if n == 0 {
+            return 0;
+        }
         fence(Ordering::SeqCst);
+        let rot = self.wake_rotor.fetch_add(1, Ordering::Relaxed);
+        let start_bit = (rot % WORD_BITS) as u32;
+        let start_socket = match prefer {
+            Some(w) if w < self.flags.len() => self.socket_of(w),
+            _ => rot % self.sockets,
+        };
         let mut woken = 0;
-        for (wi, word) in self.parked.iter().enumerate() {
+        for k in 0..self.sockets {
             if woken >= n {
                 break;
             }
-            let mut val = word.load(Ordering::Acquire);
-            while val != 0 && woken < n {
-                let bit = val & val.wrapping_neg();
-                val &= !bit;
-                // Claim the bit; a racing waker may have beaten us to it.
-                if word.fetch_and(!bit, Ordering::AcqRel) & bit != 0 {
-                    let w = wi * WORD_BITS + bit.trailing_zeros() as usize;
-                    self.parkers[w].unpark();
-                    self.park_wakes.inc();
-                    woken += 1;
+            let s = (start_socket + k) % self.sockets;
+            for j in 0..self.words_per_socket {
+                if woken >= n {
+                    break;
                 }
+                woken += self.wake_in_word(s * self.words_per_socket + j, start_bit, n - woken);
             }
         }
         woken
     }
 
-    /// Wake every parked worker (shutdown, quiescence edges).
+    /// Claim-and-unpark parked bits of word `wi`, starting at `start_bit`
+    /// and proceeding cyclically, up to `budget` wakes.
+    fn wake_in_word(&self, wi: usize, start_bit: u32, budget: usize) -> usize {
+        let word = &self.parked[wi];
+        let mut woken = 0;
+        while woken < budget {
+            let val = word.load(Ordering::Acquire);
+            if val == 0 {
+                break;
+            }
+            let idx = (val.rotate_right(start_bit).trailing_zeros() + start_bit)
+                % WORD_BITS as u32;
+            let bit = 1u64 << idx;
+            // Claim the bit; a racing waker may have beaten us to it (the
+            // re-load then sees it cleared and picks another or stops).
+            if word.fetch_and(!bit, Ordering::AcqRel) & bit != 0 {
+                let w = self.worker_at(wi, idx as usize);
+                self.parkers[w].unpark();
+                self.park_wakes.inc();
+                woken += 1;
+            }
+        }
+        woken
+    }
+
+    /// Wake every parked worker (shutdown, quiescence edges). Traverses
+    /// **both** directory levels unconditionally — every socket, every
+    /// word — so an oversubscribed or locality-laid-out directory can
+    /// never strand a parked slot.
     pub fn wake_all(&self) -> usize {
         self.wake_parked(usize::MAX)
     }
@@ -399,7 +573,7 @@ impl Iterator for ScanClaim<'_> {
             while self.cur_mask != 0 {
                 let b = self.cur_mask.trailing_zeros() as usize;
                 self.cur_mask &= self.cur_mask - 1;
-                let w = self.cur_word * WORD_BITS + b;
+                let w = self.dir.worker_at(self.cur_word, b);
                 if w < self.dir.len() && self.dir.try_claim(w) {
                     return Some(w);
                 }
@@ -421,20 +595,27 @@ impl Iterator for ScanClaim<'_> {
             if filter == 0 {
                 continue;
             }
-            let sbit = 1u64 << wi;
+            let socket = wi / self.dir.words_per_socket;
+            let sbit = 1u64 << socket;
             if self.dir.summary.load(Ordering::Acquire) & sbit == 0 {
                 continue;
             }
+            self.dir.word_visits.inc();
             let val = self.dir.words[wi].load(Ordering::Acquire);
             if val == 0 {
-                // Word drained: drop the summary hint, then re-check for a
-                // raise that landed in between and restore the hint.
+                // Word drained: drop the socket's summary hint, then
+                // re-check *every word of the socket* for a raise that
+                // landed in between and restore the hint.
                 self.dir.summary.fetch_and(!sbit, Ordering::AcqRel);
-                if self.dir.words[wi].load(Ordering::Acquire) != 0 {
+                let base = socket * self.dir.words_per_socket;
+                let repopulated = (base..base + self.dir.words_per_socket)
+                    .any(|k| self.dir.words[k].load(Ordering::Acquire) != 0);
+                if repopulated {
                     self.dir.summary.fetch_or(sbit, Ordering::AcqRel);
                 }
                 continue;
             }
+            self.cur_word = wi;
             self.cur_mask = val & filter;
         }
     }
@@ -495,6 +676,54 @@ mod tests {
     }
 
     #[test]
+    fn scan_rotation_orders_across_sockets() {
+        // 3 sockets × 4 workers: worker order must survive the per-socket
+        // word layout (socket-major words = worker order).
+        let dir = SignalDirectory::new_with_topology(12, Topology::new(3, 4));
+        assert_eq!(dir.sockets(), 3);
+        assert_eq!(dir.word_count(), 3);
+        for w in 0..12 {
+            dir.raise(w);
+        }
+        let got: Vec<usize> = dir.scan_from(6).collect();
+        assert_eq!(got, vec![6, 7, 8, 9, 10, 11, 0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn scan_near_starts_in_own_socket_and_wraps() {
+        let dir = SignalDirectory::new_with_topology(12, Topology::new(3, 4));
+        for w in 0..12 {
+            dir.raise(w);
+        }
+        // Worker 5 lives in socket 1 (workers 4..8): the scan must begin
+        // there, and still reach every other socket's workers.
+        let got: Vec<usize> = dir.scan_near(5).collect();
+        assert_eq!(got.len(), 12, "locality bias must not strand anyone");
+        assert!(
+            (4..8).contains(&got[0]),
+            "scan_near(5) started at {} — outside socket 1",
+            got[0]
+        );
+    }
+
+    #[test]
+    fn two_level_scan_visits_only_dirty_socket_words() {
+        // 4 sockets × 32 workers (the acceptance shape): dirty exactly one
+        // socket, and the claiming scan must load exactly that socket's
+        // word — not all four.
+        let dir = SignalDirectory::new_with_topology(128, Topology::new(4, 32));
+        assert_eq!(dir.word_count(), 4);
+        for w in 64..96 {
+            dir.raise(w); // socket 2 only
+        }
+        let before = dir.word_visits();
+        let got: Vec<usize> = dir.scan_from(0).collect();
+        assert_eq!(got.len(), 32);
+        let visited = dir.word_visits() - before;
+        assert_eq!(visited, 1, "only the dirty socket's word is loaded");
+    }
+
+    #[test]
     fn rotor_advances_between_scans() {
         let dir = SignalDirectory::new(4);
         dir.raise(0);
@@ -519,19 +748,41 @@ mod tests {
         const PER: u64 = 20_000;
         const PRODUCERS: usize = 3;
         let dir = Arc::new(SignalDirectory::new(N));
+        run_raise_claim_stress(dir, N, PER, PRODUCERS);
+    }
+
+    /// Satellite port: the same store-buffer-proof stress at 128 workers
+    /// laid out across 4 socket boundaries — raises and claims cross the
+    /// per-socket words and the socket summary on every path.
+    #[test]
+    fn concurrent_raise_claim_loses_nothing_two_level_128() {
+        const N: usize = 128;
+        const PER: u64 = 15_000;
+        const PRODUCERS: usize = 4;
+        let dir = Arc::new(SignalDirectory::new_with_topology(N, Topology::new(4, 32)));
+        assert_eq!(dir.sockets(), 4);
+        run_raise_claim_stress(dir, N, PER, PRODUCERS);
+    }
+
+    fn run_raise_claim_stress(
+        dir: Arc<SignalDirectory>,
+        n: usize,
+        per: u64,
+        producers: usize,
+    ) {
         let pending: Arc<Vec<StdAtomicU64>> =
-            Arc::new((0..N).map(|_| StdAtomicU64::new(0)).collect());
+            Arc::new((0..n).map(|_| StdAtomicU64::new(0)).collect());
         let drained = Arc::new(StdAtomicU64::new(0));
-        let live = Arc::new(StdAtomicU64::new(PRODUCERS as u64));
-        let total = PER * PRODUCERS as u64;
+        let live = Arc::new(StdAtomicU64::new(producers as u64));
+        let total = per * producers as u64;
         std::thread::scope(|s| {
-            for p in 0..PRODUCERS {
+            for p in 0..producers {
                 let dir = Arc::clone(&dir);
                 let pending = Arc::clone(&pending);
                 let live = Arc::clone(&live);
                 s.spawn(move || {
-                    for i in 0..PER {
-                        let w = ((i.wrapping_mul(2654435761) >> 3) as usize + p * 31) % N;
+                    for i in 0..per {
+                        let w = ((i.wrapping_mul(2654435761) >> 3) as usize + p * 31) % n;
                         pending[w].fetch_add(1, Ordering::Release);
                         dir.raise(w);
                     }
@@ -615,6 +866,88 @@ mod tests {
     }
 
     #[test]
+    fn wake_parked_prefers_the_given_socket() {
+        let dir = SignalDirectory::new_with_topology(32, Topology::new(4, 8));
+        // One parked worker per socket.
+        for w in [2usize, 10, 18, 26] {
+            assert!(dir.begin_park(w));
+        }
+        // Preferring worker 19's socket (socket 2) must wake its parked
+        // neighbour first, regardless of the rotor state.
+        for _ in 0..8 {
+            assert_eq!(dir.wake_parked_near(1, Some(19)), 1);
+            for w in [2usize, 10, 26] {
+                assert!(!dir.begin_park(w), "remote-socket slot {w} was woken");
+            }
+            // The socket-2 slot's bit was the one claimed: re-announce it
+            // for the next round (its Parker holds the deposited tokens).
+            assert!(dir.begin_park(18));
+        }
+        dir.wake_all();
+    }
+
+    #[test]
+    fn wake_rotor_spreads_wakes_within_a_socket() {
+        // Satellite: repeated wakes must not always revive the socket's
+        // lowest-numbered worker. Park all 8 slots of a one-socket
+        // directory, wake one at a time, and record which slot each wake
+        // picked (the slot whose re-announce now succeeds).
+        let dir = SignalDirectory::new_with_topology(8, Topology::new(1, 8));
+        let mut picked = Vec::new();
+        for _ in 0..8 {
+            for w in 0..8 {
+                let _ = dir.begin_park(w); // idempotent for already-parked
+            }
+            assert_eq!(dir.wake_parked(1), 1);
+            let woken = (0..8)
+                .find(|&w| {
+                    if dir.begin_park(w) {
+                        dir.cancel_park(w);
+                        true
+                    } else {
+                        false
+                    }
+                })
+                .expect("exactly one slot was woken");
+            picked.push(woken);
+        }
+        dir.wake_all();
+        let distinct: std::collections::HashSet<_> = picked.iter().collect();
+        assert!(
+            distinct.len() >= 2,
+            "wake rotor never rotated: picked {picked:?}"
+        );
+    }
+
+    /// Satellite regression: an oversubscribed two-level directory with
+    /// 128 workers parked across 4 sockets — one `wake_all` sweep (the
+    /// `request_shutdown` path) must traverse both levels and free every
+    /// slot; a stranded parked worker hangs (and times out) the join.
+    #[test]
+    fn wake_all_frees_128_parked_workers_across_sockets() {
+        const N: usize = 128;
+        let dir = Arc::new(SignalDirectory::new_with_topology(N, Topology::new(4, 32)));
+        std::thread::scope(|s| {
+            for w in 0..N {
+                let dir = Arc::clone(&dir);
+                s.spawn(move || {
+                    assert!(dir.begin_park(w));
+                    dir.park(w); // a wake_all that misses this slot hangs here
+                });
+            }
+            let mut woken = 0usize;
+            while woken < N {
+                woken += dir.wake_all();
+                std::thread::yield_now();
+            }
+        });
+        assert_eq!(dir.parked_count(), 0);
+        let (parks, wakes) = dir.park_stats();
+        assert_eq!(parks, N as u64);
+        assert_eq!(wakes, N as u64);
+    }
+
+    #[test]
     fn begin_park_claims_the_announcement() {
         let dir = SignalDirectory::new(4);
         assert!(dir.begin_park(2), "first announcement claims the slot");
@@ -659,34 +992,46 @@ mod tests {
     /// re-checks then commits. A lost wakeup hangs (and times out) here.
     #[test]
     fn park_concurrent_with_raise_always_wakes() {
-        const ROUNDS: u64 = 10_000;
-        let dir = Arc::new(SignalDirectory::new(4));
+        run_park_race(SignalDirectory::new(4), 0, 10_000);
+    }
+
+    /// Satellite port: the same race at 128 workers across 4 sockets, with
+    /// the consumer on the *last* socket's last slot — the wake must cross
+    /// the two-level layout's socket boundary every round.
+    #[test]
+    fn park_concurrent_with_raise_always_wakes_two_level_128() {
+        let dir = SignalDirectory::new_with_topology(128, Topology::new(4, 32));
+        run_park_race(dir, 127, 10_000);
+    }
+
+    fn run_park_race(dir: SignalDirectory, slot: usize, rounds: u64) {
+        let dir = Arc::new(dir);
         let work = Arc::new(StdAtomicU64::new(0));
         let done = Arc::new(StdAtomicU64::new(0));
         let (dir2, work2, done2) = (Arc::clone(&dir), Arc::clone(&work), Arc::clone(&done));
         let consumer = std::thread::spawn(move || {
             let mut got = 0u64;
-            while got < ROUNDS {
+            while got < rounds {
                 let n = work2.swap(0, Ordering::AcqRel);
                 if n > 0 {
                     got += n;
-                    dir2.try_claim(0);
+                    dir2.try_claim(slot);
                     done2.store(got, Ordering::Release);
                     continue;
                 }
-                assert!(dir2.begin_park(0));
+                assert!(dir2.begin_park(slot));
                 // Re-check after the announce (plain load: the fences in
                 // begin_park / wake_parked close the store-buffer race).
                 if work2.load(Ordering::Relaxed) == 0 {
-                    dir2.park(0);
+                    dir2.park(slot);
                 } else {
-                    dir2.cancel_park(0);
+                    dir2.cancel_park(slot);
                 }
             }
         });
-        for i in 0..ROUNDS {
+        for i in 0..rounds {
             work.fetch_add(1, Ordering::AcqRel);
-            dir.raise(0); // publish-then-wake
+            dir.raise(slot); // publish-then-wake
             while done.load(Ordering::Acquire) < i + 1 {
                 std::thread::yield_now();
             }
@@ -695,7 +1040,7 @@ mod tests {
         let (parks, wakes) = dir.park_stats();
         // Not every round parks (the consumer may see the work before
         // announcing), but any committed park must have been woken.
-        assert!(parks <= ROUNDS + 1);
+        assert!(parks <= rounds + 1);
         assert!(wakes >= parks.saturating_sub(1), "parks {parks} vs wakes {wakes}");
     }
 }

@@ -1,0 +1,233 @@
+//! Machine topology descriptor: sockets × workers-per-socket.
+//!
+//! The paper's evaluation machines (Table 1 — up to the 64-core KNL, and
+//! the two-socket Power8+/Power9 nodes) are exactly where flat shared
+//! structures stop scaling: a directory word or a steal victim on the
+//! wrong socket costs a cross-socket cache-line bounce per touch. This
+//! descriptor is the one place the runtime learns the socket shape; the
+//! substrate threads it through the hot paths:
+//!
+//! * [`SignalDirectory`](crate::substrate::SignalDirectory) lays its
+//!   worker-bit words out **per socket** (two-level: socket summary word →
+//!   per-worker bits) so sweeps and wake scans only touch dirty sockets;
+//! * `ReadyPools::steal` tries same-socket victims for a full round before
+//!   touching a remote deque;
+//! * ready-push wake sites prefer a parked worker on the socket whose
+//!   deque received the tasks.
+//!
+//! Sources, in priority order: an explicit
+//! `TaskSystem::builder().topology(..)` (tests, the `sim/` machine
+//! models), the `DDAST_TOPOLOGY=SxW` environment override (CI forces
+//! multi-socket shapes on single-socket runners this way), best-effort OS
+//! detection (Linux sysfs NUMA nodes), and finally a flat single-socket
+//! fallback. The descriptor is plain copyable data — no atomics, no
+//! detection on any hot path.
+
+/// Sockets × workers-per-socket. See the module docs for how it is
+/// obtained and where it steers the runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    sockets: usize,
+    workers_per_socket: usize,
+}
+
+impl Topology {
+    /// Socket count cap: the directory's socket-summary bitmap is one
+    /// `u64` word.
+    pub const MAX_SOCKETS: usize = 64;
+
+    /// A shape of `sockets` sockets with `workers_per_socket` workers
+    /// each. Both are clamped to at least 1; sockets to at most
+    /// [`MAX_SOCKETS`](Topology::MAX_SOCKETS).
+    pub fn new(sockets: usize, workers_per_socket: usize) -> Self {
+        Topology {
+            sockets: sockets.clamp(1, Self::MAX_SOCKETS),
+            workers_per_socket: workers_per_socket.max(1),
+        }
+    }
+
+    /// Single-socket shape covering `workers` — the "no topology" policy
+    /// (every victim equidistant, one summary bit over everything).
+    pub fn flat(workers: usize) -> Self {
+        Topology::new(1, workers.max(1))
+    }
+
+    /// Shape whose sockets coincide with the directory's 64-bit words —
+    /// reproduces the pre-topology directory layout exactly (64 workers
+    /// per summary bit). [`SignalDirectory::new`] uses this, so code that
+    /// never mentions topology keeps its old layout and old behaviour.
+    ///
+    /// [`SignalDirectory::new`]: crate::substrate::SignalDirectory::new
+    pub fn word_grain(workers: usize) -> Self {
+        Topology::new(workers.max(1).div_ceil(64), 64)
+    }
+
+    /// Distribute `workers` over `sockets` as evenly as possible (never
+    /// more sockets than workers).
+    pub fn with_workers(sockets: usize, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let sockets = sockets.clamp(1, Self::MAX_SOCKETS).min(workers);
+        Topology::new(sockets, workers.div_ceil(sockets))
+    }
+
+    /// Detect the shape for `workers` worker slots: the
+    /// `DDAST_TOPOLOGY=SxW` environment override first (widened to cover
+    /// `workers`), then the OS, then flat.
+    pub fn detect(workers: usize) -> Self {
+        if let Ok(spec) = std::env::var("DDAST_TOPOLOGY") {
+            if let Some(t) = Self::parse(&spec) {
+                return t.cover(workers);
+            }
+        }
+        match Self::os_socket_count() {
+            Some(nodes) if nodes >= 2 => Topology::with_workers(nodes, workers),
+            _ => Topology::flat(workers),
+        }
+    }
+
+    /// Parse a `SxW` shape spec (e.g. `4x8` = 4 sockets × 8 workers).
+    /// Returns `None` on anything malformed — detection then falls
+    /// through, it never panics on a bad environment.
+    pub fn parse(spec: &str) -> Option<Self> {
+        let (s, w) = spec.trim().split_once(['x', 'X'])?;
+        let sockets: usize = s.trim().parse().ok()?;
+        let per: usize = w.trim().parse().ok()?;
+        if sockets == 0 || per == 0 {
+            return None;
+        }
+        Some(Topology::new(sockets, per))
+    }
+
+    /// Best-effort NUMA-node count (Linux sysfs). `None` anywhere the
+    /// directory is absent or unreadable.
+    fn os_socket_count() -> Option<usize> {
+        let entries = std::fs::read_dir("/sys/devices/system/node").ok()?;
+        let nodes = entries
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                name.strip_prefix("node")
+                    .is_some_and(|d| !d.is_empty() && d.bytes().all(|b| b.is_ascii_digit()))
+            })
+            .count();
+        (nodes >= 1).then_some(nodes)
+    }
+
+    /// Same socket count, widened (if needed) so `workers` slots all map
+    /// to a valid socket. Directories size themselves for *slots* (which
+    /// may exceed the worker count — the CentralDast DAS slot), so every
+    /// consumer normalizes through this.
+    pub fn cover(self, workers: usize) -> Self {
+        if workers <= self.capacity() {
+            self
+        } else {
+            Topology::new(self.sockets, workers.div_ceil(self.sockets))
+        }
+    }
+
+    /// Socket count.
+    #[inline]
+    pub fn sockets(&self) -> usize {
+        self.sockets
+    }
+
+    /// Workers per socket.
+    #[inline]
+    pub fn workers_per_socket(&self) -> usize {
+        self.workers_per_socket
+    }
+
+    /// Total worker slots the shape covers.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.sockets * self.workers_per_socket
+    }
+
+    /// Socket of `worker` (out-of-shape slots clamp to the last socket).
+    #[inline]
+    pub fn socket_of(&self, worker: usize) -> usize {
+        (worker / self.workers_per_socket).min(self.sockets - 1)
+    }
+
+    /// Worker-index range of `socket`, clipped to `n` total workers.
+    #[inline]
+    pub fn socket_range(&self, socket: usize, n: usize) -> std::ops::Range<usize> {
+        let lo = (socket * self.workers_per_socket).min(n);
+        let hi = if socket + 1 == self.sockets {
+            n // last socket absorbs clamped overflow slots
+        } else {
+            ((socket + 1) * self.workers_per_socket).min(n)
+        };
+        lo..hi
+    }
+
+    /// One socket — locality policies degenerate to the flat behaviour.
+    #[inline]
+    pub fn is_flat(&self) -> bool {
+        self.sockets == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_socket_mapping() {
+        let t = Topology::new(4, 8);
+        assert_eq!((t.sockets(), t.workers_per_socket(), t.capacity()), (4, 8, 32));
+        assert_eq!(t.socket_of(0), 0);
+        assert_eq!(t.socket_of(7), 0);
+        assert_eq!(t.socket_of(8), 1);
+        assert_eq!(t.socket_of(31), 3);
+        assert_eq!(t.socket_of(999), 3, "overflow clamps to the last socket");
+        assert_eq!(t.socket_range(1, 32), 8..16);
+        assert_eq!(t.socket_range(3, 30), 24..30, "last range clipped to n");
+        assert!(!t.is_flat());
+        assert!(Topology::flat(16).is_flat());
+    }
+
+    #[test]
+    fn word_grain_matches_the_flat_directory_layout() {
+        assert_eq!(Topology::word_grain(8), Topology::new(1, 64));
+        assert_eq!(Topology::word_grain(64), Topology::new(1, 64));
+        assert_eq!(Topology::word_grain(65), Topology::new(2, 64));
+        assert_eq!(Topology::word_grain(130), Topology::new(3, 64));
+        assert_eq!(Topology::word_grain(4096), Topology::new(64, 64));
+    }
+
+    #[test]
+    fn cover_widens_only_when_needed() {
+        let t = Topology::new(4, 8);
+        assert_eq!(t.cover(32), t);
+        assert_eq!(t.cover(3), t);
+        let wide = t.cover(33); // oversubscribed: one extra park slot
+        assert_eq!((wide.sockets(), wide.workers_per_socket()), (4, 9));
+        assert_eq!(wide.socket_of(33), 3);
+    }
+
+    #[test]
+    fn with_workers_distributes_evenly() {
+        let t = Topology::with_workers(2, 7);
+        assert_eq!((t.sockets(), t.workers_per_socket()), (2, 4));
+        let one = Topology::with_workers(8, 3);
+        assert_eq!(one.sockets(), 3, "never more sockets than workers");
+    }
+
+    #[test]
+    fn parse_accepts_sxw_and_rejects_garbage() {
+        assert_eq!(Topology::parse("4x8"), Some(Topology::new(4, 8)));
+        assert_eq!(Topology::parse(" 2X16 "), Some(Topology::new(2, 16)));
+        assert_eq!(Topology::parse("0x8"), None);
+        assert_eq!(Topology::parse("4x"), None);
+        assert_eq!(Topology::parse("abc"), None);
+        assert_eq!(Topology::parse(""), None);
+    }
+
+    #[test]
+    fn clamps_to_summary_word() {
+        let t = Topology::new(1_000, 1);
+        assert_eq!(t.sockets(), Topology::MAX_SOCKETS);
+    }
+}

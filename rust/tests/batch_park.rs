@@ -131,6 +131,68 @@ fn parking_no_lost_wakeup_via_queues() {
     assert!(wakes >= parks, "every committed park was woken (parks={parks} wakes={wakes})");
 }
 
+/// The 128-worker, cross-socket port of `parking_no_lost_wakeup_via_queues`
+/// (satellite of the topology plane): the queue system is laid out on a
+/// 4 × 32 [`Topology`], so producers, their directory words and the
+/// consumer's parked bit live in *different sockets* of the two-level
+/// directory — the raise-side wake must traverse the socket summary to
+/// find the parked slot, and the store-buffer fence protocol must hold
+/// across the per-socket word split. One real thread per worker slot (128
+/// producers), consumer parked on slot 0 in socket 0, traffic raised from
+/// every socket. A lost wakeup hangs (times out) the test.
+#[test]
+fn parking_no_lost_wakeup_via_queues_128_workers_cross_socket() {
+    use ddast::substrate::Topology;
+
+    const WORKERS: usize = 128;
+    const PER: u64 = 50;
+    let qs = Arc::new(QueueSystem::with_topology(WORKERS, WORKERS, Topology::new(4, 32)));
+    assert_eq!(qs.signals().sockets(), 4, "the directory took the injected shape");
+    let total = WORKERS as u64 * PER;
+    std::thread::scope(|s| {
+        for w in 0..WORKERS {
+            let qs = Arc::clone(&qs);
+            s.spawn(move || {
+                for i in 0..PER {
+                    qs.push_submit(w, mk(w as u64 * PER + i + 1));
+                }
+            });
+        }
+        let qs2 = Arc::clone(&qs);
+        s.spawn(move || {
+            let mut drained = 0u64;
+            let mut batch = MsgBatch::new();
+            while drained < total {
+                let mut got = 0u64;
+                for w in qs2.signals().scan_rotor() {
+                    loop {
+                        let n = qs2.workers[w].drain_batch(64, &mut batch);
+                        if n == 0 {
+                            break;
+                        }
+                        qs2.messages_processed(n as u64);
+                        got += n as u64;
+                    }
+                }
+                drained += got;
+                if got == 0 && drained < total {
+                    let dir = qs2.signals();
+                    assert!(dir.begin_park(0));
+                    if qs2.pending() == 0 {
+                        dir.park(0);
+                    } else {
+                        dir.cancel_park(0);
+                    }
+                }
+            }
+        });
+    });
+    assert_eq!(qs.pending_exact(), 0);
+    assert!(qs.signals_quiescent());
+    let (parks, wakes) = qs.signals().park_stats();
+    assert!(wakes >= parks, "every committed park was woken (parks={parks} wakes={wakes})");
+}
+
 /// End-to-end: a DDAST pool whose workers actually park between bursts
 /// still drains every burst, stays quiescent, and records park activity.
 /// Bursts repeat until parking is observed (idle gaps on a loaded CI box

@@ -209,6 +209,39 @@ fn contention_ab_smoke_and_json() {
     }
     assert_eq!(replay.new.acquisitions, 0);
 
+    // Topology A/B at a 2-socket and the acceptance 4-socket/32-worker
+    // shape (plus a >64-worker shape inside the drill's own unit test for
+    // the multi-word sweep contrast). All three claims are structural:
+    // sweeps load only dirty-socket words, socket-ordered steals stay
+    // local while local work exists, dependence-targeted wakes never
+    // broadcast.
+    let topology: Vec<_> =
+        [(2usize, 16usize), (4, 8)].iter().map(|&(s, w)| contention::topology_ab(s, w, 64)).collect();
+    for t in &topology {
+        assert!(
+            t.sweep.new.acquisitions <= 2 * t.rounds,
+            "{}x{}: two-level sweep visits only dirty-socket words: {} / {} rounds",
+            t.sockets,
+            t.workers,
+            t.sweep.new.acquisitions,
+            t.rounds
+        );
+        assert!(
+            t.steal.new.contended * 10 <= t.steal.new.acquisitions,
+            "{}x{}: ≥90% same-socket steals in the all-local window: {}/{} remote",
+            t.sockets,
+            t.workers,
+            t.steal.new.contended,
+            t.steal.new.acquisitions
+        );
+        assert_eq!(
+            t.dep_wake.new.contended, 0,
+            "{}x{}: dependence-targeted wakes must land on the registered worker",
+            t.sockets, t.workers
+        );
+        assert!(t.dep_wake.old.contended > 0, "broadcast control side must mistarget");
+    }
+
     let json = contention::suite_to_json(
         &reports,
         &sweeps,
@@ -217,6 +250,7 @@ fn contention_ab_smoke_and_json() {
         &budget_adapt,
         &fault_overhead,
         &replay,
+        &topology,
         "cargo test contention_ab_smoke_and_json",
     );
     assert!(json.contains("\"contended_reduction\""));
@@ -227,6 +261,8 @@ fn contention_ab_smoke_and_json() {
     assert!(json.contains("\"budget_adapt\""));
     assert!(json.contains("\"fault_overhead\""));
     assert!(json.contains("\"replay\""));
+    assert!(json.contains("\"topology\""));
+    assert!(json.contains("\"dep_wake\""));
     let path = contention::default_json_path();
     if contention::write_suite_json(
         &path,
@@ -237,6 +273,7 @@ fn contention_ab_smoke_and_json() {
         &budget_adapt,
         &fault_overhead,
         &replay,
+        &topology,
         "cargo test contention_ab_smoke_and_json",
     ) {
         eprintln!("refreshed {}", path.display());
@@ -252,6 +289,9 @@ fn contention_ab_smoke_and_json() {
     eprintln!("{}", contention::render_budget_adapt(&budget_adapt));
     eprintln!("{}", contention::render_fault_overhead(&fault_overhead));
     eprintln!("{}", contention::render_replay(&replay));
+    for t in &topology {
+        eprintln!("{}", contention::render_topology(t));
+    }
 }
 
 /// Acceptance guard for the request-plane refactor: during a sparse-traffic

@@ -1,0 +1,173 @@
+//! Integration guards for the topology plane (EXPERIMENTS.md §Topology):
+//!
+//! * an injected [`Topology`] shapes a *real* pool end-to-end — the runtime
+//!   and its two-level signal directory both take the socket layout — and
+//!   dependence workloads stay correct on every organization under it;
+//! * `request_shutdown` traverses both directory levels: a pool whose 128
+//!   workers are parked across four sockets joins cleanly (a wake that only
+//!   scanned socket 0 would hang this test);
+//! * `wait_for` on a cross-socket predecessor completes via the
+//!   dependence-targeted wake edge (`dep_wake_edges` fires when the waiter
+//!   actually parked on the edge rather than running the task inline).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use ddast::coordinator::{DepMode, RuntimeKind, TaskSystem};
+use ddast::substrate::Topology;
+
+/// A forced 4 × 2 topology on an 8-thread pool must reach both the runtime
+/// descriptor and the signal directory, and dependence chains must still
+/// execute in program order on every organization under the split layout.
+#[test]
+fn injected_topology_shapes_every_organization() {
+    for kind in
+        [RuntimeKind::Sync, RuntimeKind::Ddast, RuntimeKind::CentralDast, RuntimeKind::GompLike]
+    {
+        let ts = TaskSystem::builder()
+            .kind(kind)
+            .num_threads(8)
+            .topology(Topology::new(4, 2))
+            .build();
+        let rt = ts.runtime();
+        assert_eq!(rt.topo.sockets(), 4, "kind={kind:?}: runtime took the injected shape");
+        assert_eq!(
+            rt.queues.signals().sockets(),
+            4,
+            "kind={kind:?}: directory split into the injected sockets"
+        );
+
+        // Doubling chain: 2^16 only if every predecessor ran first.
+        let v = Arc::new(AtomicU64::new(1));
+        for _ in 0..16 {
+            let v = Arc::clone(&v);
+            ts.spawn(&[(7, DepMode::Inout)], move || {
+                v.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |x| Some(x * 2)).unwrap();
+            });
+        }
+        // Plus independent fan-out so ready pushes exercise the
+        // locality-biased wake path on more than one socket.
+        let hits = Arc::new(AtomicU64::new(0));
+        for i in 0..64u64 {
+            let h = Arc::clone(&hits);
+            ts.spawn(&[(100 + i, DepMode::Out)], move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        ts.taskwait();
+        assert_eq!(v.load(Ordering::SeqCst), 1 << 16, "kind={kind:?}: chain order held");
+        assert_eq!(hits.load(Ordering::Relaxed), 64, "kind={kind:?}: fan-out drained");
+        assert!(rt.quiescent(), "kind={kind:?}");
+        ts.shutdown();
+    }
+}
+
+/// Shutdown must join a pool whose 128 workers are parked across the four
+/// sockets of a 4 × 32 directory. `request_shutdown` broadcasts through
+/// `wake_all`, which has to walk *both* directory levels — every socket's
+/// summary bit and every word under it; missing a remote socket leaves its
+/// workers parked forever and hangs (times out) this test.
+#[test]
+fn shutdown_joins_128_parked_workers_across_sockets() {
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(128)
+        .topology(Topology::new(4, 32))
+        .build();
+    let rt = ts.runtime();
+    assert_eq!(rt.queues.signals().sockets(), 4);
+
+    // A little work so the pool is warm, then an idle window in which the
+    // workers walk the spin/yield ladder and park. Wait (bounded) until a
+    // healthy majority of them actually committed a park so the shutdown
+    // broadcast genuinely has cross-socket parked bits to clear.
+    let hits = Arc::new(AtomicU64::new(0));
+    for i in 0..256u64 {
+        let h = Arc::clone(&hits);
+        ts.spawn(&[(i % 16, DepMode::Inout)], move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    ts.taskwait();
+    assert_eq!(hits.load(Ordering::Relaxed), 256);
+    let mut tries = 0;
+    while rt.queues.signals().parked_count() < 96 && tries < 500 {
+        std::thread::sleep(Duration::from_millis(2));
+        tries += 1;
+    }
+    assert!(
+        rt.queues.signals().parked_count() >= 96,
+        "most of the 128 workers parked during the idle window"
+    );
+    ts.shutdown(); // must wake all four sockets and join all 128 threads
+}
+
+/// End-to-end dependence-targeted wake: worker 0 blocks in `wait_for` on a
+/// predecessor that another worker is executing. When the waiter really
+/// parks (rather than stealing the predecessor and running it inline), the
+/// predecessor's finalizer must fire the point-to-point wake edge — counted
+/// by `dep_wake_edges`. Which thread gets the task is a scheduling race, so
+/// rounds repeat until an edge fires, bounded so a broken wake path fails
+/// fast instead of hanging.
+#[test]
+fn wait_for_fires_dependence_targeted_wake_edge_end_to_end() {
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(2)
+        .topology(Topology::new(2, 1)) // waiter and executor on different sockets
+        .build();
+    let rt = Arc::clone(ts.runtime());
+    assert_eq!(rt.queues.signals().sockets(), 2);
+
+    let mut fired = false;
+    for _ in 0..40 {
+        // Spawn the predecessor from *inside* another task so it lands on
+        // the executing worker's deque, not the main thread's — otherwise
+        // `wait_for` would always pop it locally and never park.
+        let (tx, rx) = mpsc::channel();
+        let ts2 = ts.clone();
+        ts.spawn(&[], move || {
+            let pred = ts2.spawn_handle(vec![], "slow-pred", || {
+                std::thread::sleep(Duration::from_millis(15));
+            });
+            tx.send(pred).unwrap();
+        });
+        let pred = rx.recv().unwrap();
+        ts.wait_for(&pred);
+        assert!(pred.done_handled(), "wait_for returned only after finalization");
+        if rt.stats.dep_wake_edges.get() > 0 {
+            fired = true;
+            break;
+        }
+    }
+    assert!(fired, "at least one round parked on the edge and was woken point-to-point");
+    ts.taskwait();
+    assert!(rt.quiescent());
+    ts.shutdown();
+}
+
+/// `DDAST_TOPOLOGY`-style env injection is covered at the unit level in
+/// `substrate/topology.rs`; here we pin the builder override *beating* any
+/// ambient detection, since CI exports the variable while running this
+/// binary: an explicit `.topology(..)` must win.
+#[test]
+fn explicit_topology_overrides_detection() {
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(6)
+        .topology(Topology::new(3, 2))
+        .build();
+    assert_eq!(ts.runtime().topo.sockets(), 3);
+    assert_eq!(ts.runtime().topo.workers_per_socket(), 2);
+    let hits = Arc::new(AtomicU64::new(0));
+    for _ in 0..32 {
+        let h = Arc::clone(&hits);
+        ts.spawn(&[], move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    ts.taskwait();
+    assert_eq!(hits.load(Ordering::Relaxed), 32);
+    ts.shutdown();
+}
