@@ -59,6 +59,9 @@ fn main() {
         }
     }
     let replay = replay.expect("thread sweep includes 4");
+    println!("\n== serve-scale ingress: external-submitter soak + tenancy A/B ==\n");
+    let ingress = ddast::bench_harness::ingress::ingress_soak(4, 4, 10_000);
+    print!("{}", ddast::bench_harness::ingress::render_ingress(&ingress));
     println!("\n== topology A/B: flat vs two-level directory, uniform vs socket-ordered steal, broadcast vs dependence-targeted wake ==\n");
     let mut topology = Vec::new();
     for (sockets, wps) in [(2usize, 16usize), (4, 8), (4, 32)] {
@@ -77,6 +80,7 @@ fn main() {
         &budget_adapt,
         &fault_overhead,
         &replay,
+        &ingress,
         &topology,
         "cargo bench --bench micro_structures",
     ) {

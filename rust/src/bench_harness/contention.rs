@@ -1067,6 +1067,26 @@ fn sweep_json_inline(s: &SweepReport) -> String {
     )
 }
 
+fn ingress_json_inline(i: &crate::bench_harness::ingress::IngressReport) -> String {
+    format!(
+        "{{\"threads\": {}, \"clients\": {}, \"tasks_per_client\": {}, \
+         \"submitted\": {}, \"completed\": {}, \"busy\": {}, \
+         \"throughput_per_sec\": {:.1}, \"p50_ns\": {}, \"p95_ns\": {}, \
+         \"p99_ns\": {}, \"ab\": {}}}",
+        i.threads,
+        i.clients,
+        i.tasks_per_client,
+        i.submitted,
+        i.completed,
+        i.busy,
+        i.throughput_per_sec,
+        i.p50_ns,
+        i.p95_ns,
+        i.p99_ns,
+        ab_json(&i.ab)
+    )
+}
+
 fn topology_json_inline(t: &TopologyReport) -> String {
     format!(
         "{{\"sockets\": {}, \"workers\": {}, \"rounds\": {}, \"sweep\": {}, \
@@ -1084,8 +1104,8 @@ fn topology_json_inline(t: &TopologyReport) -> String {
 /// `batch_submit` drill), the sparse-traffic sweep series, the
 /// park-vs-sleep wake-latency pair, the taskwait-wake pair, the
 /// adaptive-batch-budget pair, the failure-containment overhead pair, the
-/// record/replay pair and the per-shape topology series — the shape
-/// `BENCH_contention.json` carries.
+/// record/replay pair, the serve-scale ingress soak and the per-shape
+/// topology series — the shape `BENCH_contention.json` carries.
 #[allow(clippy::too_many_arguments)]
 pub fn suite_to_json(
     reports: &[ContentionReport],
@@ -1095,6 +1115,7 @@ pub fn suite_to_json(
     budget_adapt: &AbReport,
     fault_overhead: &AbReport,
     replay: &AbReport,
+    ingress: &crate::bench_harness::ingress::IngressReport,
     topology: &[TopologyReport],
     generated_by: &str,
 ) -> String {
@@ -1108,7 +1129,7 @@ pub fn suite_to_json(
         "{{\n  \"generated_by\": \"{}\",\n  \"reports\": [\n{}\n  ],\n  \
          \"signal_sweep\": [\n{}\n  ],\n  \"park_wake\": {},\n  \
          \"taskwait_park\": {},\n  \"budget_adapt\": {},\n  \
-         \"fault_overhead\": {},\n  \"replay\": {},\n  \
+         \"fault_overhead\": {},\n  \"replay\": {},\n  \"ingress\": {},\n  \
          \"topology\": [\n{}\n  ]\n}}\n",
         generated_by,
         reports_json.join(",\n"),
@@ -1118,6 +1139,7 @@ pub fn suite_to_json(
         ab_json(budget_adapt),
         ab_json(fault_overhead),
         ab_json(replay),
+        ingress_json_inline(ingress),
         topology_json.join(",\n")
     )
 }
@@ -1304,6 +1326,7 @@ pub fn write_suite_json(
     budget_adapt: &AbReport,
     fault_overhead: &AbReport,
     replay: &AbReport,
+    ingress: &crate::bench_harness::ingress::IngressReport,
     topology: &[TopologyReport],
     generated_by: &str,
 ) -> bool {
@@ -1317,6 +1340,7 @@ pub fn write_suite_json(
             budget_adapt,
             fault_overhead,
             replay,
+            ingress,
             topology,
             generated_by,
         ),
@@ -1369,8 +1393,10 @@ mod tests {
         let ba = budget_adapt_ab(256);
         let fo = fault_overhead_ab(64);
         let rp = replay_ab(2, 3);
+        let ing = crate::bench_harness::ingress::ingress_soak(2, 2, 16);
         let topo = [topology_ab(2, 4, 16)];
-        let j = suite_to_json(&reports, &sweeps, &pw, &tw, &ba, &fo, &rp, &topo, "unit test");
+        let j =
+            suite_to_json(&reports, &sweeps, &pw, &tw, &ba, &fo, &rp, &ing, &topo, "unit test");
         for key in [
             "\"reports\"",
             "\"signal_sweep\"",
@@ -1379,6 +1405,9 @@ mod tests {
             "\"budget_adapt\"",
             "\"fault_overhead\"",
             "\"replay\"",
+            "\"ingress\"",
+            "\"throughput_per_sec\"",
+            "\"p99_ns\"",
             "\"topology\"",
             "\"sockets\": 2",
             "\"dep_wake\"",

@@ -4,7 +4,9 @@
 pub mod bencher;
 pub mod contention;
 pub mod figures;
+pub mod ingress;
 
 pub use bencher::{Bencher, Measurement};
 pub use contention::{AbReport, ContentionReport, SideReport, SweepReport};
 pub use figures::{Bench, FigureOpts};
+pub use ingress::IngressReport;

@@ -13,16 +13,17 @@
 //! worker 0 of the pool, and `taskwait` makes it execute tasks / runtime
 //! functionalities while it waits (thread-pool model, §2.1).
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 
 use crate::coordinator::ddast::DdastParams;
 use crate::coordinator::dep::{DepMode, Dependence};
 use crate::coordinator::pool::{
-    clear_ctx, current_ctx, install_ctx, RuntimeKind, RuntimeShared, TaskErrors,
+    clear_ctx, current_ctx, install_ctx, DomainErrorCell, RuntimeKind, RuntimeShared, SubmitError,
+    TaskErrors,
 };
 use crate::coordinator::replay::{self, GraphRecording, ReplayOutcome, ReplayRun, ReplayTask};
-use crate::coordinator::wd::{TaskBody, Wd};
+use crate::coordinator::wd::{TaskBody, Wd, WdState};
 use crate::substrate::{FaultPlan, RegionKey, Topology};
 
 /// Builder for [`TaskSystem`].
@@ -39,6 +40,7 @@ pub struct TaskSystemBuilder {
     fault_plan: Option<Arc<FaultPlan>>,
     record_graphs: bool,
     topology: Option<Topology>,
+    ingress_capacity: Option<usize>,
 }
 
 impl Default for TaskSystemBuilder {
@@ -56,6 +58,7 @@ impl Default for TaskSystemBuilder {
             fault_plan: None,
             record_graphs: false,
             topology: None,
+            ingress_capacity: None,
         }
     }
 }
@@ -152,9 +155,20 @@ impl TaskSystemBuilder {
         self
     }
 
+    /// Capacity of the external-submitter ingress ring (rounded up to a
+    /// power of two internally; defaults to
+    /// `coordinator::messages::DEFAULT_INGRESS_CAPACITY`). The bound *is*
+    /// the admission control: a full ring makes [`TaskSystem::try_submit`]
+    /// return [`SubmitError::Busy`] and the blocking submit flavours wait —
+    /// backpressure to the producers instead of unbounded queue growth.
+    pub fn ingress_capacity(mut self, n: usize) -> Self {
+        self.ingress_capacity = Some(n);
+        self
+    }
+
     pub fn build(self) -> TaskSystem {
         let params = self.params.unwrap_or_else(|| DdastParams::tuned(self.num_threads));
-        let rt = RuntimeShared::new_with_options(
+        let rt = RuntimeShared::new_full(
             self.kind,
             self.num_threads,
             params,
@@ -163,6 +177,8 @@ impl TaskSystemBuilder {
             self.ranged,
             self.fault_plan,
             self.topology,
+            self.ingress_capacity
+                .unwrap_or(crate::coordinator::messages::DEFAULT_INGRESS_CAPACITY),
         );
         let mut autotuner = None;
         if self.kind == RuntimeKind::Ddast {
@@ -327,6 +343,72 @@ impl TaskSystem {
         }
     }
 
+    // ---- serve-scale ingress (external submitters, tenant domains) -------
+
+    /// Submit a task from a thread **outside** the pool, returning its
+    /// handle (pair with [`TaskSystem::wait_for`]). Unlike
+    /// [`TaskSystem::spawn`] — whose caller is a pool worker that resolves
+    /// or enqueues the submission itself — the external lane routes
+    /// dependence-carrying tasks through a bounded MPMC ingress ring
+    /// drained by the managers, and the submitter never touches
+    /// worker-private structures. Blocks (polite backoff) while the ring
+    /// is full; the submission is never lost. The task becomes a child of
+    /// the implicit root, so a pool-side `taskwait` at root level covers
+    /// it.
+    pub fn submit_async<F: FnOnce() + Send + 'static>(
+        &self,
+        deps: &[(u64, DepMode)],
+        body: F,
+    ) -> Arc<Wd> {
+        let rt = &self.inner.rt;
+        rt.spawn_external(&rt.root, addr_deps(deps), "ext", Box::new(body))
+    }
+
+    /// [`TaskSystem::submit_async`] without the handle — the fire-and-forget
+    /// flavour for serve loops that only ever barrier with `taskwait`.
+    pub fn submit_silent<F: FnOnce() + Send + 'static>(&self, deps: &[(u64, DepMode)], body: F) {
+        let _ = self.submit_async(deps, body);
+    }
+
+    /// Non-blocking external submission: [`SubmitError::Busy`] when the
+    /// ingress ring is full (admission rolled back completely — the
+    /// rejected task leaves no trace in the parent's accounting). The
+    /// caller owns the retry/shed decision; `RtStats::ingress_rejected`
+    /// counts the backpressure events.
+    pub fn try_submit<F: FnOnce() + Send + 'static>(
+        &self,
+        deps: &[(u64, DepMode)],
+        body: F,
+    ) -> Result<Arc<Wd>, SubmitError> {
+        let rt = &self.inner.rt;
+        rt.try_spawn_external(&rt.root, addr_deps(deps), "ext", Box::new(body))
+    }
+
+    /// Open an isolated [`GraphDomain`] — one tenant's graph scope on the
+    /// shared pool. Each domain has its own root (so `taskwait` scopes to
+    /// the domain), its own dependence namespace (two domains using the
+    /// same addresses never serialize against each other), and its own
+    /// sticky error cell (one tenant's panic poisons *its* graph, not its
+    /// neighbours'). Cheap: one detached work descriptor plus a registry
+    /// entry.
+    pub fn domain(&self) -> GraphDomain {
+        let rt = &self.inner.rt;
+        // Detached root (no parent): attaching it under `rt.root` would
+        // hold the global root's children_live up for the whole life of
+        // the handle, wedging root-level taskwait/shutdown. Shutdown still
+        // drains domain tasks — they count in `tasks_outstanding`.
+        let root = Wd::new(
+            rt.fresh_task_id(),
+            Vec::new(),
+            "domain-root",
+            Weak::new(),
+            Box::new(|| {}),
+        );
+        root.set_state(WdState::Running);
+        let errors = rt.register_domain(root.id);
+        GraphDomain { ts: self.clone(), root, errors }
+    }
+
     // ---- record/replay plane (EXPERIMENTS.md §Graph replay) --------------
 
     /// Run one iteration's `tasks` to completion through full dependence
@@ -455,6 +537,101 @@ impl TaskSystem {
             None => Ok(()),
             Some(e) => Err(e),
         }
+    }
+}
+
+/// Address-keyed dependence descriptors — the ergonomic `(addr, mode)`
+/// form shared by [`TaskSystem::spawn`] and the ingress surface.
+fn addr_deps(deps: &[(u64, DepMode)]) -> Vec<Dependence> {
+    deps.iter().map(|&(addr, mode)| Dependence::new(RegionKey::addr(addr), mode)).collect()
+}
+
+/// One tenant's isolated graph scope on a shared [`TaskSystem`] — see
+/// [`TaskSystem::domain`]. The handle owns the scope: waiting
+/// ([`GraphDomain::taskwait`]) covers exactly the tasks submitted through
+/// it, and failure state ([`GraphDomain::errors`]) is the domain's own
+/// sticky cell — a panic here cancels this domain's dependents and nothing
+/// else. Dropping the handle deregisters the domain; tasks still in flight
+/// finish under the runtime's orphan-tolerant teardown paths.
+///
+/// Not `Clone`: the handle is the deregistration point. Share it across
+/// submitter threads with an `Arc<GraphDomain>` — every submission method
+/// takes `&self` and is thread-safe.
+pub struct GraphDomain {
+    ts: TaskSystem,
+    root: Arc<Wd>,
+    errors: Arc<DomainErrorCell>,
+}
+
+impl GraphDomain {
+    /// The domain's root task — parent of everything submitted through
+    /// this handle (e.g. for `RuntimeShared::taskwait_on`-level plumbing).
+    pub fn root(&self) -> &Arc<Wd> {
+        &self.root
+    }
+
+    /// Spawn into the domain from a **pool** thread (the in-pool analogue
+    /// of [`TaskSystem::spawn`], scoped to this domain's graph).
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, deps: &[(u64, DepMode)], body: F) {
+        let (rt, worker, _parent) = self.ts.ctx();
+        rt.spawn_from(worker, &self.root, addr_deps(deps), "domain", Box::new(body));
+    }
+
+    /// Submit into the domain from a thread outside the pool — blocking
+    /// flavour; semantics of [`TaskSystem::submit_async`] with this
+    /// domain's root as parent.
+    pub fn submit_async<F: FnOnce() + Send + 'static>(
+        &self,
+        deps: &[(u64, DepMode)],
+        body: F,
+    ) -> Arc<Wd> {
+        self.ts.inner.rt.spawn_external(&self.root, addr_deps(deps), "ext", Box::new(body))
+    }
+
+    /// [`GraphDomain::submit_async`] without the handle.
+    pub fn submit_silent<F: FnOnce() + Send + 'static>(&self, deps: &[(u64, DepMode)], body: F) {
+        let _ = self.submit_async(deps, body);
+    }
+
+    /// Non-blocking external submission into the domain;
+    /// [`SubmitError::Busy`] under ring backpressure (fully rolled back).
+    pub fn try_submit<F: FnOnce() + Send + 'static>(
+        &self,
+        deps: &[(u64, DepMode)],
+        body: F,
+    ) -> Result<Arc<Wd>, SubmitError> {
+        self.ts.inner.rt.try_spawn_external(&self.root, addr_deps(deps), "ext", Box::new(body))
+    }
+
+    /// Wait for every task submitted through this domain (a `taskwait`
+    /// scoped to the domain root). Pool threads execute work while they
+    /// wait, exactly like [`TaskSystem::taskwait`].
+    pub fn taskwait(&self) {
+        let (rt, worker, _parent) = self.ts.ctx();
+        rt.taskwait_on(worker, &self.root);
+    }
+
+    /// [`GraphDomain::taskwait`], then report **this domain's** poison
+    /// state: `Err` iff a task of this domain failed or was cancelled.
+    /// Another tenant's failures never surface here.
+    pub fn taskwait_checked(&self) -> Result<(), TaskErrors> {
+        self.taskwait();
+        match self.errors.summary() {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// The domain's sticky failure summary without waiting (`None` while
+    /// clean).
+    pub fn errors(&self) -> Option<TaskErrors> {
+        self.errors.summary()
+    }
+}
+
+impl Drop for GraphDomain {
+    fn drop(&mut self) {
+        self.ts.inner.rt.deregister_domain(self.root.id);
     }
 }
 
@@ -596,6 +773,94 @@ mod tests {
         let ts = TaskSystem::new_sync(2);
         ts.spawn(&[], || {});
         ts.shutdown();
+        ts.shutdown();
+    }
+
+    #[test]
+    fn external_submits_from_outside_the_pool() {
+        let ts = TaskSystem::new_ddast(2);
+        let hits = Arc::new(AtomicU64::new(0));
+        let client = {
+            let ts = ts.clone();
+            let hits = Arc::clone(&hits);
+            std::thread::spawn(move || {
+                for i in 0..64u64 {
+                    let hits = Arc::clone(&hits);
+                    // Mixed dependence keys: chains within a key, parallel
+                    // across keys — exercises the ring, not just the
+                    // no-deps direct route.
+                    ts.submit_silent(&[(i % 5, DepMode::Inout)], move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            })
+        };
+        client.join().unwrap();
+        ts.taskwait(); // root-level barrier covers external submissions
+        assert_eq!(hits.load(Ordering::SeqCst), 64);
+        let rt = ts.runtime();
+        assert_eq!(
+            rt.stats.ingress_admitted.get() + rt.stats.ingress_direct.get(),
+            64,
+            "every external submission was admitted through a counted route"
+        );
+        ts.shutdown();
+    }
+
+    #[test]
+    fn domains_isolate_failures_between_tenants() {
+        let ts = TaskSystem::new_ddast(2);
+        let a = ts.domain();
+        let b = ts.domain();
+        // Tenant A: a failing head with a dependent that must be cancelled.
+        a.spawn(&[(1, DepMode::Out)], || panic!("tenant A dies"));
+        a.spawn(&[(1, DepMode::In)], || {});
+        // Tenant B: the same addresses — a *different* dependence
+        // namespace, so nothing here serializes against (or is poisoned
+        // by) tenant A.
+        let ok = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let ok = Arc::clone(&ok);
+            b.spawn(&[(1, DepMode::Inout)], move || {
+                ok.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let err = a.taskwait_checked().unwrap_err();
+        assert_eq!(err.tasks_failed, 1);
+        assert_eq!(err.tasks_cancelled, 1);
+        assert!(err.first_panic.as_deref().unwrap().contains("tenant A dies"));
+        b.taskwait_checked().expect("tenant B untouched by A's poison");
+        assert_eq!(ok.load(Ordering::SeqCst), 8);
+        assert!(b.errors().is_none());
+        ts.shutdown();
+    }
+
+    #[test]
+    fn try_submit_sees_backpressure_at_the_configured_capacity() {
+        // One worker — the test thread — which is busy *here*, not
+        // draining: the tiny ring fills deterministically.
+        let ts = TaskSystem::builder()
+            .kind(RuntimeKind::Ddast)
+            .num_threads(1)
+            .ingress_capacity(2)
+            .build();
+        let n = Arc::new(AtomicU64::new(0));
+        let mut admitted = 0u64;
+        let mut busy = 0u64;
+        for _ in 0..4 {
+            let n = Arc::clone(&n);
+            match ts.try_submit(&[(9, DepMode::Inout)], move || {
+                n.fetch_add(1, Ordering::SeqCst);
+            }) {
+                Ok(_) => admitted += 1,
+                Err(SubmitError::Busy) => busy += 1,
+            }
+        }
+        assert_eq!(admitted, 2, "ring capacity bounds admission");
+        assert_eq!(busy, 2, "overflow rejected, not queued");
+        ts.taskwait(); // the waiting worker drains the ring itself
+        assert_eq!(n.load(Ordering::SeqCst), 2, "admitted tasks all ran");
+        assert_eq!(ts.runtime().stats.ingress_rejected.get(), 2);
         ts.shutdown();
     }
 }

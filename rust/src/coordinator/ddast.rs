@@ -168,6 +168,12 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
             }
             total_cnt += cnt;
         }
+        // The external lane rides the same round: one bounded drain of the
+        // ingress ring per sweep (claim the external bit → pop a chunk →
+        // the same batch path, which re-raises the bit when entries
+        // remain). Counted as progress, so sustained outside traffic keeps
+        // the manager resident instead of spinning down between requests.
+        total_cnt += rt.drain_ingress(me, &mut batch, p.max_ops_thread) as usize;
         total_processed += total_cnt as u64;
         // Line 24: reset the spin budget on progress, decrement otherwise.
         spins = if total_cnt == 0 { spins.saturating_sub(1) } else { p.max_spins };

@@ -28,7 +28,23 @@
 use std::sync::Arc;
 
 use crate::coordinator::wd::Wd;
-use crate::substrate::{ShardedCounter, SignalDirectory, SpscQueue, Topology};
+use crate::substrate::{IngressRing, ShardedCounter, SignalDirectory, SpscQueue, Topology};
+
+/// Default capacity of the external-submitter ingress ring. Bounded by
+/// design: the ring *is* the admission control — when it fills, external
+/// submitters get `Busy` back instead of growing an unbounded queue inside
+/// the runtime. Overridable via `TaskSystemBuilder::ingress_capacity`.
+pub const DEFAULT_INGRESS_CAPACITY: usize = 1024;
+
+/// Extra sharded-counter cells reserved for external-submitter threads.
+/// The pending gauge's shard count was sized from the pool thread count
+/// alone (`num_workers + 2`), so a burst of external producers aliased the
+/// pool's cells and turned the gauge's sharding into contention. External
+/// threads never get trace rings or queue pairs (those stay pool-indexed);
+/// they only need counter cells, and `ShardedCounter`'s thread-local
+/// round-robin cell assignment spreads any number of them over this
+/// allowance.
+pub const EXTERNAL_SHARD_ALLOWANCE: usize = 8;
 
 /// Request to insert a created task into the dependence graph.
 #[derive(Debug)]
@@ -177,7 +193,8 @@ impl WorkerQueues {
 }
 
 /// All workers' queues, the work-signal directory managers scan instead of
-/// sweeping every queue pair, and a sharded pending gauge for quiescence.
+/// sweeping every queue pair, the shared external-submitter ingress ring,
+/// and a sharded pending gauge for quiescence.
 pub struct QueueSystem {
     pub workers: Vec<WorkerQueues>,
     /// Messages pushed and not yet fully *processed* (not merely popped):
@@ -185,11 +202,19 @@ pub struct QueueSystem {
     /// `pending() == 0` means the runtime structures are up to date.
     /// Sharded: every push/process touches only the calling thread's cell
     /// (the seed's single `Counter` was a global RMW per message); gauges
-    /// read the relaxed sweep, `quiescent()` the exact fallback.
+    /// read the relaxed sweep, `quiescent()` the exact fallback. Counts
+    /// ingress-ring entries too (incremented on admission), so every
+    /// pending-based decision — parking re-checks, quiescence — covers the
+    /// external lane with no extra condition.
     pending: ShardedCounter,
     /// Which workers have unclaimed requests — the DDAST sweep walks this
     /// instead of all queue pairs (O(dirty), not O(workers)).
     signals: SignalDirectory,
+    /// Shared bounded ring for submissions from threads *outside* the pool
+    /// (the serve lane). Producers compete on a CAS, managers drain it
+    /// through the same `MsgBatch` path as the SPSC plane, and the signal
+    /// directory's external-producer bit carries its wakeups.
+    ingress: IngressRing<Arc<Wd>>,
 }
 
 impl QueueSystem {
@@ -218,17 +243,33 @@ impl QueueSystem {
     /// runtime passes its resolved [`Topology`]; the default above keeps
     /// the flat word-grain layout.
     pub fn with_topology(num_workers: usize, park_slots: usize, topo: Topology) -> Self {
+        Self::with_topology_and_ingress(num_workers, park_slots, topo, DEFAULT_INGRESS_CAPACITY)
+    }
+
+    /// Like [`QueueSystem::with_topology`], with an explicit ingress-ring
+    /// capacity (the admission bound for external submitters — see
+    /// [`DEFAULT_INGRESS_CAPACITY`]).
+    pub fn with_topology_and_ingress(
+        num_workers: usize,
+        park_slots: usize,
+        topo: Topology,
+        ingress_capacity: usize,
+    ) -> Self {
         debug_assert!(park_slots >= num_workers);
         QueueSystem {
             workers: (0..num_workers).map(|_| WorkerQueues::new()).collect(),
-            // +2: the CentralDast DAS slot and stray non-pool threads also
-            // update the gauge (satellite fix: cells sized from the actual
-            // thread count instead of the fixed 16).
-            pending: ShardedCounter::with_shards(num_workers + 2),
+            // +2 for the CentralDast DAS slot and stray non-pool threads,
+            // plus the external-submitter allowance, so an ingress burst
+            // never aliases a pool context's counter cell (satellite fix:
+            // cells sized from the contexts that actually touch the gauge).
+            pending: ShardedCounter::with_shards(
+                num_workers + 2 + EXTERNAL_SHARD_ALLOWANCE,
+            ),
             signals: SignalDirectory::new_with_topology(
                 park_slots.max(num_workers).max(1),
                 topo,
             ),
+            ingress: IngressRing::new(ingress_capacity),
         }
     }
 
@@ -257,6 +298,51 @@ impl QueueSystem {
         self.pending.inc();
         self.workers[worker].done.push(DoneTaskMsg { task, worker });
         self.signals.raise(worker);
+    }
+
+    /// Admit a submission from a thread *outside* the pool: publish into
+    /// the bounded ingress ring, count it pending, then raise the
+    /// directory's external-producer bit (publish-then-signal, same order
+    /// as [`push_submit`](QueueSystem::push_submit) — the raise issues the
+    /// producer-side fence of the park protocol, so a parked pool cannot
+    /// miss it). `Err` hands the task back when the ring is full:
+    /// backpressure, with **no** runtime-visible side effects from this
+    /// call (the caller undoes its own accounting).
+    pub fn try_push_external(&self, task: Arc<Wd>) -> Result<(), Arc<Wd>> {
+        match self.ingress.try_push(task) {
+            Ok(()) => {
+                self.pending.inc();
+                self.signals.raise_external();
+                Ok(())
+            }
+            Err(task) => Err(task),
+        }
+    }
+
+    /// Pop one admitted external submission (manager-side; consumers
+    /// compete on a CAS). The caller settles the pending gauge via
+    /// [`messages_processed`](QueueSystem::messages_processed) after the
+    /// graph mutation, like any other message.
+    pub fn pop_external(&self) -> Option<Arc<Wd>> {
+        self.ingress.try_pop()
+    }
+
+    /// External submissions admitted and not yet popped (approximate under
+    /// concurrency, exact when quiescent).
+    #[inline]
+    pub fn ingress_pending(&self) -> usize {
+        self.ingress.len()
+    }
+
+    /// Capacity of the external-submitter ring (the admission bound).
+    #[inline]
+    pub fn ingress_capacity(&self) -> usize {
+        self.ingress.capacity()
+    }
+
+    /// (accepted pushes, pops, rejected pushes) on the ingress ring.
+    pub fn ingress_stats(&self) -> (u64, u64, u64) {
+        self.ingress.stats()
     }
 
     /// Mark one popped message as fully processed.
@@ -305,6 +391,19 @@ impl QueueSystem {
                 return false;
             }
             from = w + 1;
+        }
+        // Same claim-then-recheck discipline for the external lane: a
+        // stale external bit (ring already drained) is reclaimed; a raced
+        // admission hands it back and reports non-quiescent.
+        if self.signals.external_raised() {
+            if self.ingress.len() > 0 {
+                return false;
+            }
+            self.signals.try_claim_external();
+            if self.ingress.len() > 0 {
+                self.signals.raise_external();
+                return false;
+            }
         }
         true
     }
@@ -445,6 +544,61 @@ mod tests {
         drop(held);
         assert_eq!(wq.drain_batch(8, &mut batch), 1);
         assert_eq!(batch.submits.len(), 1);
+    }
+
+    #[test]
+    fn external_push_raises_the_external_bit_and_counts_pending() {
+        let qs = QueueSystem::new(2);
+        assert!(qs.try_push_external(mk(1)).is_ok());
+        assert!(qs.signals().external_raised());
+        assert_eq!(qs.pending(), 1);
+        assert_eq!(qs.ingress_pending(), 1);
+        assert!(!qs.signals_quiescent(), "admitted submission blocks quiescence");
+        assert!(qs.signals().try_claim_external());
+        let task = qs.pop_external().expect("admitted task pops");
+        assert_eq!(task.id, TaskId(1));
+        qs.message_processed();
+        assert_eq!(qs.pending_exact(), 0);
+        assert!(qs.signals_quiescent());
+    }
+
+    #[test]
+    fn external_backpressure_hands_the_task_back() {
+        let qs = QueueSystem::with_topology_and_ingress(
+            1,
+            1,
+            Topology::word_grain(1),
+            2,
+        );
+        assert_eq!(qs.ingress_capacity(), 2);
+        assert!(qs.try_push_external(mk(1)).is_ok());
+        assert!(qs.try_push_external(mk(2)).is_ok());
+        let back = qs.try_push_external(mk(3)).expect_err("ring full");
+        assert_eq!(back.id, TaskId(3));
+        // Rejection leaves no runtime-visible traces: pending unchanged.
+        assert_eq!(qs.pending(), 2);
+        let (pushes, _, rejected) = qs.ingress_stats();
+        assert_eq!((pushes, rejected), (2, 1));
+        // Drain; admission capacity is restored.
+        while let Some(_t) = qs.pop_external() {
+            qs.message_processed();
+        }
+        assert!(qs.try_push_external(mk(3)).is_ok());
+        assert!(qs.pop_external().is_some());
+        qs.message_processed();
+        assert!(qs.signals_quiescent() || qs.signals().try_claim_external());
+    }
+
+    #[test]
+    fn stale_external_bit_is_reclaimed_by_quiescence() {
+        let qs = QueueSystem::new(1);
+        assert!(qs.try_push_external(mk(7)).is_ok());
+        // Drain without claiming the bit: it is now stale.
+        qs.pop_external().unwrap();
+        qs.message_processed();
+        assert!(qs.signals().external_raised());
+        assert!(qs.signals_quiescent(), "stale bit must not block quiescence");
+        assert!(!qs.signals().external_raised(), "stale bit reclaimed");
     }
 
     #[test]

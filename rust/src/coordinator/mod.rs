@@ -18,14 +18,14 @@ pub mod replay;
 pub mod trace;
 pub mod wd;
 
-pub use api::{TaskSystem, TaskSystemBuilder};
+pub use api::{GraphDomain, TaskSystem, TaskSystemBuilder};
 pub use autotune::{AutoTuner, TunableParams, MAX_OPS_THREAD_CAP};
 pub use ddast::DdastParams;
 pub use dep::{dep_in, dep_inout, dep_out, DepMode, Dependence};
 pub use depgraph::DepDomain;
 pub use dispatcher::{Dispatcher, LockedDispatcher};
 pub use messages::{MsgBatch, QueueSystem};
-pub use pool::{RuntimeKind, RuntimeShared, TaskErrors};
+pub use pool::{RuntimeKind, RuntimeShared, SubmitError, TaskErrors};
 pub use ready::{LockedReadyPools, PoolContention, ReadyPools};
 pub use replay::{GraphRecording, ReplayOutcome, ReplayTask};
 pub use trace::{LockedTracer, ThreadState, TraceEvent, TraceKind, Tracer};

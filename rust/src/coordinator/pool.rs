@@ -107,6 +107,16 @@ pub struct RtStats {
     pub replay_fallbacks: Counter,
     /// Graph recordings captured in record mode.
     pub recordings_captured: Counter,
+    /// External submissions admitted through the ingress ring (the
+    /// serve-scale lane — EXPERIMENTS.md §Serve-scale ingress).
+    pub ingress_admitted: Counter,
+    /// External submissions rejected by ring backpressure (`try_submit`
+    /// returned `Busy`): the serve plane's admission gauge.
+    pub ingress_rejected: Counter,
+    /// External submissions that bypassed the ring (no dependences, or a
+    /// synchronous organization): admitted directly by the submitting
+    /// thread, admission cannot fail.
+    pub ingress_direct: Counter,
 }
 
 /// Failure summary of a run — the payload of the non-breaking checked APIs
@@ -138,6 +148,61 @@ impl std::fmt::Display for TaskErrors {
 }
 
 impl std::error::Error for TaskErrors {}
+
+/// Why an external submission was not admitted
+/// ([`RuntimeShared::try_spawn_external`] / `TaskSystem::try_submit`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The ingress ring is full: backpressure engaged instead of unbounded
+    /// queue growth. Retry later, or use the blocking submit flavour.
+    Busy,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => write!(f, "ingress ring full (backpressure engaged)"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Per-domain sticky failure cell (serve plane): every live `GraphDomain`
+/// registers one, keyed by its root task id, and the failure paths
+/// attribute panics/cancellations to the owning domain by climbing the
+/// parent chain. Reading a cell is lock-free counter loads; the registry
+/// lock is taken only at domain churn and on the (rare) failure paths.
+pub(crate) struct DomainErrorCell {
+    failed: Counter,
+    cancelled: Counter,
+    first_panic: SpinLock<Option<String>>,
+}
+
+impl DomainErrorCell {
+    fn new() -> DomainErrorCell {
+        DomainErrorCell {
+            failed: Counter::new(),
+            cancelled: Counter::new(),
+            first_panic: SpinLock::new(None),
+        }
+    }
+
+    /// `None` while the domain is clean — the domain-scoped analogue of
+    /// [`RuntimeShared::task_errors`], same sticky fail-stop semantics.
+    pub(crate) fn summary(&self) -> Option<TaskErrors> {
+        let tasks_failed = self.failed.get();
+        let tasks_cancelled = self.cancelled.get();
+        if tasks_failed == 0 && tasks_cancelled == 0 {
+            return None;
+        }
+        Some(TaskErrors {
+            tasks_failed,
+            tasks_cancelled,
+            first_panic: self.first_panic.lock().clone(),
+        })
+    }
+}
 
 /// Hang-watchdog progress stamp: a coarse "last useful work" timestamp
 /// (µs since runtime construction) the idle paths compare against
@@ -226,6 +291,11 @@ pub struct RuntimeShared {
     /// per iteration — so the cell's retire list stays bounded by the
     /// number of distinct recordings replayed.
     replay: RcuCell<Option<Arc<ReplayRun>>>,
+    /// Sticky per-domain failure cells, keyed by each live `GraphDomain`'s
+    /// root task id (registered at creation, removed at retirement). A
+    /// locked `Vec` suffices: it is touched at domain churn and on failure
+    /// paths only, and live-domain counts stay small.
+    domain_errors: SpinLock<Vec<(TaskId, Arc<DomainErrorCell>)>>,
 }
 
 impl RuntimeShared {
@@ -267,6 +337,34 @@ impl RuntimeShared {
         fault_plan: Option<Arc<FaultPlan>>,
         topology: Option<Topology>,
     ) -> Arc<Self> {
+        Self::new_full(
+            kind,
+            num_threads,
+            params,
+            tracing,
+            seed,
+            ranged_deps,
+            fault_plan,
+            topology,
+            crate::coordinator::messages::DEFAULT_INGRESS_CAPACITY,
+        )
+    }
+
+    /// [`RuntimeShared::new_with_options`] plus the ingress-ring capacity
+    /// (the external lane's admission bound —
+    /// `TaskSystemBuilder::ingress_capacity`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_full(
+        kind: RuntimeKind,
+        num_threads: usize,
+        params: DdastParams,
+        tracing: bool,
+        seed: u64,
+        ranged_deps: bool,
+        fault_plan: Option<Arc<FaultPlan>>,
+        topology: Option<Topology>,
+        ingress_capacity: usize,
+    ) -> Arc<Self> {
         assert!(num_threads >= 1, "need at least the main thread");
         let topo = topology.unwrap_or_else(|| Topology::detect(num_threads)).cover(num_threads);
         // GOMP-like: a single central *locked* ready queue all threads hit
@@ -293,7 +391,12 @@ impl RuntimeShared {
             tunables: Arc::new(crate::coordinator::autotune::TunableParams::new(params)),
             num_threads,
             topo,
-            queues: QueueSystem::with_topology(num_threads, trace_slots, topo),
+            queues: QueueSystem::with_topology_and_ingress(
+                num_threads,
+                trace_slots,
+                topo,
+                ingress_capacity,
+            ),
             ready,
             dispatcher: Dispatcher::new(),
             root: Wd::root(),
@@ -307,6 +410,7 @@ impl RuntimeShared {
             shutdown: AtomicBool::new(false),
             next_task_id: AtomicU64::new(1),
             replay: RcuCell::new(None),
+            domain_errors: SpinLock::new(Vec::new()),
         })
     }
 
@@ -419,6 +523,49 @@ impl RuntimeShared {
         Some(TaskErrors { tasks_failed, tasks_cancelled, first_panic: self.first_panic.lock().clone() })
     }
 
+    /// Register a domain root for per-domain failure attribution
+    /// (`GraphDomain` creation). Returns the domain's sticky cell; the
+    /// holder reads it directly, no registry lookup on the read side.
+    pub(crate) fn register_domain(&self, root_id: TaskId) -> Arc<DomainErrorCell> {
+        let cell = Arc::new(DomainErrorCell::new());
+        self.domain_errors.lock().push((root_id, Arc::clone(&cell)));
+        cell
+    }
+
+    /// Retire a domain root from the attribution registry (`GraphDomain`
+    /// drop). Holders may keep reading their own cell handle.
+    pub(crate) fn deregister_domain(&self, root_id: TaskId) {
+        self.domain_errors.lock().retain(|(id, _)| *id != root_id);
+    }
+
+    /// The failure cell of the domain owning `task`, if any: climb the
+    /// parent chain to the topmost ancestor below the implicit root and
+    /// look its id up in the registry. Failure paths only — the happy path
+    /// never calls this.
+    fn domain_cell_for(&self, task: &Arc<Wd>) -> Option<Arc<DomainErrorCell>> {
+        let mut top_id = task.id;
+        let mut cur = task.parent.upgrade();
+        while let Some(p) = cur {
+            if p.id == TaskId(0) {
+                break; // the implicit whole-program root owns no cell
+            }
+            top_id = p.id;
+            cur = p.parent.upgrade();
+        }
+        let reg = self.domain_errors.lock();
+        reg.iter().find(|(id, _)| *id == top_id).map(|(_, c)| Arc::clone(c))
+    }
+
+    /// Count a poisoned cancellation, attributing it to the owning
+    /// domain's sticky cell when the task lives under a registered
+    /// `GraphDomain` — containment stays per-tenant (ISSUE 9 layer 1).
+    fn note_cancelled(&self, task: &Arc<Wd>) {
+        self.stats.tasks_cancelled.inc();
+        if let Some(cell) = self.domain_cell_for(task) {
+            cell.cancelled.inc();
+        }
+    }
+
     /// One hang-watchdog pass, piggybacked on the idle paths (the DDAST
     /// sweep's empty-handed exits, the DAS loop's idle tier, timed-park
     /// timeouts). Detects "work outstanding + workers parked + no progress
@@ -445,6 +592,11 @@ impl RuntimeShared {
             if self.queues.workers[w].pending() > 0 {
                 signals.raise(w);
             }
+        }
+        // The external lane heals the same way: entries resident in the
+        // ingress ring behind a clean external bit get the bit restored.
+        if self.queues.ingress_pending() > 0 {
+            signals.raise_external();
         }
         signals.wake_all();
         self.watchdog.note_progress();
@@ -548,6 +700,186 @@ impl RuntimeShared {
         self.queues.signals().wake_parked_near(n, Some(worker));
     }
 
+    // ---- external-submitter lane (serve-scale ingress) -------------------
+
+    /// Create an externally submitted task and route it. `Ok(wd)` — fully
+    /// admitted through a direct route: no dependences (ready immediately,
+    /// pushed straight to a deque — safe from a foreign thread because the
+    /// deque's back side is token-serialized for pushers and thieves
+    /// alike), or a synchronous organization (Fig 2: the submitting thread
+    /// mutates the graph itself under the domain locks, exactly like a
+    /// pool thread would — admission cannot fail). `Err(wd)` — the task
+    /// must go through the bounded ingress ring; the caller decides
+    /// blocking vs rejecting. The submitter has no deque or trace slot of
+    /// its own: ready pushes spread by task id, and **no** tracer call
+    /// happens on any external path (trace rings are single-writer).
+    fn create_external(
+        self: &Arc<Self>,
+        parent: &Arc<Wd>,
+        deps: Vec<Dependence>,
+        label: &'static str,
+        body: TaskBody,
+    ) -> Result<Arc<Wd>, Arc<Wd>> {
+        assert!(
+            !self.shutdown_requested(),
+            "external submit after shutdown was requested"
+        );
+        let wd = Wd::new(self.fresh_task_id(), deps, label, Arc::downgrade(parent), body);
+        parent.child_created();
+        self.stats.tasks_created.inc();
+        self.stats.tasks_outstanding.inc();
+
+        if wd.deps.is_empty() {
+            wd.set_state(WdState::Submitted);
+            let became_ready = wd.release_pred();
+            debug_assert!(became_ready);
+            wd.set_state(WdState::Ready);
+            let slot = (wd.id.0 as usize) % self.num_threads;
+            self.ready.push(slot, Arc::clone(&wd));
+            self.wake_for_ready(slot, 1);
+            self.stats.ingress_direct.inc();
+            return Ok(wd);
+        }
+
+        match self.kind {
+            RuntimeKind::Sync | RuntimeKind::GompLike => {
+                let slot = (wd.id.0 as usize) % self.num_threads;
+                self.process_submit_direct(slot, Arc::clone(&wd));
+                self.stats.ingress_direct.inc();
+                Ok(wd)
+            }
+            RuntimeKind::Ddast | RuntimeKind::CentralDast => Err(wd),
+        }
+    }
+
+    /// External-submitter lane, blocking flavour: create + submit a task
+    /// from a thread *outside* the pool, waiting out ring backpressure
+    /// instead of rejecting — the submission is never lost. The polite
+    /// idle ladder bounds the retry cost; the pool must be drained
+    /// concurrently (worker threads, a DAS thread, or a thread inside
+    /// `taskwait`) for the wait to end.
+    pub fn spawn_external(
+        self: &Arc<Self>,
+        parent: &Arc<Wd>,
+        deps: Vec<Dependence>,
+        label: &'static str,
+        body: TaskBody,
+    ) -> Arc<Wd> {
+        match self.create_external(parent, deps, label, body) {
+            Ok(wd) => wd,
+            Err(wd) => {
+                let mut pending = Arc::clone(&wd);
+                let mut idle: u32 = 0;
+                loop {
+                    match self.queues.try_push_external(pending) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            pending = back;
+                            idle = idle.saturating_add(1);
+                            idle_backoff(idle);
+                        }
+                    }
+                }
+                self.stats.ingress_admitted.inc();
+                wd
+            }
+        }
+    }
+
+    /// External-submitter lane, non-blocking flavour:
+    /// [`SubmitError::Busy`] when the ingress ring is full. On rejection
+    /// every side effect of admission is rolled back — including the
+    /// parent's child accounting, settled through the **full**
+    /// child-completion protocol (see
+    /// [`reject_external`](RuntimeShared::reject_external)).
+    pub fn try_spawn_external(
+        self: &Arc<Self>,
+        parent: &Arc<Wd>,
+        deps: Vec<Dependence>,
+        label: &'static str,
+        body: TaskBody,
+    ) -> Result<Arc<Wd>, SubmitError> {
+        match self.create_external(parent, deps, label, body) {
+            Ok(wd) => Ok(wd),
+            Err(wd) => match self.queues.try_push_external(Arc::clone(&wd)) {
+                Ok(()) => {
+                    self.stats.ingress_admitted.inc();
+                    Ok(wd)
+                }
+                Err(task) => {
+                    self.reject_external(&task);
+                    Err(SubmitError::Busy)
+                }
+            },
+        }
+    }
+
+    /// Roll back a rejected external admission. The creation counters are
+    /// undone and the parent's `children_live` is settled through the
+    /// **full** child-completion protocol: a bare decrement could strand a
+    /// parent mid-`taskwait` that counted the phantom child at its
+    /// re-check and parked — the wake edge must fire exactly as if the
+    /// child had finished.
+    fn reject_external(&self, task: &Arc<Wd>) {
+        self.stats.ingress_rejected.inc();
+        self.stats.tasks_created.dec();
+        self.stats.tasks_outstanding.dec();
+        task.drop_body();
+        let Some(parent) = task.parent.upgrade() else {
+            self.stats.teardown_degradations.inc();
+            return;
+        };
+        if parent.child_done() {
+            if let Some(w) = parent.take_waiter() {
+                self.stats.taskwait_wake_edges.inc();
+                if !self.fault_inject(FaultSite::WakeEdge) {
+                    self.queues.signals().wake_worker(w);
+                }
+            }
+            if parent.done_handled() {
+                parent.set_state(WdState::Deletable);
+            }
+        }
+    }
+
+    /// Drain up to `budget` externally submitted tasks from the ingress
+    /// ring into `batch` and process them through the ordinary batch path
+    /// (same-parent grouping, one shard-acquisition set per run). Returns
+    /// the number of messages processed. The directory's external bit is
+    /// claimed first — concurrent managers don't all pile onto the ring —
+    /// and re-raised when entries remain, so the invariant "ring
+    /// non-empty ⇒ bit raised or a drain in flight" holds at every exit.
+    pub fn drain_ingress(&self, mgr_worker: usize, batch: &mut MsgBatch, budget: usize) -> u64 {
+        let signals = self.queues.signals();
+        // Plain-load guard before the RMW, same discipline as the DAS
+        // thread's per-worker signal sweep.
+        if !signals.external_raised() || !signals.try_claim_external() {
+            return 0;
+        }
+        let mut n = 0u64;
+        while (n as usize) < budget {
+            match self.queues.pop_external() {
+                Some(task) => {
+                    batch.submits.push(task);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        if n > 0 {
+            self.process_batch(mgr_worker, batch);
+        }
+        // Budget exhausted mid-ring, or a producer mid-push (tail claimed,
+        // value not yet published): restore the bit so the leftover is
+        // somebody's work. The producer's own raise makes this merely
+        // redundant in the mid-push case, never required — but redundant
+        // raises are cheap and lost ones are deadlocks.
+        if self.queues.ingress_pending() > 0 {
+            signals.raise_external();
+        }
+        n
+    }
+
     fn process_submit_direct(&self, worker: usize, task: Arc<Wd>) {
         let Some(parent) = task.parent.upgrade() else {
             // Teardown after failure: the parent WD was already reclaimed,
@@ -576,7 +908,7 @@ impl RuntimeShared {
         task.set_state(WdState::Submitted);
         task.set_state(WdState::Cancelled);
         task.drop_body();
-        self.stats.tasks_cancelled.inc();
+        self.note_cancelled(&task);
         task.set_state(WdState::DoneHandled);
         task.set_state(WdState::Deletable);
         self.stats.tasks_outstanding.dec();
@@ -705,7 +1037,7 @@ impl RuntimeShared {
                 for t in &ready {
                     t.set_state(WdState::Cancelled);
                     t.drop_body();
-                    self.stats.tasks_cancelled.inc();
+                    self.note_cancelled(t);
                 }
                 poisoned.extend(ready);
             } else {
@@ -869,7 +1201,7 @@ impl RuntimeShared {
             for t in &ready {
                 t.set_state(WdState::Cancelled);
                 t.drop_body();
-                self.stats.tasks_cancelled.inc();
+                self.note_cancelled(t);
             }
             poisoned.extend(ready);
         } else {
@@ -928,7 +1260,9 @@ impl RuntimeShared {
         }
     }
 
-    /// Record the first caught task panic for [`TaskErrors::first_panic`].
+    /// Record the first caught task panic for [`TaskErrors::first_panic`],
+    /// globally and — when the task lives under a registered `GraphDomain`
+    /// — in the owning domain's sticky cell.
     fn record_panic(&self, task: &Arc<Wd>, payload: &(dyn std::any::Any + Send)) {
         let msg = if let Some(s) = payload.downcast_ref::<&str>() {
             s
@@ -937,9 +1271,19 @@ impl RuntimeShared {
         } else {
             "non-string panic payload"
         };
-        let mut slot = self.first_panic.lock();
-        if slot.is_none() {
-            *slot = Some(format!("task {:?} ({}) panicked: {msg}", task.id, task.label));
+        let full = format!("task {:?} ({}) panicked: {msg}", task.id, task.label);
+        {
+            let mut slot = self.first_panic.lock();
+            if slot.is_none() {
+                *slot = Some(full.clone());
+            }
+        }
+        if let Some(cell) = self.domain_cell_for(task) {
+            cell.failed.inc();
+            let mut slot = cell.first_panic.lock();
+            if slot.is_none() {
+                *slot = Some(full);
+            }
         }
     }
 
@@ -1136,6 +1480,16 @@ impl RuntimeShared {
                     }
                     processed += cnt as u64;
                 }
+            }
+            // The external lane: the centralized manager owns the ingress
+            // ring drain too (claim bit → pop chunk → batch path; the
+            // re-raise inside keeps leftovers visible between chunks).
+            loop {
+                let cnt = self.drain_ingress(worker_slot, &mut batch, DAS_BATCH);
+                if cnt == 0 {
+                    break;
+                }
+                processed += cnt;
             }
             if processed > 0 {
                 self.stats.mgr_activations.inc();
@@ -1592,6 +1946,128 @@ mod tests {
         assert!(rt.quiescent(), "poisoned graph drains to quiescence");
         let errs = rt.task_errors().unwrap();
         assert_eq!((errs.tasks_failed, errs.tasks_cancelled), (1, 3));
+        clear_ctx();
+    }
+
+    #[test]
+    fn external_submissions_flow_through_the_ring() {
+        let rt = RuntimeShared::new_full(
+            RuntimeKind::Ddast,
+            1,
+            DdastParams::tuned(1),
+            false,
+            42,
+            false,
+            None,
+            None,
+            32,
+        );
+        rt.register_ddast();
+        install_ctx(&rt, 0);
+        let root = Arc::clone(&rt.root);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let ext = {
+            let rt2 = Arc::clone(&rt);
+            let root2 = Arc::clone(&root);
+            let h = Arc::clone(&hits);
+            std::thread::spawn(move || {
+                for i in 0..16u64 {
+                    let h = Arc::clone(&h);
+                    rt2.spawn_external(
+                        &root2,
+                        vec![dep_inout_addr(i % 3)],
+                        "ext",
+                        Box::new(move || {
+                            h.fetch_add(1, Ordering::Relaxed);
+                        }),
+                    );
+                }
+            })
+        };
+        ext.join().unwrap();
+        drain(&rt);
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+        assert_eq!(rt.stats.ingress_admitted.get(), 16);
+        assert_eq!(rt.stats.tasks_executed.get(), 16);
+        assert!(rt.quiescent(), "ring drained, external bit reclaimed");
+        clear_ctx();
+    }
+
+    #[test]
+    fn external_no_deps_submission_is_direct() {
+        let rt = rt(RuntimeKind::Ddast);
+        let root = Arc::clone(&rt.root);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        rt.spawn_external(&root, vec![], "ext", Box::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+        assert_eq!(rt.stats.ingress_direct.get(), 1);
+        assert_eq!(rt.queues.ingress_pending(), 0, "never touched the ring");
+        drain(&rt);
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        clear_ctx();
+    }
+
+    #[test]
+    fn external_backpressure_rejects_and_rolls_back() {
+        let rt = RuntimeShared::new_full(
+            RuntimeKind::Ddast,
+            1,
+            DdastParams::tuned(1),
+            false,
+            42,
+            false,
+            None,
+            None,
+            2,
+        );
+        rt.register_ddast();
+        install_ctx(&rt, 0);
+        let root = Arc::clone(&rt.root);
+        for _ in 0..2 {
+            rt.try_spawn_external(&root, vec![dep_out(1)], "ext", Box::new(|| {}))
+                .expect("ring has room");
+        }
+        let err = rt
+            .try_spawn_external(&root, vec![dep_out(1)], "ext", Box::new(|| {}))
+            .expect_err("ring full");
+        assert_eq!(err, SubmitError::Busy);
+        assert_eq!(rt.stats.ingress_rejected.get(), 1);
+        assert_eq!(rt.stats.tasks_created.get(), 2, "rejected creation rolled back");
+        assert_eq!(rt.root.children_live(), 2, "phantom child settled");
+        drain(&rt); // the taskwait drives the dispatcher, draining the ring
+        assert_eq!(rt.stats.tasks_executed.get(), 2);
+        assert!(rt.quiescent());
+        clear_ctx();
+    }
+
+    #[test]
+    fn domain_failures_attribute_to_the_registered_cell() {
+        let rt = rt(RuntimeKind::Sync);
+        // A detached domain root, exactly as GraphDomain builds one.
+        let dom_root = Wd::new(
+            rt.fresh_task_id(),
+            Vec::new(),
+            "domain-root",
+            std::sync::Weak::new(),
+            Box::new(|| {}),
+        );
+        dom_root.set_state(WdState::Running);
+        let cell = rt.register_domain(dom_root.id);
+        rt.spawn_from(0, &dom_root, vec![dep_out(1)], "head", Box::new(|| panic!("dom boom")));
+        rt.spawn_from(0, &dom_root, vec![dep_in(1)], "succ", Box::new(|| {}));
+        // An innocent bystander under the implicit root.
+        let root = Arc::clone(&rt.root);
+        rt.spawn_from(0, &root, vec![dep_out(7)], "clean", Box::new(|| {}));
+        rt.taskwait_on(0, &dom_root);
+        drain(&rt);
+        let errs = cell.summary().expect("domain cell records the failure");
+        assert_eq!((errs.tasks_failed, errs.tasks_cancelled), (1, 1));
+        assert!(errs.first_panic.unwrap().contains("dom boom"));
+        // Global sticky counters see it too; the bystander ran clean.
+        assert_eq!(rt.stats.tasks_executed.get(), 1);
+        rt.deregister_domain(dom_root.id);
         clear_ctx();
     }
 

@@ -106,7 +106,13 @@ impl ReadyPools {
             ),
             // +2: the CentralDast DAS slot and stray non-pool threads
             // (tests, the main thread before install) also touch the gauge.
-            ready_count: ShardedCounter::with_shards(num_threads + 2),
+            // External submitters get their own shard allowance on top: the
+            // serve plane's no-deps fast path bumps this gauge from outside
+            // the pool, and must not fold onto a pool thread's shard (same
+            // sizing fix as the message plane's pending gauge).
+            ready_count: ShardedCounter::with_shards(
+                num_threads + 2 + crate::coordinator::messages::EXTERNAL_SHARD_ALLOWANCE,
+            ),
             steals: Counter::new(),
             local_steals: Counter::new(),
             remote_steals: Counter::new(),

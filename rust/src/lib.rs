@@ -55,6 +55,6 @@ pub mod sim;
 pub mod runtime;
 pub mod bench_harness;
 
-pub use coordinator::{TaskSystem, RuntimeKind, DepMode, DdastParams};
+pub use coordinator::{TaskSystem, RuntimeKind, DepMode, DdastParams, GraphDomain, SubmitError};
 pub use sim::machine::MachineConfig;
 pub use substrate::Topology;

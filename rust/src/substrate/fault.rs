@@ -64,6 +64,10 @@ pub struct FaultPlan {
     draws: [Counter; NUM_FAULT_SITES],
     /// Injections per site.
     injected: [Counter; NUM_FAULT_SITES],
+    /// Remaining injections per site (`u64::MAX` = unbounded). A budget of
+    /// `n` makes exactly the first `n` sampled hits inject — the handle
+    /// that scopes a fault to "the first task" in containment tests.
+    budgets: [AtomicU64; NUM_FAULT_SITES],
 }
 
 impl FaultPlan {
@@ -75,12 +79,22 @@ impl FaultPlan {
             rates: [0; NUM_FAULT_SITES],
             draws: std::array::from_fn(|_| Counter::new()),
             injected: std::array::from_fn(|_| Counter::new()),
+            budgets: std::array::from_fn(|_| AtomicU64::new(u64::MAX)),
         }
     }
 
     /// Arm `site` at `rate` out of [`FAULT_ALWAYS`] (clamped).
     pub fn with_rate(mut self, site: FaultSite, rate: u32) -> FaultPlan {
         self.rates[site as usize] = rate.min(FAULT_ALWAYS);
+        self
+    }
+
+    /// Cap `site` at `budget` total injections: sampled hits beyond the
+    /// budget are suppressed (the draw still advances the shared stream).
+    /// `FAULT_ALWAYS` + budget 1 pins the fault to exactly the first draw
+    /// — e.g. "only domain A's head task panics".
+    pub fn with_budget(self, site: FaultSite, budget: u64) -> FaultPlan {
+        self.budgets[site as usize].store(budget, Ordering::Relaxed);
         self
     }
 
@@ -120,10 +134,26 @@ impl FaultPlan {
                 }
             }
         };
-        if hit {
-            self.injected[site as usize].inc();
+        if !hit {
+            return false;
         }
-        hit
+        // Budget gate: claim one injection slot atomically; concurrent
+        // hits over the last slot race the decrement, so at most `budget`
+        // ever pass.
+        if self.budgets[site as usize]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+                if b == u64::MAX {
+                    Some(b) // unbounded: never consumed
+                } else {
+                    b.checked_sub(1)
+                }
+            })
+            .is_err()
+        {
+            return false;
+        }
+        self.injected[site as usize].inc();
+        true
     }
 
     /// Draws taken at `site` (armed sites only).
@@ -201,6 +231,20 @@ mod tests {
         assert!((0.2..0.3).contains(&frac), "frac={frac}");
         assert_eq!(plan.draws(FaultSite::WakeEdge), 10_000);
         assert_eq!(plan.injected(FaultSite::WakeEdge), hits as u64);
+    }
+
+    #[test]
+    fn budget_caps_total_injections() {
+        let plan = FaultPlan::new(5)
+            .with_rate(FaultSite::TaskBody, FAULT_ALWAYS)
+            .with_budget(FaultSite::TaskBody, 3);
+        let hits = (0..100).filter(|_| plan.should_inject(FaultSite::TaskBody)).count();
+        assert_eq!(hits, 3, "exactly the first three draws inject");
+        assert_eq!(plan.draws(FaultSite::TaskBody), 100, "draws keep counting");
+        assert_eq!(plan.injected(FaultSite::TaskBody), 3);
+        // Unbudgeted sites stay unbounded.
+        let free = FaultPlan::new(5).with_rate(FaultSite::WakeEdge, FAULT_ALWAYS);
+        assert!((0..100).all(|_| free.should_inject(FaultSite::WakeEdge)));
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Bounded multi-producer ingress ring for the external-submitter lane.
+//!
+//! The per-worker SPSC queues ([`crate::substrate::spsc`]) carry the pool's
+//! own Submit/Done traffic: exactly one producer (the worker) and one
+//! consumer (whichever manager claimed the worker's signal bit). Threads
+//! *outside* the pool have no SPSC slot — giving every external client its
+//! own registered slot would tie admission capacity to client count, which
+//! is exactly what a serve-scale ingress must avoid. Instead, all external
+//! producers share one bounded ring, and the managers drain it through the
+//! same `MsgBatch` path as the SPSC plane.
+//!
+//! # Structure
+//!
+//! A fixed power-of-two array of slots, each carrying a sequence word
+//! (Vyukov-style bounded MPMC queue). A producer claims slot `tail & mask`
+//! by CAS-advancing `tail` once the slot's sequence says "empty for this
+//! lap"; a consumer symmetrically claims `head & mask` once the sequence
+//! says "full for this lap". The sequence word is the per-slot handoff:
+//! `store(Release)` after writing the value, `load(Acquire)` before reading
+//! it, so values are published without any shared lock. Competing producers
+//! (or competing manager drains) only ever contend on the CAS — no producer
+//! blocks another through a half-finished write.
+//!
+//! # Backpressure
+//!
+//! `try_push` never waits: when the ring is full for a whole lap it returns
+//! the value to the caller (`Err`), and the `rejected` counter records the
+//! admission failure. Bounded capacity is the admission control — under
+//! saturation the request plane pushes back on clients instead of growing
+//! an unbounded queue in the runtime.
+//!
+//! # No lost wakeups
+//!
+//! The ring itself only publishes values; waking a parked pool is the
+//! caller's job (push, then raise the signal directory's external-producer
+//! bit — see `SignalDirectory::raise_external`, which issues the producer-
+//! side fence of the park protocol).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::substrate::deque::CachePadded;
+use crate::substrate::stats::Counter;
+
+struct Slot<T> {
+    /// Lap marker: `index` when empty and writable by the producer that
+    /// claims `tail == index`; `index + 1` when full and readable by the
+    /// consumer that claims `head == index`; `index + capacity` after
+    /// consumption (empty for the next lap).
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded Vyukov-style MPMC ring. See the module docs.
+pub struct IngressRing<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    /// Consumer cursor (managers compete here).
+    head: CachePadded<AtomicUsize>,
+    /// Producer cursor (external submitters compete here).
+    tail: CachePadded<AtomicUsize>,
+    /// Accepted pushes.
+    pushes: Counter,
+    /// Successful pops.
+    pops: Counter,
+    /// `try_push` rejections (ring full: backpressure engaged).
+    rejected: Counter,
+}
+
+// SAFETY: values move through slots guarded by the per-slot sequence
+// protocol; a slot is only read/written by the thread that won the
+// corresponding cursor CAS for that lap.
+unsafe impl<T: Send> Send for IngressRing<T> {}
+unsafe impl<T: Send> Sync for IngressRing<T> {}
+
+impl<T> IngressRing<T> {
+    /// A ring with at least `capacity` slots (rounded up to a power of
+    /// two, minimum 2).
+    pub fn new(capacity: usize) -> IngressRing<T> {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Box<[Slot<T>]> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        IngressRing {
+            slots,
+            mask: cap - 1,
+            head: CachePadded::new(AtomicUsize::new(0)),
+            tail: CachePadded::new(AtomicUsize::new(0)),
+            pushes: Counter::new(),
+            pops: Counter::new(),
+            rejected: Counter::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Non-blocking admission: `Err(value)` hands the value back when the
+    /// ring is full (backpressure).
+    pub fn try_push(&self, value: T) -> Result<(), T> {
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[tail & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - tail as isize;
+            if dif == 0 {
+                // Slot empty for this lap: race other producers for it.
+                match self.tail.compare_exchange_weak(
+                    tail,
+                    tail.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the tail CAS grants exclusive
+                        // write access to this slot for this lap.
+                        unsafe { (*slot.val.get()).write(value) };
+                        slot.seq.store(tail.wrapping_add(1), Ordering::Release);
+                        self.pushes.inc();
+                        return Ok(());
+                    }
+                    Err(observed) => tail = observed,
+                }
+            } else if dif < 0 {
+                // A whole lap behind: full. Reject — this is the
+                // admission-control edge, not an error.
+                self.rejected.inc();
+                return Err(value);
+            } else {
+                // Another producer claimed this tail; reload and retry.
+                tail = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Pop one value if available. Managers may compete here; losers retry
+    /// on the next slot or observe empty.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[head & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - (head.wrapping_add(1)) as isize;
+            if dif == 0 {
+                // Slot full for this lap: race other consumers for it.
+                match self.head.compare_exchange_weak(
+                    head,
+                    head.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the head CAS grants exclusive
+                        // read access to this slot for this lap.
+                        let value = unsafe { (*slot.val.get()).assume_init_read() };
+                        slot.seq
+                            .store(head.wrapping_add(self.mask + 1), Ordering::Release);
+                        self.pops.inc();
+                        return Some(value);
+                    }
+                    Err(observed) => head = observed,
+                }
+            } else if dif < 0 {
+                // Not yet produced: empty (or a producer mid-write).
+                return None;
+            } else {
+                head = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Entries currently resident (approximate under concurrency, exact
+    /// when quiescent).
+    pub fn len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Relaxed);
+        tail.wrapping_sub(head).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (accepted pushes, pops, rejected pushes).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.pushes.get(), self.pops.get(), self.rejected.get())
+    }
+}
+
+impl<T> Drop for IngressRing<T> {
+    fn drop(&mut self) {
+        // Drain undelivered values so their destructors run.
+        while self.try_pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let ring = IngressRing::new(8);
+        assert_eq!(ring.capacity(), 8);
+        for i in 0..8 {
+            assert!(ring.try_push(i).is_ok());
+        }
+        assert_eq!(ring.len(), 8);
+        for i in 0..8 {
+            assert_eq!(ring.try_pop(), Some(i));
+        }
+        assert_eq!(ring.try_pop(), None);
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn full_ring_rejects_and_counts() {
+        let ring = IngressRing::new(2);
+        assert!(ring.try_push(1).is_ok());
+        assert!(ring.try_push(2).is_ok());
+        assert_eq!(ring.try_push(3), Err(3));
+        let (pushes, pops, rejected) = ring.stats();
+        assert_eq!((pushes, pops, rejected), (2, 0, 1));
+        assert_eq!(ring.try_pop(), Some(1));
+        assert!(ring.try_push(3).is_ok());
+        assert_eq!(ring.try_pop(), Some(2));
+        assert_eq!(ring.try_pop(), Some(3));
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        let ring: IngressRing<u32> = IngressRing::new(5);
+        assert_eq!(ring.capacity(), 8);
+        let tiny: IngressRing<u32> = IngressRing::new(0);
+        assert_eq!(tiny.capacity(), 2);
+    }
+
+    #[test]
+    fn wraps_many_laps() {
+        let ring = IngressRing::new(4);
+        for lap in 0..1000u64 {
+            assert!(ring.try_push(lap).is_ok());
+            assert_eq!(ring.try_pop(), Some(lap));
+        }
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing() {
+        const PRODUCERS: usize = 4;
+        const PER: u64 = 5_000;
+        let ring = Arc::new(IngressRing::new(64));
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS as u64 {
+            let r = Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER {
+                    let mut v = p * PER + i;
+                    loop {
+                        match r.try_push(v) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                v = back;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let r = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                let mut seen = vec![false; PRODUCERS * PER as usize];
+                let mut got = 0usize;
+                while got < seen.len() {
+                    match r.try_pop() {
+                        Some(v) => {
+                            assert!(!seen[v as usize], "duplicate delivery of {v}");
+                            seen[v as usize] = true;
+                            got += 1;
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+                assert_eq!(r.try_pop(), None);
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        consumer.join().unwrap();
+        let (pushes, pops, _) = ring.stats();
+        assert_eq!(pushes, PRODUCERS as u64 * PER);
+        assert_eq!(pops, PRODUCERS as u64 * PER);
+    }
+
+    #[test]
+    fn drop_releases_undelivered_values() {
+        let payload = Arc::new(());
+        {
+            let ring = IngressRing::new(4);
+            ring.try_push(Arc::clone(&payload)).unwrap();
+            ring.try_push(Arc::clone(&payload)).unwrap();
+            assert_eq!(Arc::strong_count(&payload), 3);
+        }
+        assert_eq!(Arc::strong_count(&payload), 1);
+    }
+}

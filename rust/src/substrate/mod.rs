@@ -9,6 +9,7 @@
 
 pub mod deque;
 pub mod fault;
+pub mod ingress;
 pub mod park;
 pub mod rcu;
 pub mod signal;
@@ -22,6 +23,7 @@ pub mod stats;
 
 pub use deque::{CachePadded, ShardedCounter, Steal, WsDeque};
 pub use fault::{FaultPlan, FaultSite, FAULT_ALWAYS};
+pub use ingress::IngressRing;
 pub use park::Parker;
 pub use rcu::RcuCell;
 pub use region::{RegionKey, RegionSet};

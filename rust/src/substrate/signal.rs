@@ -117,6 +117,25 @@
 //! wake to one slot — the taskwait child-completion wake edge and the
 //! dependence-targeted wake edge, where the finalizer knows exactly which
 //! worker is parked waiting for it.
+//!
+//! ## External producers (the ingress lane)
+//!
+//! Threads *outside* the pool have no worker slot — and must not get one:
+//! directory slots are laid out along the machine topology, and widening
+//! the layout per external client would change the socket split the tests
+//! and the wake paths rely on. Instead the directory carries **one**
+//! external-producer bit beside the worker slots
+//! ([`raise_external`](SignalDirectory::raise_external) /
+//! [`try_claim_external`](SignalDirectory::try_claim_external)): an
+//! external submitter publishes its work (a push into the shared ingress
+//! ring), then raises the bit — which wakes a parked worker through the
+//! same fenced `wake_parked_near` path as a worker raise, so the
+//! no-lost-wakeup argument above extends unchanged to the new producer
+//! class. Managers treat the bit exactly like a worker's dirty flag:
+//! claim, drain the ring, re-raise if the drain left entries behind. The
+//! bit is a *separate field*, so scans, sweeps, socket counts and every
+//! worker-indexed path are byte-for-byte unaffected when no external
+//! producer exists.
 
 use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
@@ -167,6 +186,13 @@ pub struct SignalDirectory {
     parks: Counter,
     /// Successful wakes delivered to parked workers.
     park_wakes: Counter,
+    /// External-producer dirty bit (module docs §External producers).
+    /// Deliberately *not* a worker slot: the slot/word layout — and with
+    /// it the socket split — stays identical whether or not external
+    /// submitters exist.
+    external: CachePadded<AtomicBool>,
+    /// External raises (ingress pushes signalled).
+    external_raises: Counter,
 }
 
 impl SignalDirectory {
@@ -207,6 +233,8 @@ impl SignalDirectory {
             parkers: (0..n).map(|_| CachePadded::new(Parker::new())).collect(),
             parks: Counter::new(),
             park_wakes: Counter::new(),
+            external: CachePadded::new(AtomicBool::new(false)),
+            external_raises: Counter::new(),
         }
     }
 
@@ -367,6 +395,43 @@ impl SignalDirectory {
     /// (raises, clean→dirty promotions, successful claims).
     pub fn stats(&self) -> (u64, u64, u64) {
         (self.raises.get(), self.promotions.get(), self.claims.get())
+    }
+
+    // ---- external producers ---------------------------------------------
+
+    /// Mark the external-producer lane dirty. Called by an outside thread
+    /// *after* it published work into the ingress ring (publish-then-
+    /// signal, exactly like a worker's `raise`). Wakes a parked worker on
+    /// every call — a stale-dirty bit must not swallow the wake for fresh
+    /// traffic behind it — and `wake_parked_near` issues the producer-side
+    /// `SeqCst` fence, so the no-lost-wakeup pairing with `begin_park`
+    /// holds for this producer class too. No socket preference: external
+    /// traffic has no home socket.
+    #[inline]
+    pub fn raise_external(&self) {
+        self.external_raises.inc();
+        self.external.swap(true, Ordering::AcqRel);
+        self.wake_parked_near(1, None);
+    }
+
+    /// Claim the external-producer bit. Returns `true` if it was set — the
+    /// caller now owes the ingress ring a drain (and must re-raise if the
+    /// drain leaves entries behind, mirroring the budgeted worker drain).
+    #[inline]
+    pub fn try_claim_external(&self) -> bool {
+        self.external.swap(false, Ordering::AcqRel)
+    }
+
+    /// Is the external-producer lane currently marked dirty? (Racy peek,
+    /// for sweep gating and quiescence checks.)
+    #[inline]
+    pub fn external_raised(&self) -> bool {
+        self.external.load(Ordering::Acquire)
+    }
+
+    /// Raises taken on the external-producer lane.
+    pub fn external_raises(&self) -> u64 {
+        self.external_raises.get()
     }
 
     // ---- parking ---------------------------------------------------------
@@ -985,6 +1050,107 @@ mod tests {
         assert!(dir.begin_park(0));
         assert!(dir.park_timeout(0, std::time::Duration::from_secs(60)));
         assert_eq!(dir.parked_count(), 0);
+    }
+
+    // ---- external producers ---------------------------------------------
+
+    #[test]
+    fn external_bit_raise_claim_roundtrip() {
+        let dir = SignalDirectory::new(8);
+        assert!(!dir.external_raised());
+        assert!(!dir.try_claim_external(), "clean lane claims nothing");
+        dir.raise_external();
+        dir.raise_external(); // idempotent while dirty
+        assert!(dir.external_raised());
+        assert_eq!(dir.external_raises(), 2);
+        assert!(dir.try_claim_external());
+        assert!(!dir.external_raised());
+        assert!(!dir.try_claim_external(), "claim consumed the bit");
+        // The external lane is not a worker slot: no scan may yield it.
+        assert_eq!(dir.scan_from(0).next(), None);
+        assert!(dir.first_raised_from(0).is_none());
+    }
+
+    #[test]
+    fn external_raise_does_not_change_the_layout() {
+        // The serve lane must not widen the directory: socket split and
+        // word count are those of the worker slots alone.
+        let dir = SignalDirectory::new_with_topology(8, Topology::new(4, 2));
+        dir.raise_external();
+        assert_eq!(dir.sockets(), 4);
+        assert_eq!(dir.len(), 8);
+        assert_eq!(dir.word_count(), 4);
+        assert!(dir.try_claim_external());
+    }
+
+    #[test]
+    fn external_raise_wakes_a_parked_worker() {
+        let dir = SignalDirectory::new(4);
+        assert!(dir.begin_park(2));
+        dir.raise_external();
+        assert_eq!(dir.parked_count(), 0, "external raise claimed the bit");
+        assert!(dir.begin_park(2));
+        dir.park(2); // consumes the deposited token, must not block
+        let (_, wakes) = dir.park_stats();
+        assert_eq!(wakes, 1);
+        assert!(dir.try_claim_external());
+    }
+
+    /// External-producer no-lost-wakeup litmus: the same store-buffer race
+    /// as `run_park_race`, but the producer is an outside thread with no
+    /// worker slot — publish into a counter (standing in for the ingress
+    /// ring), then `raise_external`. A lost wakeup hangs (and times out).
+    #[test]
+    fn park_concurrent_with_external_raise_always_wakes() {
+        run_external_park_race(SignalDirectory::new(4), 0, 10_000);
+    }
+
+    /// Satellite port: the same race across a 4×8 two-level layout with
+    /// the consumer on the last socket's last slot.
+    #[test]
+    fn park_concurrent_with_external_raise_always_wakes_two_level_4x8() {
+        let dir = SignalDirectory::new_with_topology(32, Topology::new(4, 8));
+        assert_eq!(dir.sockets(), 4);
+        run_external_park_race(dir, 31, 10_000);
+    }
+
+    fn run_external_park_race(dir: SignalDirectory, slot: usize, rounds: u64) {
+        let dir = Arc::new(dir);
+        let work = Arc::new(StdAtomicU64::new(0));
+        let done = Arc::new(StdAtomicU64::new(0));
+        let (dir2, work2, done2) = (Arc::clone(&dir), Arc::clone(&work), Arc::clone(&done));
+        let consumer = std::thread::spawn(move || {
+            let mut got = 0u64;
+            while got < rounds {
+                if dir2.try_claim_external() {
+                    let n = work2.swap(0, Ordering::AcqRel);
+                    if n > 0 {
+                        got += n;
+                        done2.store(got, Ordering::Release);
+                        continue;
+                    }
+                }
+                assert!(dir2.begin_park(slot));
+                // Plain-load re-check: begin_park's fence pairs with the
+                // fence raise_external issues through wake_parked_near.
+                if work2.load(Ordering::Relaxed) == 0 {
+                    dir2.park(slot);
+                } else {
+                    dir2.cancel_park(slot);
+                }
+            }
+        });
+        for i in 0..rounds {
+            work.fetch_add(1, Ordering::AcqRel);
+            dir.raise_external(); // publish-then-signal
+            while done.load(Ordering::Acquire) < i + 1 {
+                std::thread::yield_now();
+            }
+        }
+        consumer.join().unwrap();
+        let (parks, wakes) = dir.park_stats();
+        assert!(wakes >= parks.saturating_sub(1), "parks {parks} vs wakes {wakes}");
+        assert!(dir.external_raises() >= rounds);
     }
 
     /// A worker that parks concurrently with a raise must wake: the raise

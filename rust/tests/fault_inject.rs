@@ -249,6 +249,61 @@ fn deferred_drains_still_complete() {
     }
 }
 
+/// Per-domain failure containment: a budgeted plan (`FAULT_ALWAYS` ×
+/// budget 1) pins the injection to the first body that runs — domain A's
+/// fan head — so A fails deterministically (1 failed, 1 cancelled
+/// dependent) while domain B, submitted once the budget is spent, runs
+/// clean. The isolation claim is the contrast at the end: the *global*
+/// error summary is poisoned (it aggregates every tenant), but B's
+/// domain-scoped summary stays `Ok` — one tenant's panic never leaks into
+/// another tenant's checked wait.
+#[test]
+fn domain_poison_is_contained_to_its_domain() {
+    for kind in KINDS {
+        let plan = Arc::new(
+            FaultPlan::new(0xDEAD_0006)
+                .with_rate(FaultSite::TaskBody, FAULT_ALWAYS)
+                .with_budget(FaultSite::TaskBody, 1),
+        );
+        let ts = TaskSystem::builder()
+            .kind(kind)
+            .num_threads(2)
+            .fault_plan(Arc::clone(&plan))
+            .build();
+        let rt = ts.runtime().clone();
+        let a = ts.domain();
+        let b = ts.domain();
+        // Domain A: the head is the only ready body in the system, so it
+        // takes the single budgeted injection; its dependent is poisoned.
+        a.spawn(&[(42, DepMode::Out)], || {});
+        a.spawn(&[(42, DepMode::In)], || {});
+        let errs = a.taskwait_checked().expect_err("A's head always panics");
+        assert_eq!(errs.tasks_failed, 1, "kind={kind:?}");
+        assert_eq!(errs.tasks_cancelled, 1, "kind={kind:?}");
+        assert!(errs.first_panic.expect("A's panic recorded").contains("injected fault"));
+        assert_eq!(plan.injected(FaultSite::TaskBody), 1, "kind={kind:?}: budget spent");
+        // Domain B: same dependence address, its own namespace — and the
+        // exhausted budget keeps the armed site from firing again.
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..3 {
+            let h = Arc::clone(&hits);
+            b.spawn(&[(42, DepMode::Inout)], move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        b.taskwait_checked().expect("B untouched by A's poison");
+        assert_eq!(hits.load(Ordering::Relaxed), 3, "kind={kind:?}");
+        // The contrast that *is* the containment: globally the run is
+        // poisoned, per-domain only A is.
+        assert!(rt.task_errors().is_some(), "kind={kind:?}: global summary aggregates A");
+        assert!(a.errors().is_some(), "kind={kind:?}: A's cell is sticky");
+        assert!(b.errors().is_none(), "kind={kind:?}: B's cell stays clean");
+        assert!(rt.quiescent(), "kind={kind:?}");
+        ts.shutdown();
+        assert!(rt.quiescent(), "kind={kind:?} after shutdown");
+    }
+}
+
 /// Shutdown racing a parked taskwait *while panics are being injected*:
 /// ten rounds per organization sweep the shutdown request across the
 /// park/finalize window. Every round must join the killer thread, drain

@@ -209,6 +209,14 @@ fn contention_ab_smoke_and_json() {
     }
     assert_eq!(replay.new.acquisitions, 0);
 
+    // Serve-scale ingress: the soak's zero-lost / isolation / backpressure
+    // claims are asserted inside the drill; the suite pins the reported
+    // shape and that the quantiles are populated.
+    let ingress = ddast::bench_harness::ingress::ingress_soak(2, 3, 500);
+    assert_eq!(ingress.completed, ingress.submitted);
+    assert!(ingress.busy > 0, "saturation drill observed backpressure");
+    assert!(ingress.p50_ns <= ingress.p99_ns);
+
     // Topology A/B at a 2-socket and the acceptance 4-socket/32-worker
     // shape (plus a >64-worker shape inside the drill's own unit test for
     // the multi-word sweep contrast). All three claims are structural:
@@ -250,6 +258,7 @@ fn contention_ab_smoke_and_json() {
         &budget_adapt,
         &fault_overhead,
         &replay,
+        &ingress,
         &topology,
         "cargo test contention_ab_smoke_and_json",
     );
@@ -261,6 +270,8 @@ fn contention_ab_smoke_and_json() {
     assert!(json.contains("\"budget_adapt\""));
     assert!(json.contains("\"fault_overhead\""));
     assert!(json.contains("\"replay\""));
+    assert!(json.contains("\"ingress\""));
+    assert!(json.contains("\"throughput_per_sec\""));
     assert!(json.contains("\"topology\""));
     assert!(json.contains("\"dep_wake\""));
     let path = contention::default_json_path();
@@ -273,6 +284,7 @@ fn contention_ab_smoke_and_json() {
         &budget_adapt,
         &fault_overhead,
         &replay,
+        &ingress,
         &topology,
         "cargo test contention_ab_smoke_and_json",
     ) {
@@ -289,6 +301,7 @@ fn contention_ab_smoke_and_json() {
     eprintln!("{}", contention::render_budget_adapt(&budget_adapt));
     eprintln!("{}", contention::render_fault_overhead(&fault_overhead));
     eprintln!("{}", contention::render_replay(&replay));
+    eprintln!("{}", ddast::bench_harness::ingress::render_ingress(&ingress));
     for t in &topology {
         eprintln!("{}", contention::render_topology(t));
     }
