@@ -69,6 +69,9 @@ fn main() {
         print!("{}", contention::render_topology(&t));
         topology.push(t);
     }
+    println!("\n== pathology detector: staged windows, exclusive flags, MIN_READY_TASKS feedback ==\n");
+    let pathology = contention::pathology_ab();
+    print!("{}", contention::render_pathology(&pathology));
     println!();
     let path = contention::default_json_path();
     if contention::write_suite_json(
@@ -82,6 +85,7 @@ fn main() {
         &replay,
         &ingress,
         &topology,
+        &pathology,
         "cargo bench --bench micro_structures",
     ) {
         println!("wrote {}\n", path.display());

@@ -725,6 +725,246 @@ pub fn replay_ab(threads: usize, iters: u64) -> AbReport {
     AbReport { old, new }
 }
 
+/// The staged pathology-detector drill (counter-verified, not timed): one
+/// runtime per scenario so the sticky gauges isolate, each scenario's
+/// event stream written directly into that runtime's trace rings (the
+/// drill thread is the sole writer — exactly the rings' single-writer
+/// contract) and folded through the real [`PathologyDetector`] scan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PathologyReport {
+    /// Events per evaluated window in the staged scenarios.
+    pub window_events: usize,
+    /// Windows evaluated across the four armed scenarios.
+    pub windows: u64,
+    /// `pathology_idle_spin` after the idle-spin scenario — the scenario
+    /// asserts inline that *only* this flag moved on its runtime.
+    pub idle_spin: u64,
+    /// `pathology_serialized_drain` after the serialized-drain scenario.
+    pub serialized_drain: u64,
+    /// `pathology_starvation` after the starvation scenario.
+    pub starvation: u64,
+    /// Sum of all three gauges after the healthy scenario (must stay 0).
+    pub healthy_flags: u64,
+    /// `pathology_windows` after replaying the idle-spin stream against a
+    /// *disarmed* runtime (must stay 0 — the zero-added-atomics counter
+    /// proof: no scan ran, no window was judged, no gauge moved).
+    pub disarmed_windows: u64,
+    /// `MIN_READY_TASKS` staircase under the starvation feedback: the
+    /// Table-5 baseline, the peak after two starvation deltas, and where
+    /// clean controller periods settle it (back at the baseline).
+    pub min_ready_baseline: u64,
+    pub min_ready_peak: u64,
+    pub min_ready_settled: u64,
+}
+
+/// Run the staged pathology scenarios against the streaming detector.
+/// Every claim in the report is asserted inline (exclusive flags, zero
+/// healthy/disarmed flags, the `MIN_READY_TASKS` staircase), so the drill
+/// doubles as the acceptance check wherever it runs.
+pub fn pathology_ab() -> PathologyReport {
+    use crate::coordinator::autotune::AutoTuner;
+    use crate::coordinator::ddast::DdastParams;
+    use crate::coordinator::pathology::{
+        PathologyConfig, LABEL_MGR_DRAINED, LABEL_MGR_EMPTY, LABEL_PARK,
+    };
+    use crate::coordinator::pool::{RuntimeKind, RuntimeShared};
+    use crate::coordinator::trace::ThreadState;
+
+    const WINDOW: usize = 32;
+    const RINGS: usize = 4;
+
+    fn armed_rt(seed: u64) -> Arc<RuntimeShared> {
+        let rt =
+            RuntimeShared::new(RuntimeKind::Ddast, RINGS, DdastParams::tuned(RINGS), true, seed);
+        assert!(
+            rt.arm_pathology_with(PathologyConfig::with_window(WINDOW)),
+            "tracing is on, so arming succeeds"
+        );
+        rt
+    }
+    fn flags(rt: &RuntimeShared) -> (u64, u64, u64) {
+        (
+            rt.stats.pathology_idle_spin.get(),
+            rt.stats.pathology_serialized_drain.get(),
+            rt.stats.pathology_starvation.get(),
+        )
+    }
+
+    let mut windows = 0u64;
+
+    // (a) Idle-spin at a sync point: two consecutive windows of park
+    // commits while a message sits pending (staged straight into the
+    // request plane — no trace noise).
+    let idle_spin = {
+        let rt = armed_rt(41);
+        rt.queues.push_submit(0, mk_task(900_001));
+        let tr = rt.tracer.as_ref().expect("tracing on");
+        for _ in 0..2 * WINDOW {
+            tr.record(
+                0,
+                TraceKind::State { worker: 0, state: ThreadState::Idle, label: LABEL_PARK },
+            );
+        }
+        assert!(rt.pathology_tick(), "the second staged window completes the streak");
+        let f = flags(&rt);
+        assert!(f.0 >= 1, "idle-spin must trip its own flag");
+        assert_eq!((f.1, f.2), (0, 0), "…and only its own flag");
+        windows += rt.stats.pathology_windows.get();
+        f.0
+    };
+
+    // (b) Serialized drains: ring 0 owns every productive manager exit
+    // while rings 1 and 2 leave empty-handed, messages pending throughout.
+    // Each pass stages exactly one window and scans it.
+    let serialized_drain = {
+        let rt = armed_rt(43);
+        rt.queues.push_submit(0, mk_task(900_002));
+        let tr = rt.tracer.as_ref().expect("tracing on");
+        for _ in 0..2 {
+            for _ in 0..16 {
+                tr.record(
+                    0,
+                    TraceKind::State {
+                        worker: 0,
+                        state: ThreadState::Idle,
+                        label: LABEL_MGR_DRAINED,
+                    },
+                );
+            }
+            for r in [1usize, 2] {
+                for _ in 0..8 {
+                    tr.record(
+                        r,
+                        TraceKind::State {
+                            worker: r,
+                            state: ThreadState::Idle,
+                            label: LABEL_MGR_EMPTY,
+                        },
+                    );
+                }
+            }
+            rt.pathology_tick();
+        }
+        let f = flags(&rt);
+        assert!(f.1 >= 1, "serialized-drain must trip its own flag");
+        assert_eq!((f.0, f.2), (0, 0), "…and only its own flag");
+        windows += rt.stats.pathology_windows.get();
+        f.1
+    };
+
+    // (c) Creator starvation, closing the loop through the real
+    // controller: ring 0 pushes 16 ready tasks per window, 12 start on
+    // ring 1 (stolen), only 3 start at home — then `AutoTuner::step`
+    // consumes the gauge deltas and walks `MIN_READY_TASKS` up, and clean
+    // periods walk it back down to the Table-5 baseline.
+    let (starvation, min_ready_baseline, min_ready_peak, min_ready_settled) = {
+        let rt = armed_rt(47);
+        let tuner = AutoTuner::new(Arc::clone(&rt), Duration::ZERO);
+        let baseline = rt.tunables().snapshot().min_ready_tasks;
+        let tr = rt.tracer.as_ref().expect("tracing on");
+        let mut id = 1u64;
+        let mut stage = |n_windows: usize| {
+            for _ in 0..n_windows {
+                let base = id;
+                for _ in 0..16 {
+                    tr.record(0, TraceKind::ReadyPush { worker: 0, id });
+                    id += 1;
+                }
+                for k in 0..12 {
+                    tr.record(
+                        1,
+                        TraceKind::TaskStart { worker: 1, id: base + k, label: "stolen" },
+                    );
+                }
+                for k in 12..15 {
+                    tr.record(0, TraceKind::TaskStart { worker: 0, id: base + k, label: "own" });
+                }
+                tr.record(0, TraceKind::InGraph(0)); // filler: the 32nd event
+                rt.pathology_tick();
+            }
+        };
+        stage(2); // streak of two -> gauge moves
+        tuner.step();
+        let after_first = rt.tunables().snapshot().min_ready_tasks;
+        stage(2); // streak continues -> fresh deltas
+        tuner.step();
+        let peak = rt.tunables().snapshot().min_ready_tasks;
+        tuner.step(); // clean period -> decay
+        tuner.step(); // clean period -> decay to baseline
+        let settled = rt.tunables().snapshot().min_ready_tasks;
+        assert!(
+            after_first > baseline && peak > after_first,
+            "starvation deltas must grow MIN_READY_TASKS: {baseline} -> {after_first} -> {peak}"
+        );
+        assert_eq!(settled, baseline, "clean periods decay back to the Table-5 baseline");
+        assert_eq!(tuner.ready_raises.get(), 2, "one raise per starvation delta");
+        assert_eq!(tuner.ready_decays.get(), 2, "one decay per clean period");
+        let f = flags(&rt);
+        assert!(f.2 >= 1, "starvation must trip its own flag");
+        assert_eq!((f.0, f.1), (0, 0), "…and only its own flag");
+        let d = rt.pathology().expect("armed");
+        assert!(d.ready_wait().count() >= 15, "push->start joins fill the ready-wait histogram");
+        windows += rt.stats.pathology_windows.get();
+        (f.2, baseline, peak, settled)
+    };
+
+    // (d) Healthy stream: every ring pushes a little and starts its own
+    // work — judged windows, zero flags (the false-positive guard).
+    let healthy_flags = {
+        let rt = armed_rt(53);
+        let tr = rt.tracer.as_ref().expect("tracing on");
+        let mut id = 10_000u64;
+        for _ in 0..2 {
+            for r in 0..RINGS {
+                for _ in 0..4 {
+                    tr.record(r, TraceKind::ReadyPush { worker: r, id });
+                    tr.record(r, TraceKind::TaskStart { worker: r, id, label: "own" });
+                    id += 1;
+                }
+            }
+        }
+        rt.pathology_tick();
+        assert!(rt.stats.pathology_windows.get() >= 2, "the healthy stream was judged");
+        let f = flags(&rt);
+        assert_eq!(f, (0, 0, 0), "a healthy stream must not trip any flag");
+        windows += rt.stats.pathology_windows.get();
+        f.0 + f.1 + f.2
+    };
+
+    // (e) Disarmed control: the same idle-spin stream against a runtime
+    // that never armed the detector. The tick is a single `OnceLock` load;
+    // the counter deltas — zero windows judged, zero gauges moved — are
+    // the zero-added-atomics proof on the non-detecting path.
+    let disarmed_windows = {
+        let rt =
+            RuntimeShared::new(RuntimeKind::Ddast, RINGS, DdastParams::tuned(RINGS), true, 59);
+        let tr = rt.tracer.as_ref().expect("tracing on");
+        for _ in 0..2 * WINDOW {
+            tr.record(
+                0,
+                TraceKind::State { worker: 0, state: ThreadState::Idle, label: LABEL_PARK },
+            );
+        }
+        assert!(!rt.pathology_tick(), "disarmed tick must be a no-op");
+        assert_eq!(flags(&rt), (0, 0, 0));
+        assert_eq!(rt.stats.pathology_windows.get(), 0, "disarmed: nothing scanned");
+        rt.stats.pathology_windows.get()
+    };
+
+    PathologyReport {
+        window_events: WINDOW,
+        windows,
+        idle_spin,
+        serialized_drain,
+        starvation,
+        healthy_flags,
+        disarmed_windows,
+        min_ready_baseline,
+        min_ready_peak,
+        min_ready_settled,
+    }
+}
+
 /// The topology A/B at one machine shape (sockets × workers-per-socket):
 /// the three tentpole claims of the topology plane, each counter-verified
 /// against the *same* structures configured flat (the pre-topology
@@ -1100,12 +1340,32 @@ fn topology_json_inline(t: &TopologyReport) -> String {
     )
 }
 
+fn pathology_json_inline(p: &PathologyReport) -> String {
+    format!(
+        "{{\"window_events\": {}, \"windows\": {}, \"idle_spin\": {}, \
+         \"serialized_drain\": {}, \"starvation\": {}, \"healthy_flags\": {}, \
+         \"disarmed_windows\": {}, \"min_ready_baseline\": {}, \
+         \"min_ready_peak\": {}, \"min_ready_settled\": {}}}",
+        p.window_events,
+        p.windows,
+        p.idle_spin,
+        p.serialized_drain,
+        p.starvation,
+        p.healthy_flags,
+        p.disarmed_windows,
+        p.min_ready_baseline,
+        p.min_ready_peak,
+        p.min_ready_settled
+    )
+}
+
 /// Serialize the full suite: per-thread-count reports (each carrying the
 /// `batch_submit` drill), the sparse-traffic sweep series, the
 /// park-vs-sleep wake-latency pair, the taskwait-wake pair, the
 /// adaptive-batch-budget pair, the failure-containment overhead pair, the
-/// record/replay pair, the serve-scale ingress soak and the per-shape
-/// topology series — the shape `BENCH_contention.json` carries.
+/// record/replay pair, the serve-scale ingress soak, the per-shape
+/// topology series and the staged pathology-detector report — the shape
+/// `BENCH_contention.json` carries.
 #[allow(clippy::too_many_arguments)]
 pub fn suite_to_json(
     reports: &[ContentionReport],
@@ -1117,6 +1377,7 @@ pub fn suite_to_json(
     replay: &AbReport,
     ingress: &crate::bench_harness::ingress::IngressReport,
     topology: &[TopologyReport],
+    pathology: &PathologyReport,
     generated_by: &str,
 ) -> String {
     let reports_json: Vec<String> =
@@ -1130,7 +1391,7 @@ pub fn suite_to_json(
          \"signal_sweep\": [\n{}\n  ],\n  \"park_wake\": {},\n  \
          \"taskwait_park\": {},\n  \"budget_adapt\": {},\n  \
          \"fault_overhead\": {},\n  \"replay\": {},\n  \"ingress\": {},\n  \
-         \"topology\": [\n{}\n  ]\n}}\n",
+         \"topology\": [\n{}\n  ],\n  \"pathology\": {}\n}}\n",
         generated_by,
         reports_json.join(",\n"),
         sweeps_json.join(",\n"),
@@ -1140,7 +1401,8 @@ pub fn suite_to_json(
         ab_json(fault_overhead),
         ab_json(replay),
         ingress_json_inline(ingress),
-        topology_json.join(",\n")
+        topology_json.join(",\n"),
+        pathology_json_inline(pathology)
     )
 }
 
@@ -1260,6 +1522,25 @@ pub fn render_replay(ab: &AbReport) -> String {
     )
 }
 
+/// Human-readable block for the staged pathology drill.
+pub fn render_pathology(p: &PathologyReport) -> String {
+    format!(
+        "pathology — staged {}-event windows ({} judged): idle-spin flag {}, \
+         serialized-drain flag {}, starvation flag {}; healthy stream flags {}, \
+         disarmed windows {}; MIN_READY_TASKS {} -> {} -> {}\n",
+        p.window_events,
+        p.windows,
+        p.idle_spin,
+        p.serialized_drain,
+        p.starvation,
+        p.healthy_flags,
+        p.disarmed_windows,
+        p.min_ready_baseline,
+        p.min_ready_peak,
+        p.min_ready_settled
+    )
+}
+
 fn fmt_reduction(x: f64) -> String {
     if x.is_finite() {
         format!("{x:.1}x")
@@ -1328,6 +1609,7 @@ pub fn write_suite_json(
     replay: &AbReport,
     ingress: &crate::bench_harness::ingress::IngressReport,
     topology: &[TopologyReport],
+    pathology: &PathologyReport,
     generated_by: &str,
 ) -> bool {
     std::fs::write(
@@ -1342,6 +1624,7 @@ pub fn write_suite_json(
             replay,
             ingress,
             topology,
+            pathology,
             generated_by,
         ),
     )
@@ -1395,8 +1678,10 @@ mod tests {
         let rp = replay_ab(2, 3);
         let ing = crate::bench_harness::ingress::ingress_soak(2, 2, 16);
         let topo = [topology_ab(2, 4, 16)];
-        let j =
-            suite_to_json(&reports, &sweeps, &pw, &tw, &ba, &fo, &rp, &ing, &topo, "unit test");
+        let pa = pathology_ab();
+        let j = suite_to_json(
+            &reports, &sweeps, &pw, &tw, &ba, &fo, &rp, &ing, &topo, &pa, "unit test",
+        );
         for key in [
             "\"reports\"",
             "\"signal_sweep\"",
@@ -1413,6 +1698,9 @@ mod tests {
             "\"dep_wake\"",
             "\"workers\": 32",
             "\"threads\": 2",
+            "\"pathology\"",
+            "\"min_ready_peak\"",
+            "\"disarmed_windows\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
@@ -1423,6 +1711,23 @@ mod tests {
         assert!(render_fault_overhead(&fo).contains("happy-path tasks"));
         assert!(render_replay(&rp).contains("record-once-replay-N"));
         assert!(render_topology(&topo[0]).contains("wake mistargets"));
+        assert!(render_pathology(&pa).contains("MIN_READY_TASKS"));
+    }
+
+    #[test]
+    fn pathology_drill_counter_verifies_each_flag() {
+        // The drill asserts the hard claims inline (exclusive flags, zero
+        // healthy/disarmed detections, the MIN_READY_TASKS staircase);
+        // this pins the reported shape so the JSON can't drift from the
+        // asserted truths.
+        let p = pathology_ab();
+        assert!(p.idle_spin >= 1 && p.serialized_drain >= 1 && p.starvation >= 1);
+        assert_eq!(p.healthy_flags, 0, "healthy stream stays clean");
+        assert_eq!(p.disarmed_windows, 0, "disarmed runtime never scans");
+        assert!(p.windows >= 8, "every armed scenario judged its windows");
+        assert_eq!(p.min_ready_baseline, 4, "Table-5 baseline");
+        assert!(p.min_ready_peak > p.min_ready_baseline, "starvation raised the knob");
+        assert_eq!(p.min_ready_settled, p.min_ready_baseline, "clean decay settles");
     }
 
     #[test]

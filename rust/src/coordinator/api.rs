@@ -41,6 +41,8 @@ pub struct TaskSystemBuilder {
     record_graphs: bool,
     topology: Option<Topology>,
     ingress_capacity: Option<usize>,
+    pathology: bool,
+    pathology_config: Option<crate::coordinator::pathology::PathologyConfig>,
 }
 
 impl Default for TaskSystemBuilder {
@@ -59,6 +61,8 @@ impl Default for TaskSystemBuilder {
             record_graphs: false,
             topology: None,
             ingress_capacity: None,
+            pathology: false,
+            pathology_config: None,
         }
     }
 }
@@ -166,6 +170,33 @@ impl TaskSystemBuilder {
         self
     }
 
+    /// Arm the online pathology detector (`coordinator::pathology`):
+    /// streaming detection of idle-spin / serialized-drain / creator-
+    /// starvation patterns over the trace rings, surfaced as sticky
+    /// `RtStats` gauges and consumed by the auto-tuner's `MIN_READY_TASKS`
+    /// controller. Implies [`tracing`](TaskSystemBuilder::tracing) — the
+    /// rings are the detector's only input. Off (the default), the idle
+    /// paths pay one `OnceLock` load and the hot paths pay nothing.
+    pub fn pathology(mut self, on: bool) -> Self {
+        self.pathology = on;
+        if on {
+            self.tracing = true;
+        }
+        self
+    }
+
+    /// [`pathology`](TaskSystemBuilder::pathology) with explicit detection
+    /// thresholds (tests stage small, exact windows).
+    pub fn pathology_config(
+        mut self,
+        cfg: crate::coordinator::pathology::PathologyConfig,
+    ) -> Self {
+        self.pathology = true;
+        self.tracing = true;
+        self.pathology_config = Some(cfg);
+        self
+    }
+
     pub fn build(self) -> TaskSystem {
         let params = self.params.unwrap_or_else(|| DdastParams::tuned(self.num_threads));
         let rt = RuntimeShared::new_full(
@@ -180,6 +211,13 @@ impl TaskSystemBuilder {
             self.ingress_capacity
                 .unwrap_or(crate::coordinator::messages::DEFAULT_INGRESS_CAPACITY),
         );
+        if self.pathology {
+            let armed = match self.pathology_config {
+                Some(cfg) => rt.arm_pathology_with(cfg),
+                None => rt.arm_pathology(),
+            };
+            debug_assert!(armed, "pathology() implies tracing, so arming cannot fail");
+        }
         let mut autotuner = None;
         if self.kind == RuntimeKind::Ddast {
             match self.manager_affinity {

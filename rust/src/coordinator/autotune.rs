@@ -38,6 +38,12 @@ use crate::substrate::Counter;
 /// a reusable `MsgBatch` buffer can grow).
 pub const MAX_OPS_THREAD_CAP: usize = 64;
 
+/// Upper cap the starvation controller may grow `MIN_READY_TASKS` to:
+/// managers keep uncovering parallelism until this many tasks are ready,
+/// which refills a starved creator's neighborhood — but an unbounded value
+/// would pin every idle thread in manager mode forever.
+pub const MIN_READY_TASKS_CAP: u64 = 64;
+
 /// Atomically adjustable DDAST parameters.
 #[derive(Debug)]
 pub struct TunableParams {
@@ -95,6 +101,10 @@ pub struct AutoTuner {
     // Deltas of the counters at the previous adjustment.
     last_mgr_activations: AtomicU64,
     last_mgr_msgs: AtomicU64,
+    /// `pathology_starvation` gauge at the previous adjustment — the
+    /// `MIN_READY_TASKS` controller reacts to its *delta* (the gauge is
+    /// sticky; only fresh detections should raise the knob).
+    last_starvation: AtomicU64,
     /// Number of adjustments performed (diagnostics/tests).
     pub adjustments: Counter,
     pub raises: Counter,
@@ -103,6 +113,12 @@ pub struct AutoTuner {
     pub budget_raises: Counter,
     /// Batch-budget decays back toward the tuned baseline.
     pub budget_decays: Counter,
+    /// `MIN_READY_TASKS` raises toward [`MIN_READY_TASKS_CAP`] (starvation
+    /// detected since the last adjustment).
+    pub ready_raises: Counter,
+    /// `MIN_READY_TASKS` decays back toward the Table-5 baseline (clean
+    /// period).
+    pub ready_decays: Counter,
 }
 
 impl AutoTuner {
@@ -116,11 +132,14 @@ impl AutoTuner {
             last_adjust_us: AtomicU64::new(0),
             last_mgr_activations: AtomicU64::new(0),
             last_mgr_msgs: AtomicU64::new(0),
+            last_starvation: AtomicU64::new(0),
             adjustments: Counter::new(),
             raises: Counter::new(),
             decays: Counter::new(),
             budget_raises: Counter::new(),
             budget_decays: Counter::new(),
+            ready_raises: Counter::new(),
+            ready_decays: Counter::new(),
         })
     }
 
@@ -192,6 +211,29 @@ impl AutoTuner {
             tunables
                 .set_max_ops_thread((p.max_ops_thread / 2).max(self.baseline.max_ops_thread));
             self.budget_decays.inc();
+            adjusted = true;
+        }
+        // Signal 4 (the pathology detector's first consumer — ROADMAP
+        // "MIN_READY_TASKS tuned against a starvation gauge"): fresh
+        // starvation detections since the last adjustment mean managers
+        // exit before the starved creator's neighborhood refills — grow
+        // `MIN_READY_TASKS` geometrically toward the cap so they keep
+        // uncovering parallelism. A clean period decays it geometrically
+        // back to the Table-5 baseline (an inflated exit threshold keeps
+        // idle threads in manager mode for no benefit). The gauge is
+        // sticky, so the controller diffs it rather than reading it raw.
+        let starv = self.rt.stats.pathology_starvation.get();
+        let d_starv = starv - self.last_starvation.swap(starv, Ordering::AcqRel);
+        if d_starv > 0 {
+            if p.min_ready_tasks < MIN_READY_TASKS_CAP {
+                tunables.set_min_ready_tasks((p.min_ready_tasks * 2).min(MIN_READY_TASKS_CAP));
+                self.ready_raises.inc();
+                adjusted = true;
+            }
+        } else if p.min_ready_tasks > self.baseline.min_ready_tasks {
+            tunables
+                .set_min_ready_tasks((p.min_ready_tasks / 2).max(self.baseline.min_ready_tasks));
+            self.ready_decays.inc();
             adjusted = true;
         }
         if adjusted {
@@ -283,6 +325,34 @@ mod tests {
         while rt.ready.get(0).is_some() {}
         assert_eq!(drained_by_one_activation(&rt), 2, "lowered budget applies");
         assert_eq!(rt.queues.pending_exact(), 20 - 4 - 12 - 2);
+    }
+
+    /// The pathology plane's feedback edge: fresh `pathology_starvation`
+    /// detections grow `MIN_READY_TASKS` geometrically to the cap; clean
+    /// adjustment periods decay it back to the Table-5 baseline. The gauge
+    /// is sticky, so only *deltas* raise the knob.
+    #[test]
+    fn starvation_gauge_grows_min_ready_tasks_and_clean_decays() {
+        let rt = RuntimeShared::new(RuntimeKind::Ddast, 2, DdastParams::tuned(2), false, 17);
+        let tuner = AutoTuner::new(Arc::clone(&rt), std::time::Duration::ZERO);
+        assert_eq!(rt.tunables().snapshot().min_ready_tasks, 4, "Table-5 baseline");
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            rt.stats.pathology_starvation.inc();
+            tuner.step();
+            seen.push(rt.tunables().snapshot().min_ready_tasks);
+        }
+        assert_eq!(seen, vec![8, 16, 32, 64, 64, 64], "geometric growth, capped");
+        assert_eq!(tuner.ready_raises.get(), 4, "no further raises at the cap");
+        // The gauge stays sticky at its high-water mark; no new detections
+        // → clean periods → decay to baseline, never below.
+        let mut seen = Vec::new();
+        for _ in 0..5 {
+            tuner.step();
+            seen.push(rt.tunables().snapshot().min_ready_tasks);
+        }
+        assert_eq!(seen, vec![32, 16, 8, 4, 4], "decay stops at the baseline");
+        assert_eq!(tuner.ready_decays.get(), 4);
     }
 
     #[test]

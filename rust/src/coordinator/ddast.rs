@@ -187,12 +187,14 @@ pub fn ddast_callback(rt: &Arc<RuntimeShared>, me: usize) -> bool {
 
     rt.stats.mgr_msgs.add(total_processed);
     rt.mgr_count.fetch_sub(1, Ordering::AcqRel);
-    rt.trace_manager_exit(me);
+    rt.trace_manager_exit(me, total_processed > 0);
     if total_processed == 0 {
-        // Empty-handed exit — the idle moment the hang watchdog piggybacks
-        // on: if work sits outstanding while everyone else is parked past
-        // the deadline, re-raise and wake before going idle ourselves.
+        // Empty-handed exit — the idle moment the hang watchdog (and the
+        // pathology detector's streaming scan) piggybacks on: if work sits
+        // outstanding while everyone else is parked past the deadline,
+        // re-raise and wake before going idle ourselves.
         rt.watchdog_tick();
+        rt.pathology_tick();
     }
     total_processed > 0
 }

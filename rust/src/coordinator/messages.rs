@@ -284,6 +284,14 @@ impl QueueSystem {
         &self.signals
     }
 
+    /// Exclusive directory access during construction — the runtime uses
+    /// this to install the `IngressRaise` fault-plan gate before the queue
+    /// system is shared.
+    #[inline]
+    pub fn signals_mut(&mut self) -> &mut SignalDirectory {
+        &mut self.signals
+    }
+
     /// Push a Submit Task Message from `worker` (its own queue only).
     /// Enqueue first, raise second — the directory's no-lost-wakeup
     /// protocol requires the message to precede its signal.

@@ -12,6 +12,7 @@ pub mod dep;
 pub mod depgraph;
 pub mod dispatcher;
 pub mod messages;
+pub mod pathology;
 pub mod pool;
 pub mod ready;
 pub mod replay;
@@ -19,14 +20,15 @@ pub mod trace;
 pub mod wd;
 
 pub use api::{GraphDomain, TaskSystem, TaskSystemBuilder};
-pub use autotune::{AutoTuner, TunableParams, MAX_OPS_THREAD_CAP};
+pub use autotune::{AutoTuner, TunableParams, MAX_OPS_THREAD_CAP, MIN_READY_TASKS_CAP};
 pub use ddast::DdastParams;
 pub use dep::{dep_in, dep_inout, dep_out, DepMode, Dependence};
 pub use depgraph::DepDomain;
 pub use dispatcher::{Dispatcher, LockedDispatcher};
 pub use messages::{MsgBatch, QueueSystem};
+pub use pathology::{PathologyConfig, PathologyDetector};
 pub use pool::{RuntimeKind, RuntimeShared, SubmitError, TaskErrors};
 pub use ready::{LockedReadyPools, PoolContention, ReadyPools};
 pub use replay::{GraphRecording, ReplayOutcome, ReplayTask};
-pub use trace::{LockedTracer, ThreadState, TraceEvent, TraceKind, Tracer};
+pub use trace::{LockedTracer, RingCursor, ThreadState, TraceEvent, TraceKind, Tracer};
 pub use wd::{TaskId, Wd, WdState};

@@ -1,0 +1,354 @@
+//! Online pathology detection over the trace rings — the ROADMAP item that
+//! turns the tracer from an offline CSV artifact into the runtime's live
+//! feedback plane.
+//!
+//! *Detrimental task execution patterns in mainstream OpenMP runtimes*
+//! (Tuft et al., PAPERS.md) catalogues the misbehaviors this module flags;
+//! our wait-free trace rings already record the raw events, so detection is
+//! a **streaming** pass: the detector keeps a [`RingCursor`] per ring and,
+//! on the runtime's existing idle moments (the same hook points as the
+//! PR-6 hang watchdog — `commit_park` timeouts, `ddast_callback`
+//! empty-handed exits, the DAS loop's idle tier), folds only the events
+//! published since its last visit into cheap per-ring window statistics.
+//! No post-hoc CSV pass, no re-merge, no timers of its own.
+//!
+//! ## The three patterns
+//!
+//! * **Idle-spin at sync points** — park/taskwait commits dominate a window
+//!   while the request plane still holds pending messages: threads burn
+//!   their idle ladder at a sync point instead of becoming managers.
+//! * **Serialized drains** — one manager context owns nearly every
+//!   drained-manager exit in a window while several others exit
+//!   empty-handed: the distributed manager has collapsed to a de-facto
+//!   central one.
+//! * **Creator starvation** — a spawning worker's ready-deque pushes are
+//!   stolen faster than it can pop them: its own `TaskStart`s stay rare
+//!   while its pushes' starts land on other rings. The push→start gap is
+//!   recorded into a log2 [`Histogram`] (ready-time-in-queue), so the
+//!   quantiles are available next to the flag.
+//!
+//! ## Surfacing and feedback
+//!
+//! Detections increment **sticky** `RtStats` gauges
+//! (`pathology_idle_spin` / `pathology_serialized_drain` /
+//! `pathology_starvation`; `pathology_windows` counts evaluated windows) —
+//! cumulative like every other failure-plane gauge. The `AutoTuner`
+//! consumes the starvation gauge as its fourth signal: deltas grow
+//! `MIN_READY_TASKS` (managers keep uncovering parallelism before exiting,
+//! so the starved creator's deque refills locally), clean periods decay it
+//! back to the Table-5 baseline — snapshot through `TunableParams` exactly
+//! like the `MAX_OPS_THREAD` controller.
+//!
+//! ## Cost discipline
+//!
+//! With the detector disarmed (the default) the runtime's hot paths gain
+//! **zero** atomics: every detector input is either a trace event that is
+//! only recorded when the tracer is on, or a counter the runtime already
+//! maintained. Armed, the scan itself runs only on idle paths behind a
+//! `try_lock` (one scanner at a time, contenders skip), and each event is
+//! copied exactly once via the ring cursors. The `pathology_ab` drill in
+//! `bench_harness::contention` asserts the disarmed half by counter delta.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::coordinator::pool::RuntimeShared;
+use crate::coordinator::trace::{RingCursor, ThreadState, TraceEvent, TraceKind};
+use crate::substrate::Histogram;
+
+/// `State` label recorded when a thread commits a park (worker loop or
+/// `taskwait_on` — the sync-point idling the idle-spin rule counts).
+pub const LABEL_PARK: &str = "park";
+/// `State` label of a manager exit that satisfied at least one message.
+pub const LABEL_MGR_DRAINED: &str = "mgr_drained";
+/// `State` label of a manager exit that found nothing to drain.
+pub const LABEL_MGR_EMPTY: &str = "mgr_empty";
+
+/// Detection thresholds. The defaults are deliberately conservative — a
+/// healthy workload suite must pin every gauge at zero
+/// (`rust/tests/pathology.rs`) — and every rule additionally requires
+/// [`streak_windows`](PathologyConfig::streak_windows) *consecutive*
+/// pathological windows before the sticky gauge moves, so a single odd
+/// scheduling quantum never trips a flag.
+#[derive(Clone, Copy, Debug)]
+pub struct PathologyConfig {
+    /// Events accumulated (across all rings) before a window is evaluated.
+    pub window_events: usize,
+    /// Consecutive pathological windows required before a gauge increments
+    /// (the first `streak_windows - 1` detections arm, the next fires).
+    pub streak_windows: u32,
+    /// Idle-spin: park events must be at least this share of the window,
+    /// expressed as a percentage, while messages are pending.
+    pub idle_spin_park_pct: usize,
+    /// Serialized drain: minimum drained-manager exits the dominant ring
+    /// must own for the window to be judged at all.
+    pub drain_min_drained: usize,
+    /// Serialized drain: the dominant ring's share of all drained exits,
+    /// as a percentage.
+    pub drain_dominance_pct: usize,
+    /// Serialized drain: how many *other* rings must have exited
+    /// empty-handed at least [`drain_min_empty`](Self::drain_min_empty)
+    /// times.
+    pub drain_empty_rings: usize,
+    /// Serialized drain: empty exits per such ring.
+    pub drain_min_empty: usize,
+    /// Starvation: minimum ready pushes a ring must make in the window.
+    pub starvation_min_pushes: usize,
+    /// Starvation: percentage of the ring's pushes that were stolen
+    /// (started on another ring).
+    pub starvation_stolen_pct: usize,
+    /// Starvation: the creator's own starts, as a max percentage of its
+    /// pushes (it pops far less than it feeds).
+    pub starvation_self_start_pct: usize,
+}
+
+impl Default for PathologyConfig {
+    fn default() -> Self {
+        PathologyConfig {
+            window_events: 256,
+            streak_windows: 2,
+            idle_spin_park_pct: 50,
+            drain_min_drained: 8,
+            drain_dominance_pct: 90,
+            drain_empty_rings: 2,
+            drain_min_empty: 4,
+            starvation_min_pushes: 16,
+            starvation_stolen_pct: 50,
+            starvation_self_start_pct: 25,
+        }
+    }
+}
+
+impl PathologyConfig {
+    /// Default thresholds over a custom window size (tests stage small,
+    /// exact windows).
+    pub fn with_window(window_events: usize) -> Self {
+        PathologyConfig { window_events: window_events.max(1), ..Default::default() }
+    }
+}
+
+/// Per-ring accumulators of the current window.
+#[derive(Clone, Default, Debug)]
+struct RingWindow {
+    /// Park commits (State/Idle with [`LABEL_PARK`]).
+    parks: usize,
+    /// Manager exits that drained ≥ 1 message ([`LABEL_MGR_DRAINED`]).
+    mgr_drained: usize,
+    /// Manager exits that found nothing ([`LABEL_MGR_EMPTY`]).
+    mgr_empty: usize,
+    /// Own-deque ready pushes ([`TraceKind::ReadyPush`]).
+    pushes: usize,
+    /// Task starts executed on this ring.
+    starts: usize,
+    /// Pushes made *by* this ring whose start landed on another ring.
+    stolen: usize,
+}
+
+/// Cursor + window state, serialized behind the detector's `try_lock`.
+struct ScanState {
+    cursor: RingCursor,
+    /// Scratch buffer reused across scans (no steady-state allocation).
+    buf: Vec<TraceEvent>,
+    rings: Vec<RingWindow>,
+    /// Events folded into the current window so far.
+    events_in_window: usize,
+    /// Pending push id → (pushing ring, push time): joined against the
+    /// matching `TaskStart` for steal attribution and queue-residence time.
+    /// Survives window boundaries (a push may start one window later);
+    /// pruned wholesale if it ever balloons (tasks that never start).
+    push_times: HashMap<u64, (usize, u64)>,
+    /// Consecutive pathological windows per rule (idle-spin, serialized
+    /// drain, starvation).
+    streaks: [u32; 3],
+}
+
+/// Bound on the pending-push join map: far above any healthy in-flight
+/// ready set; crossing it means pushes whose tasks never start (e.g. a
+/// drill staging pushes only) — drop the joins rather than grow forever.
+const PUSH_MAP_PRUNE: usize = 8192;
+
+/// The streaming detector. One per runtime, armed explicitly
+/// ([`RuntimeShared::arm_pathology`] / the builder's `.pathology(true)`);
+/// unarmed runtimes carry only an empty `OnceLock`.
+pub struct PathologyDetector {
+    cfg: PathologyConfig,
+    scan: Mutex<ScanState>,
+    /// Ready-time-in-queue of steal-joined pushes (push → start gap, ns):
+    /// the starvation rule's raw signal, exported for quantile readouts.
+    ready_wait: Histogram,
+}
+
+impl PathologyDetector {
+    pub(crate) fn new(cfg: PathologyConfig, num_rings: usize) -> Self {
+        PathologyDetector {
+            cfg,
+            scan: Mutex::new(ScanState {
+                cursor: RingCursor::empty(),
+                buf: Vec::new(),
+                rings: vec![RingWindow::default(); num_rings],
+                events_in_window: 0,
+                push_times: HashMap::new(),
+                streaks: [0; 3],
+            }),
+            ready_wait: Histogram::new(),
+        }
+    }
+
+    /// The detection thresholds in force.
+    pub fn config(&self) -> &PathologyConfig {
+        &self.cfg
+    }
+
+    /// Ready-time-in-queue histogram (ns) of pushes joined to their starts.
+    pub fn ready_wait(&self) -> &Histogram {
+        &self.ready_wait
+    }
+
+    /// One streaming scan: fold newly published events into the current
+    /// window; evaluate the window each time it fills. Returns whether any
+    /// pathology gauge moved. Called from the idle paths via
+    /// [`RuntimeShared::pathology_tick`]; a contended `try_lock` skips (one
+    /// scanner at a time — the loser's events are picked up by the winner
+    /// or the next tick).
+    pub fn scan(&self, rt: &RuntimeShared) -> bool {
+        let Some(tracer) = &rt.tracer else {
+            return false;
+        };
+        let Ok(mut st) = self.scan.try_lock() else {
+            return false;
+        };
+        let st = &mut *st;
+        if st.cursor.is_empty() {
+            st.cursor = tracer.cursor();
+        }
+        if st.rings.len() < tracer.num_rings() {
+            st.rings.resize(tracer.num_rings(), RingWindow::default());
+        }
+        let mut fired = false;
+        for r in 0..tracer.num_rings() {
+            st.buf.clear();
+            if tracer.read_new(&mut st.cursor, r, &mut st.buf) == 0 {
+                continue;
+            }
+            for i in 0..st.buf.len() {
+                let ev = st.buf[i].clone();
+                st.events_in_window += 1;
+                match ev.kind {
+                    TraceKind::State { state: ThreadState::Idle, label, .. } => {
+                        if label == LABEL_PARK {
+                            st.rings[r].parks += 1;
+                        } else if label == LABEL_MGR_DRAINED {
+                            st.rings[r].mgr_drained += 1;
+                        } else if label == LABEL_MGR_EMPTY {
+                            st.rings[r].mgr_empty += 1;
+                        }
+                    }
+                    TraceKind::ReadyPush { id, .. } => {
+                        st.rings[r].pushes += 1;
+                        st.push_times.insert(id, (r, ev.t_ns));
+                    }
+                    TraceKind::TaskStart { id, .. } => {
+                        st.rings[r].starts += 1;
+                        if let Some((pr, pt)) = st.push_times.remove(&id) {
+                            if pr != r {
+                                if let Some(w) = st.rings.get_mut(pr) {
+                                    w.stolen += 1;
+                                }
+                            }
+                            self.ready_wait.record(ev.t_ns.saturating_sub(pt));
+                        }
+                    }
+                    _ => {}
+                }
+                if st.events_in_window >= self.cfg.window_events {
+                    fired |= self.evaluate(rt, st);
+                }
+            }
+        }
+        fired
+    }
+
+    /// Judge one full window against the three rules, advance the streaks,
+    /// bump the sticky gauges, reset the window accumulators.
+    fn evaluate(&self, rt: &RuntimeShared, st: &mut ScanState) -> bool {
+        rt.stats.pathology_windows.inc();
+        let cfg = &self.cfg;
+        let total = st.events_in_window.max(1);
+        let pending = rt.queues.pending();
+
+        // (a) idle-spin at sync points: parks dominate while work is queued.
+        let parks: usize = st.rings.iter().map(|w| w.parks).sum();
+        let idle_spin = pending > 0 && parks * 100 >= total * cfg.idle_spin_park_pct;
+
+        // (b) serialized drains: one ring owns (almost) every productive
+        // manager exit while several others leave empty-handed.
+        let drained_total: usize = st.rings.iter().map(|w| w.mgr_drained).sum();
+        let serialized = pending > 0
+            && st.rings.iter().enumerate().any(|(r, w)| {
+                w.mgr_drained >= cfg.drain_min_drained
+                    && w.mgr_drained * 100 >= drained_total * cfg.drain_dominance_pct
+                    && st
+                        .rings
+                        .iter()
+                        .enumerate()
+                        .filter(|&(o, ow)| o != r && ow.mgr_empty >= cfg.drain_min_empty)
+                        .count()
+                        >= cfg.drain_empty_rings
+            });
+
+        // (c) creator starvation: a ring feeds the pool (pushes stolen
+        // elsewhere) but barely executes its own ready work.
+        let starvation = st.rings.iter().any(|w| {
+            w.pushes >= cfg.starvation_min_pushes
+                && w.stolen * 100 >= w.pushes * cfg.starvation_stolen_pct
+                && w.starts * 100 <= w.pushes * cfg.starvation_self_start_pct
+        });
+
+        let gauges = [
+            &rt.stats.pathology_idle_spin,
+            &rt.stats.pathology_serialized_drain,
+            &rt.stats.pathology_starvation,
+        ];
+        let mut fired = false;
+        for (i, hit) in [idle_spin, serialized, starvation].into_iter().enumerate() {
+            if hit {
+                st.streaks[i] += 1;
+                if st.streaks[i] >= cfg.streak_windows {
+                    gauges[i].inc();
+                    fired = true;
+                }
+            } else {
+                st.streaks[i] = 0;
+            }
+        }
+
+        for w in &mut st.rings {
+            *w = RingWindow::default();
+        }
+        st.events_in_window = 0;
+        if st.push_times.len() > PUSH_MAP_PRUNE {
+            st.push_times.clear();
+        }
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = PathologyConfig::default();
+        assert!(c.window_events > 0 && c.streak_windows >= 1);
+        assert!(c.idle_spin_park_pct <= 100 && c.drain_dominance_pct <= 100);
+        let small = PathologyConfig::with_window(0);
+        assert_eq!(small.window_events, 1, "window floors at one event");
+    }
+
+    #[test]
+    fn labels_are_distinct() {
+        assert_ne!(LABEL_PARK, LABEL_MGR_DRAINED);
+        assert_ne!(LABEL_MGR_DRAINED, LABEL_MGR_EMPTY);
+    }
+}

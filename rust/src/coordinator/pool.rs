@@ -29,6 +29,7 @@ use crate::coordinator::ddast::{ddast_callback, DdastParams};
 use crate::coordinator::dep::Dependence;
 use crate::coordinator::dispatcher::Dispatcher;
 use crate::coordinator::messages::{DoneTaskMsg, MsgBatch, QueueSystem};
+use crate::coordinator::pathology::{PathologyConfig, PathologyDetector, LABEL_PARK};
 use crate::coordinator::ready::ReadyPools;
 use crate::coordinator::replay::ReplayRun;
 use crate::coordinator::trace::{ThreadState, TraceKind, Tracer};
@@ -117,6 +118,20 @@ pub struct RtStats {
     /// synchronous organization): admitted directly by the submitting
     /// thread, admission cannot fail.
     pub ingress_direct: Counter,
+    /// Trace windows evaluated by the online pathology detector (zero while
+    /// the detector is disarmed — the `pathology_ab` drill's proof that the
+    /// non-detecting hot path gained nothing).
+    pub pathology_windows: Counter,
+    /// Sticky: windows where park/taskwait idling dominated while messages
+    /// sat pending (idle-spin at a sync point, Tuft et al. pattern (a)).
+    pub pathology_idle_spin: Counter,
+    /// Sticky: windows where one manager context owned nearly all drained
+    /// exits while others left empty-handed (serialized drains).
+    pub pathology_serialized_drain: Counter,
+    /// Sticky: windows where a creator's ready pushes were stolen faster
+    /// than it popped them (creator starvation). The `AutoTuner`'s
+    /// `MIN_READY_TASKS` controller consumes this gauge's deltas.
+    pub pathology_starvation: Counter,
 }
 
 /// Failure summary of a run — the payload of the non-breaking checked APIs
@@ -282,6 +297,11 @@ pub struct RuntimeShared {
     /// Message of the first caught task panic (feeds [`TaskErrors`]).
     first_panic: SpinLock<Option<String>>,
     watchdog: Watchdog,
+    /// The online pathology detector, armed explicitly
+    /// ([`arm_pathology`](RuntimeShared::arm_pathology) — requires
+    /// tracing). Empty on every other runtime: the idle-path tick is then
+    /// one `OnceLock` load, and no hot path records anything extra.
+    pathology: std::sync::OnceLock<PathologyDetector>,
     shutdown: AtomicBool,
     next_task_id: AtomicU64,
     /// The installed replay run, if any (record/replay plane). RCU snapshot:
@@ -385,18 +405,25 @@ impl RuntimeShared {
         // trace rings: the centralized design's DAS thread parks (timed) on
         // the extra slot beyond the workers, so shutdown and the watchdog
         // can wake it instead of waiting out a blind sleep.
+        let mut queues = QueueSystem::with_topology_and_ingress(
+            num_threads,
+            trace_slots,
+            topo,
+            ingress_capacity,
+        );
+        if let Some(plan) = &fault_plan {
+            // The IngressRaise site lives inside the directory itself
+            // (`raise_external` is called by outside threads with no
+            // runtime context): hand the plan over before sharing.
+            queues.signals_mut().install_fault_plan(Arc::clone(plan));
+        }
         Arc::new(RuntimeShared {
             kind,
             params,
             tunables: Arc::new(crate::coordinator::autotune::TunableParams::new(params)),
             num_threads,
             topo,
-            queues: QueueSystem::with_topology_and_ingress(
-                num_threads,
-                trace_slots,
-                topo,
-                ingress_capacity,
-            ),
+            queues,
             ready,
             dispatcher: Dispatcher::new(),
             root: Wd::root(),
@@ -407,6 +434,7 @@ impl RuntimeShared {
             fault_plan,
             first_panic: SpinLock::new(None),
             watchdog: Watchdog::new(),
+            pathology: std::sync::OnceLock::new(),
             shutdown: AtomicBool::new(false),
             next_task_id: AtomicU64::new(1),
             replay: RcuCell::new(None),
@@ -604,6 +632,41 @@ impl RuntimeShared {
         true
     }
 
+    // ---- online pathology detection --------------------------------------
+
+    /// Arm the online pathology detector with `cfg`. Requires tracing (the
+    /// detector's only input is the trace rings); returns whether it armed.
+    /// Idempotent — the first arm wins. Builder surface:
+    /// `TaskSystemBuilder::pathology(true)`.
+    pub fn arm_pathology_with(&self, cfg: PathologyConfig) -> bool {
+        let Some(t) = &self.tracer else {
+            return false;
+        };
+        self.pathology.set(PathologyDetector::new(cfg, t.num_rings())).is_ok()
+    }
+
+    /// [`arm_pathology_with`](RuntimeShared::arm_pathology_with) at the
+    /// default thresholds.
+    pub fn arm_pathology(&self) -> bool {
+        self.arm_pathology_with(PathologyConfig::default())
+    }
+
+    /// The armed detector, if any (gauge/quantile readouts).
+    pub fn pathology(&self) -> Option<&PathologyDetector> {
+        self.pathology.get()
+    }
+
+    /// One detector scan, piggybacked on the same idle moments as
+    /// [`watchdog_tick`](RuntimeShared::watchdog_tick). Disarmed (the
+    /// default): a single `OnceLock` load — no atomics added to any path.
+    /// Returns whether a pathology gauge moved.
+    pub fn pathology_tick(&self) -> bool {
+        match self.pathology.get() {
+            Some(d) => d.scan(self),
+            None => false,
+        }
+    }
+
     // ---- tracing helpers -------------------------------------------------
 
     #[inline]
@@ -613,10 +676,29 @@ impl RuntimeShared {
         }
     }
 
+    /// Record a manager exit, labeled by whether the activation satisfied
+    /// any messages — the raw signal of the pathology detector's
+    /// serialized-drain rule (one ring owning the drained exits while
+    /// others exit empty).
     #[inline]
-    pub fn trace_manager_exit(&self, worker: usize) {
+    pub fn trace_manager_exit(&self, worker: usize, drained: bool) {
         if let Some(t) = &self.tracer {
-            t.record(worker, TraceKind::State { worker, state: ThreadState::Idle, label: "" });
+            let label = if drained {
+                crate::coordinator::pathology::LABEL_MGR_DRAINED
+            } else {
+                crate::coordinator::pathology::LABEL_MGR_EMPTY
+            };
+            t.record(worker, TraceKind::State { worker, state: ThreadState::Idle, label });
+        }
+    }
+
+    /// Record a committed park on `worker`'s own ring (worker loop and
+    /// `taskwait_on` both commit through [`commit_park`] — the sync-point
+    /// idling the pathology detector's idle-spin rule counts).
+    #[inline]
+    fn trace_park(&self, worker: usize) {
+        if let Some(t) = &self.tracer {
+            t.record(worker, TraceKind::State { worker, state: ThreadState::Idle, label: LABEL_PARK });
         }
     }
 
@@ -659,6 +741,13 @@ impl RuntimeShared {
             wd.set_state(WdState::Ready);
             self.ready.push(worker, Arc::clone(&wd));
             self.wake_for_ready(worker, 1);
+            // Creator-starvation signal: the push onto the creator's *own*
+            // deque, joined by id against the eventual TaskStart (replay
+            // refills and ingress drains record nothing here — their
+            // pushes are not a creator feeding itself).
+            if let Some(t) = &self.tracer {
+                t.record(worker, TraceKind::ReadyPush { worker, id: wd.id.0 });
+            }
             self.trace_gauges(worker);
             return wd;
         }
@@ -1508,6 +1597,7 @@ impl RuntimeShared {
                 continue;
             }
             self.watchdog_tick();
+            self.pathology_tick();
             // Timed park on the DAS slot's own directory entry (the extra
             // slot beyond the workers — see the constructor). Formerly the
             // last blind `idle_backoff` sleep in the runtime: shutdown's
@@ -1546,6 +1636,7 @@ impl RuntimeShared {
     /// announce → re-check → commit cycle after one progress attempt).
     fn commit_park(&self, worker: usize) -> u32 {
         let signals = self.queues.signals();
+        self.trace_park(worker);
         // An armed wake-edge fault site may swallow the very wake an
         // indefinite park relies on: under such a plan every park is timed,
         // so injected wake losses stay inside the recovery envelope (the
@@ -1562,8 +1653,10 @@ impl RuntimeShared {
             PARK_RETRY_IDLE
         } else {
             // Timed out with work visible this thread could not act on —
-            // the cheap moment to ask whether everyone else is stuck too.
+            // the cheap moment to ask whether everyone else is stuck too,
+            // and the detector's moment to fold the events that piled up.
             self.watchdog_tick();
+            self.pathology_tick();
             PARK_AFTER
         }
     }

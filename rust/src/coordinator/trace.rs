@@ -21,9 +21,17 @@
 //! Rings are sized by the *actual* number of recording contexts (workers
 //! plus the CentralDast DAS slot). The seed indexed buffers with
 //! `worker % buffers.len()`, which silently merged the DAS thread's stream
-//! into worker 0's; `record` now debug-asserts the slot is in range and, in
-//! release builds, accounts an out-of-range event as dropped rather than
-//! corrupting another thread's stream.
+//! into worker 0's; `record` now accounts an out-of-range event on a
+//! dedicated tracer-level `misrouted` counter (folded into `dropped`)
+//! rather than corrupting another thread's stream or mischarging ring 0's
+//! own overflow count.
+//!
+//! ## Incremental readers
+//!
+//! [`Tracer::cursor`] + [`Tracer::read_new`] give in-process consumers (the
+//! pathology detector) a per-ring cursor over the published prefix: each
+//! call copies only events appended since the cursor's last visit, so a
+//! periodic scan is O(new events), never a re-merge of the whole trace.
 //!
 //! The seed implementation survives as [`LockedTracer`] for the
 //! `trace_append` contention A/B.
@@ -67,6 +75,13 @@ pub enum TraceKind {
     /// Task lifetime markers (id, label) for span reconstruction.
     TaskStart { worker: usize, id: u64, label: &'static str },
     TaskEnd { worker: usize, id: u64 },
+    /// A creator pushed a no-deps task onto its *own* ready deque
+    /// (`spawn_from`'s fast path — not replay refills, not ingress
+    /// drains). Paired with the eventual `TaskStart` by `id`, this is the
+    /// raw signal the pathology detector's creator-starvation rule reads:
+    /// pushes whose starts land on *another* ring were stolen, and the
+    /// push→start gap is the ready-time-in-queue sample.
+    ReadyPush { worker: usize, id: u64 },
 }
 
 // The rings store events as `MaybeUninit` and free segments without
@@ -170,9 +185,19 @@ impl TraceRing {
 
     /// Copy the published prefix into `out` (any thread).
     fn snapshot_into(&self, out: &mut Vec<TraceEvent>) {
+        self.snapshot_range(0, out);
+    }
+
+    /// Copy published slots `from..len` into `out`, returning the new
+    /// published length. Any thread; the acquire load of `len` orders after
+    /// the owner's slot writes exactly as in [`snapshot_into`]. Incremental
+    /// readers (the pathology detector's ring cursors) call this with their
+    /// previous return value so each event is copied once, with no
+    /// re-merge of the whole ring.
+    fn snapshot_range(&self, from: usize, out: &mut Vec<TraceEvent>) -> usize {
         let n = self.len.load(Ordering::Acquire);
-        out.reserve(n);
-        let mut i = 0;
+        out.reserve(n.saturating_sub(from));
+        let mut i = from.min(n);
         while i < n {
             let si = i / SEG_EVENTS;
             let seg = self.segs[si].load(Ordering::Acquire);
@@ -188,6 +213,7 @@ impl TraceRing {
                 i += 1;
             }
         }
+        n
     }
 
     fn dropped(&self) -> u64 {
@@ -208,12 +234,39 @@ impl Drop for TraceRing {
     }
 }
 
+/// Incremental read position over a [`Tracer`]'s rings: one published-length
+/// watermark per ring. Mint with [`Tracer::cursor`], advance with
+/// [`Tracer::read_new`]. Plain data — the tracer's release-published ring
+/// lengths carry all the synchronization.
+#[derive(Clone, Debug)]
+pub struct RingCursor {
+    read: Vec<usize>,
+}
+
+impl RingCursor {
+    /// A cursor over zero rings — reads nothing until replaced by a real
+    /// [`Tracer::cursor`] (placeholder for lazily attached consumers).
+    pub fn empty() -> Self {
+        RingCursor { read: Vec::new() }
+    }
+
+    /// Does this cursor track no rings?
+    pub fn is_empty(&self) -> bool {
+        self.read.is_empty()
+    }
+}
+
 /// Trace collector. One instance per runtime; cheap enough to keep on for
 /// the trace figures, `None`d out for throughput benches. `record` is
 /// wait-free (see the module docs); one ring per recording thread.
 pub struct Tracer {
     start: Instant,
     rings: Vec<TraceRing>,
+    /// Events whose slot was out of range for this tracer's ring count.
+    /// A dedicated counter — charging these to `rings[0].dropped` (as the
+    /// seed-era code did) panicked on a zero-ring tracer and polluted
+    /// ring 0's own overflow accounting otherwise.
+    misrouted: AtomicU64,
 }
 
 impl Tracer {
@@ -230,7 +283,13 @@ impl Tracer {
         Tracer {
             start: Instant::now(),
             rings: (0..num_threads.max(1)).map(|_| TraceRing::new(events_per_thread)).collect(),
+            misrouted: AtomicU64::new(0),
         }
+    }
+
+    /// Number of per-thread rings (recording slots).
+    pub fn num_rings(&self) -> usize {
+        self.rings.len()
     }
 
     #[inline]
@@ -241,30 +300,32 @@ impl Tracer {
     /// Append an event to `worker`'s ring. Must be called by the thread
     /// that owns slot `worker` (single-writer rings). The slot must be in
     /// range — rings are sized by the actual thread count; an out-of-range
-    /// slot debug-asserts, and in release builds the event is accounted as
-    /// dropped instead of silently aliasing another thread's stream (the
-    /// seed's `worker % len` merged the DAS manager's stream into
-    /// worker 0's).
+    /// slot is counted on the tracer-level `misrouted` counter (folded into
+    /// [`dropped`](Tracer::dropped)) instead of silently aliasing another
+    /// thread's stream (the seed's `worker % len` merged the DAS manager's
+    /// stream into worker 0's) or mischarging ring 0's own overflow
+    /// accounting. Counted in every build profile: a misroute is telemetry
+    /// about a mis-sized tracer, not a debug-only invariant.
     #[inline]
     pub fn record(&self, worker: usize, kind: TraceKind) {
         let ev = TraceEvent { t_ns: self.now_ns(), kind };
-        debug_assert!(
-            worker < self.rings.len(),
-            "trace slot {worker} out of range ({} rings) — size the tracer by the actual \
-             thread count",
-            self.rings.len()
-        );
         match self.rings.get(worker) {
             Some(ring) => ring.push(ev),
             None => {
-                self.rings[0].dropped.fetch_add(1, Ordering::Relaxed);
+                self.misrouted.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
 
-    /// Events discarded across all rings (full ring or out-of-range slot).
+    /// Events discarded across all rings (full ring, a second writer racing
+    /// the owner) plus tracer-level misroutes (out-of-range slot).
     pub fn dropped(&self) -> u64 {
-        self.rings.iter().map(|r| r.dropped()).sum()
+        self.rings.iter().map(|r| r.dropped()).sum::<u64>() + self.misrouted()
+    }
+
+    /// Events whose slot index had no ring (out-of-range `worker`).
+    pub fn misrouted(&self) -> u64 {
+        self.misrouted.load(Ordering::Relaxed)
     }
 
     /// Merge all per-thread buffers, sorted by time.
@@ -300,6 +361,9 @@ impl Tracer {
                 }
                 TraceKind::TaskEnd { worker, id } => {
                     out.push_str(&format!("{},task_end,{},{},\n", e.t_ns, worker, id))
+                }
+                TraceKind::ReadyPush { worker, id } => {
+                    out.push_str(&format!("{},ready_push,{},{},\n", e.t_ns, worker, id))
                 }
             }
         }
@@ -357,6 +421,26 @@ impl Tracer {
             }
         }
         out
+    }
+
+    /// A fresh incremental cursor positioned at the start of every ring.
+    pub fn cursor(&self) -> RingCursor {
+        RingCursor { read: vec![0; self.rings.len()] }
+    }
+
+    /// Copy events ring `ring` has published since `cur` last visited it
+    /// into `out` (appended; `out` is not cleared), advancing the cursor.
+    /// Returns the number of events copied. Any thread may call this
+    /// concurrently with the owner's appends — it reads only the
+    /// release-published prefix. A cursor minted by a *different* tracer's
+    /// [`cursor`](Tracer::cursor) (wrong ring count) reads nothing.
+    pub fn read_new(&self, cur: &mut RingCursor, ring: usize, out: &mut Vec<TraceEvent>) -> usize {
+        let (Some(r), Some(pos)) = (self.rings.get(ring), cur.read.get_mut(ring)) else {
+            return 0;
+        };
+        let before = *pos;
+        *pos = r.snapshot_range(before, out);
+        *pos - before
     }
 
     /// Time series of a gauge: (t_ns, value) pairs.
@@ -491,6 +575,88 @@ mod tests {
         assert_eq!(t.merged().len(), 140);
         assert_eq!(t.gauge_series(true).len(), 100);
         assert_eq!(t.gauge_series(false).len(), 40);
+    }
+
+    #[test]
+    fn out_of_range_slot_counts_misrouted_not_ring0() {
+        // Regression: the out-of-range arm used to charge rings[0].dropped,
+        // polluting ring 0's own overflow accounting.
+        let t = Tracer::new(1);
+        t.record(5, TraceKind::InGraph(1));
+        t.record(9, TraceKind::Ready(2));
+        assert_eq!(t.misrouted(), 2);
+        assert_eq!(t.dropped(), 2, "misroutes fold into dropped()");
+        assert_eq!(t.rings[0].dropped(), 0, "ring 0's own counter untouched");
+        assert!(t.merged().is_empty());
+    }
+
+    #[test]
+    fn zero_ring_tracer_counts_misrouted_without_panicking() {
+        // Regression: with zero rings, the old arm indexed rings[0] and
+        // panicked. Constructors floor at one ring, so build the zero-ring
+        // shape directly.
+        let t = Tracer { start: Instant::now(), rings: Vec::new(), misrouted: AtomicU64::new(0) };
+        t.record(0, TraceKind::InGraph(1));
+        assert_eq!(t.misrouted(), 1);
+        assert_eq!(t.dropped(), 1);
+        assert!(t.merged().is_empty());
+    }
+
+    #[test]
+    fn cursor_reads_incrementally() {
+        let t = Tracer::new(2);
+        let mut cur = t.cursor();
+        t.record(0, TraceKind::InGraph(1));
+        t.record(0, TraceKind::InGraph(2));
+        t.record(1, TraceKind::Ready(1));
+        let mut out = Vec::new();
+        assert_eq!(t.read_new(&mut cur, 0, &mut out), 2);
+        assert_eq!(t.read_new(&mut cur, 1, &mut out), 1);
+        assert_eq!(out.len(), 3);
+        // Nothing new: cursor is caught up.
+        assert_eq!(t.read_new(&mut cur, 0, &mut out), 0);
+        assert_eq!(t.read_new(&mut cur, 1, &mut out), 0);
+        assert_eq!(out.len(), 3);
+        // New events appear exactly once, from the watermark on.
+        t.record(0, TraceKind::InGraph(3));
+        out.clear();
+        assert_eq!(t.read_new(&mut cur, 0, &mut out), 1);
+        assert!(matches!(out[0].kind, TraceKind::InGraph(3)));
+        // Out-of-range ring index reads nothing.
+        assert_eq!(t.read_new(&mut cur, 7, &mut out), 0);
+    }
+
+    #[test]
+    fn cursor_crosses_segment_boundaries() {
+        let t = Tracer::with_capacity(1, SEG_EVENTS * 2 + 10);
+        let mut cur = t.cursor();
+        let mut out = Vec::new();
+        // Fill to just short of the boundary, read, then cross it.
+        for i in 0..(SEG_EVENTS - 3) {
+            t.record(0, TraceKind::InGraph(i as u64));
+        }
+        assert_eq!(t.read_new(&mut cur, 0, &mut out), SEG_EVENTS - 3);
+        for i in 0..20 {
+            t.record(0, TraceKind::InGraph((SEG_EVENTS - 3 + i) as u64));
+        }
+        out.clear();
+        assert_eq!(t.read_new(&mut cur, 0, &mut out), 20);
+        let vals: Vec<u64> = out
+            .iter()
+            .filter_map(|e| match e.kind {
+                TraceKind::InGraph(v) => Some(v),
+                _ => None,
+            })
+            .collect();
+        assert!(vals.windows(2).all(|w| w[0] + 1 == w[1]), "in order across the seam");
+        assert_eq!(vals[0], (SEG_EVENTS - 3) as u64);
+    }
+
+    #[test]
+    fn csv_renders_ready_push() {
+        let t = Tracer::new(1);
+        t.record(0, TraceKind::ReadyPush { worker: 0, id: 42 });
+        assert!(t.dump_csv().contains("ready_push,0,42"));
     }
 
     #[test]

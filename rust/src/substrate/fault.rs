@@ -14,7 +14,11 @@
 //!   the hang watchdog's re-raise/wake self-heal;
 //! * [`FaultSite::DrainBatch`] — a manager defers a claimed worker's batch
 //!   drain to a later activation (the worker is re-raised, not lost),
-//!   exercising the no-lost-raise retry paths.
+//!   exercising the no-lost-raise retry paths;
+//! * [`FaultSite::IngressRaise`] — an external submitter's
+//!   `raise_external` is dropped after its entry was published into the
+//!   ingress ring, exercising the watchdog's stranded-ring re-raise (a
+//!   blocking `submit_async` must be healed, never hang).
 //!
 //! Decisions are counted per site (`draws` / `injected`), so stress tests
 //! can assert that a scenario actually exercised the fault — a fault plan
@@ -43,10 +47,13 @@ pub enum FaultSite {
     WakeEdge = 1,
     /// Defer a claimed worker's batch drain (worker re-raised).
     DrainBatch = 2,
+    /// Drop an external submitter's ingress raise (ring entry published,
+    /// signal withheld — the watchdog must re-raise the stranded ring).
+    IngressRaise = 3,
 }
 
 /// Number of named sites (table size).
-pub const NUM_FAULT_SITES: usize = 3;
+pub const NUM_FAULT_SITES: usize = 4;
 
 /// Rate denominator: rates are expressed out of `1 << 16`. A rate of
 /// [`FAULT_ALWAYS`] injects on every draw.
@@ -194,6 +201,7 @@ mod tests {
         for _ in 0..1000 {
             assert!(!plan.should_inject(FaultSite::TaskBody));
             assert!(!plan.should_inject(FaultSite::WakeEdge));
+            assert!(!plan.should_inject(FaultSite::IngressRaise));
         }
         assert_eq!(plan.draws(FaultSite::TaskBody), 0);
         assert_eq!(plan.total_injected(), 0);

@@ -193,6 +193,14 @@ pub struct SignalDirectory {
     external: CachePadded<AtomicBool>,
     /// External raises (ingress pushes signalled).
     external_raises: Counter,
+    /// Fault-injection plan for [`FaultSite::IngressRaise`]
+    /// (`raise_external` is called by outside threads with no runtime
+    /// context, so the site lives here rather than in the pool). `None` in
+    /// production — the site check is then a single branch. Installed once
+    /// at construction time ([`install_fault_plan`]
+    /// (SignalDirectory::install_fault_plan)), before the directory is
+    /// shared.
+    fault_plan: Option<std::sync::Arc<crate::substrate::fault::FaultPlan>>,
 }
 
 impl SignalDirectory {
@@ -235,7 +243,20 @@ impl SignalDirectory {
             park_wakes: Counter::new(),
             external: CachePadded::new(AtomicBool::new(false)),
             external_raises: Counter::new(),
+            fault_plan: None,
         }
+    }
+
+    /// Install a [`FaultPlan`](crate::substrate::fault::FaultPlan) whose
+    /// [`IngressRaise`](crate::substrate::fault::FaultSite::IngressRaise)
+    /// site gates [`raise_external`](SignalDirectory::raise_external).
+    /// Requires exclusive access — call before the directory is shared
+    /// (the runtime constructor does, when a plan is configured).
+    pub fn install_fault_plan(
+        &mut self,
+        plan: std::sync::Arc<crate::substrate::fault::FaultPlan>,
+    ) {
+        self.fault_plan = Some(plan);
     }
 
     /// Worker slots covered.
@@ -407,8 +428,18 @@ impl SignalDirectory {
     /// `SeqCst` fence, so the no-lost-wakeup pairing with `begin_park`
     /// holds for this producer class too. No socket preference: external
     /// traffic has no home socket.
+    /// Fault site [`IngressRaise`](crate::substrate::fault::FaultSite::IngressRaise):
+    /// an injected fault drops the raise *after* the producer published its
+    /// ring entry — the ring is then stranded behind a clean external bit,
+    /// and the hang watchdog's `ingress_pending > 0` re-raise must heal it
+    /// (a blocking `submit_async` hangs otherwise).
     #[inline]
     pub fn raise_external(&self) {
+        if let Some(plan) = &self.fault_plan {
+            if plan.should_inject(crate::substrate::fault::FaultSite::IngressRaise) {
+                return;
+            }
+        }
         self.external_raises.inc();
         self.external.swap(true, Ordering::AcqRel);
         self.wake_parked_near(1, None);

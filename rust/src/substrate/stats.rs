@@ -109,18 +109,27 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    /// Approximate quantile from bucket boundaries (upper bound of bucket,
+    /// clipped to the observed max). `target` is clamped to at least one
+    /// sample so `q → 0.0` lands in the first *occupied* bucket instead of
+    /// being satisfied by an empty leading one; the top bucket saturates to
+    /// `u64::MAX` rather than wrapping its upper bound back to `1<<63`.
     pub fn quantile(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
         let mut acc = 0u64;
         for (b, bucket) in self.buckets.iter().enumerate() {
             acc += bucket.load(Ordering::Relaxed);
             if acc >= target {
-                return 1u64 << (b + 1).min(63);
+                let bound = if b + 1 >= 64 {
+                    u64::MAX
+                } else {
+                    1u64 << (b + 1)
+                };
+                return bound.min(self.max());
             }
         }
         self.max()
@@ -191,5 +200,44 @@ mod tests {
         h.record(0);
         assert_eq!(h.count(), 1);
         assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn quantile_zero_hits_first_occupied_bucket() {
+        // Regression: q=0.0 used to make target==0, satisfied by the empty
+        // bucket 0 — returning 2 for *any* non-empty histogram.
+        let h = Histogram::new();
+        h.record(100);
+        assert_eq!(h.quantile(0.0), 100);
+        assert_eq!(h.quantile(0.5), 100);
+    }
+
+    #[test]
+    fn quantile_one_is_the_max() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(1.0), 1000);
+        assert_eq!(h.quantile(1.0), h.max());
+    }
+
+    #[test]
+    fn quantile_single_sample_is_exact() {
+        let h = Histogram::new();
+        h.record(7);
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 7, "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_top_bucket_saturates() {
+        // Regression: the bucket upper bound `1 << (b+1).min(63)` capped the
+        // top bucket's bound at 1<<63 instead of saturating.
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.quantile(0.5), u64::MAX);
+        assert_eq!(h.quantile(1.0), u64::MAX);
     }
 }

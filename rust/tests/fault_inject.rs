@@ -130,10 +130,65 @@ fn disarmed_plan_is_inert() {
     ts.taskwait_checked().expect("a disarmed plan never fails a run");
     assert_eq!(hits.load(Ordering::Relaxed), 100);
     assert_eq!(plan.total_injected(), 0);
-    for site in [FaultSite::TaskBody, FaultSite::WakeEdge, FaultSite::DrainBatch] {
+    for site in [
+        FaultSite::TaskBody,
+        FaultSite::WakeEdge,
+        FaultSite::DrainBatch,
+        FaultSite::IngressRaise,
+    ] {
         assert_eq!(plan.draws(site), 0, "disarmed site {site:?} must not even draw");
     }
     ts.shutdown_checked().expect("still clean at shutdown");
+}
+
+/// ROADMAP failure-plane item: a dropped external raise must be healed by
+/// the watchdog's stranded-ring re-raise, never hang a blocking
+/// `submit_async`. The budgeted plan (`FAULT_ALWAYS` × budget 1) drops
+/// exactly the raise of the one external submission: its entry sits
+/// published in the ingress ring behind a clean external bit, managers
+/// see nothing to drain (`drain_ingress` is bit-gated), and the pool
+/// parks. The watchdog's `ingress_pending > 0` arm must then restore the
+/// bit — the exhausted budget lets the healing raise through — and the
+/// pool-side `taskwait` completes.
+#[test]
+fn dropped_ingress_raise_is_healed_by_the_watchdog() {
+    let plan = Arc::new(
+        FaultPlan::new(0xDEAD_0007)
+            .with_rate(FaultSite::IngressRaise, FAULT_ALWAYS)
+            .with_budget(FaultSite::IngressRaise, 1),
+    );
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(2)
+        .fault_plan(Arc::clone(&plan))
+        .build();
+    let rt = ts.runtime().clone();
+    let hits = Arc::new(AtomicU64::new(0));
+    let (h, ts2) = (Arc::clone(&hits), ts.clone());
+    // A dependence-carrying task from a thread outside the pool is forced
+    // through the ingress ring — the route whose raise the plan drops.
+    let submitter = std::thread::spawn(move || {
+        ts2.submit_silent(&[(7, DepMode::Out)], move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+    });
+    submitter.join().expect("publish-then-signal: the submitter itself never blocks here");
+    assert_eq!(
+        plan.injected(FaultSite::IngressRaise),
+        1,
+        "the submission's raise was dropped (the scenario actually fired)"
+    );
+    // The pool must self-heal within the watchdog envelope: taskwait would
+    // hang forever if the ring entry stayed stranded.
+    ts.taskwait();
+    assert_eq!(hits.load(Ordering::Relaxed), 1, "the stranded task ran");
+    assert!(
+        rt.stats.watchdog_recoveries.get() >= 1,
+        "the heal went through the watchdog's re-raise, not luck"
+    );
+    assert!(rt.quiescent());
+    ts.shutdown();
+    assert!(rt.quiescent(), "clean after shutdown");
 }
 
 /// Every ready-task wake edge is swallowed (`FAULT_ALWAYS`): the runtime

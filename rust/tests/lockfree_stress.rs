@@ -250,6 +250,17 @@ fn contention_ab_smoke_and_json() {
         assert!(t.dep_wake.old.contended > 0, "broadcast control side must mistarget");
     }
 
+    // Staged pathology detector: the drill asserts the exclusive-flag,
+    // healthy-zero, disarmed-zero and MIN_READY_TASKS-staircase claims
+    // inline; the suite pins the reported invariants.
+    let pathology = contention::pathology_ab();
+    assert!(pathology.idle_spin >= 1 && pathology.serialized_drain >= 1);
+    assert!(pathology.starvation >= 1);
+    assert_eq!(pathology.healthy_flags, 0, "healthy stream must stay clean");
+    assert_eq!(pathology.disarmed_windows, 0, "disarmed runtime must never scan");
+    assert!(pathology.min_ready_peak > pathology.min_ready_baseline);
+    assert_eq!(pathology.min_ready_settled, pathology.min_ready_baseline);
+
     let json = contention::suite_to_json(
         &reports,
         &sweeps,
@@ -260,6 +271,7 @@ fn contention_ab_smoke_and_json() {
         &replay,
         &ingress,
         &topology,
+        &pathology,
         "cargo test contention_ab_smoke_and_json",
     );
     assert!(json.contains("\"contended_reduction\""));
@@ -274,6 +286,8 @@ fn contention_ab_smoke_and_json() {
     assert!(json.contains("\"throughput_per_sec\""));
     assert!(json.contains("\"topology\""));
     assert!(json.contains("\"dep_wake\""));
+    assert!(json.contains("\"pathology\""));
+    assert!(json.contains("\"min_ready_peak\""));
     let path = contention::default_json_path();
     if contention::write_suite_json(
         &path,
@@ -286,6 +300,7 @@ fn contention_ab_smoke_and_json() {
         &replay,
         &ingress,
         &topology,
+        &pathology,
         "cargo test contention_ab_smoke_and_json",
     ) {
         eprintln!("refreshed {}", path.display());
@@ -305,6 +320,7 @@ fn contention_ab_smoke_and_json() {
     for t in &topology {
         eprintln!("{}", contention::render_topology(t));
     }
+    eprintln!("{}", contention::render_pathology(&pathology));
 }
 
 /// Acceptance guard for the request-plane refactor: during a sparse-traffic

@@ -1,0 +1,171 @@
+//! False-positive guard for the online pathology detector
+//! (EXPERIMENTS.md §Online pathology detection): genuinely healthy
+//! workloads — parallel dependence chains, nested fan-out/join waves,
+//! record-once/replay-N iterations — run with the detector **armed at the
+//! default thresholds**, and every pathology gauge must finish at zero.
+//! The staged true-positive scenarios (each drill tripping exactly its own
+//! flag, the `MIN_READY_TASKS` staircase, the disarmed zero-cost proof)
+//! live in `bench_harness::contention::pathology_ab` and run from the
+//! `lockfree_stress` suite; this file pins the other half of the
+//! contract: conservative defaults, no cry-wolf flags on real workloads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use ddast::coordinator::{
+    dep_inout, DepMode, PathologyConfig, ReplayOutcome, ReplayTask, RuntimeKind, TaskSystem,
+};
+
+/// Assert that no pathology flag is raised on `ts`'s runtime. Judged
+/// windows are fine — scanning healthy traffic is the detector's job —
+/// but the sticky gauges must never move.
+fn assert_clean(ts: &TaskSystem, what: &str) {
+    let rt = ts.runtime();
+    assert_eq!(rt.stats.pathology_idle_spin.get(), 0, "{what}: idle-spin flagged");
+    assert_eq!(
+        rt.stats.pathology_serialized_drain.get(),
+        0,
+        "{what}: serialized-drain flagged"
+    );
+    assert_eq!(rt.stats.pathology_starvation.get(), 0, "{what}: starvation flagged");
+}
+
+/// Eight independent inout chains at 4 threads: enough parallelism that
+/// nobody legitimately starves or idles, with the detector scanning on
+/// every idle moment throughout (taskwait parks, manager exits, DAS idle
+/// tiers all tick it).
+#[test]
+fn healthy_chains_keep_every_gauge_at_zero() {
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(4)
+        .pathology(true)
+        .build();
+    let rt = ts.runtime().clone();
+    assert!(rt.pathology().is_some(), ".pathology(true) arms the detector");
+    assert!(rt.tracer.is_some(), "pathology implies tracing");
+    let hits = Arc::new(AtomicU64::new(0));
+    const CHAINS: u64 = 8;
+    const LEN: u64 = 250;
+    for _ in 0..LEN {
+        for c in 0..CHAINS {
+            let h = Arc::clone(&hits);
+            ts.spawn(&[(9_000 + c, DepMode::Inout)], move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    }
+    ts.taskwait();
+    assert_eq!(hits.load(Ordering::Relaxed), CHAINS * LEN);
+    assert_clean(&ts, "chains");
+    ts.shutdown();
+    assert_clean(&ts, "chains after shutdown");
+}
+
+/// Fan-out/join waves where every worker is both a creator and a
+/// consumer: four parents per wave each spawn eight no-dep children and
+/// taskwait on them (the inner wait is what makes the parents creators
+/// *and* joiners), across repeated waves. Creators consuming their own
+/// pushes is the healthy shape the starvation rule must not confuse with
+/// a starved spawner.
+#[test]
+fn healthy_fanout_waves_keep_every_gauge_at_zero() {
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(4)
+        .pathology(true)
+        .build();
+    let hits = Arc::new(AtomicU64::new(0));
+    const WAVES: u64 = 25;
+    const PARENTS: u64 = 4;
+    const KIDS: u64 = 8;
+    for _ in 0..WAVES {
+        for _ in 0..PARENTS {
+            let ts2 = ts.clone();
+            let h = Arc::clone(&hits);
+            ts.spawn(&[], move || {
+                for _ in 0..KIDS {
+                    let h = Arc::clone(&h);
+                    ts2.spawn(&[], move || {
+                        h.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+                ts2.taskwait(); // join: the creator drains its own fan-out
+            });
+        }
+        ts.taskwait();
+    }
+    assert_eq!(hits.load(Ordering::Relaxed), WAVES * PARENTS * KIDS);
+    assert_clean(&ts, "fan-out waves");
+    ts.shutdown();
+    assert_clean(&ts, "fan-out waves after shutdown");
+}
+
+/// Record-once/replay-N with the detector armed: replay refills bypass
+/// both the dependence graph and the creator-push fast path, so the
+/// detector sees start/end traffic without matching pushes — which must
+/// read as healthy, not as anything stolen.
+#[test]
+fn healthy_replay_iterations_keep_every_gauge_at_zero() {
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(4)
+        .record_graphs(true)
+        .pathology(true)
+        .build();
+    let mk = || -> Vec<ReplayTask> {
+        (0..8u64)
+            .flat_map(|_| 0..8u64)
+            .map(|c| ReplayTask::new(vec![dep_inout(5_000 + c)], "replay-guard", || {}))
+            .collect()
+    };
+    let rec = ts.record_iteration(mk()).expect("record_graphs captures iteration 0");
+    for _ in 0..10 {
+        assert_eq!(ts.replay(&rec, mk()), ReplayOutcome::Replayed);
+    }
+    assert_clean(&ts, "replay");
+    ts.shutdown();
+    assert_clean(&ts, "replay after shutdown");
+}
+
+/// The builder's config override flows through to the armed detector, and
+/// an explicitly configured detector still implies tracing.
+#[test]
+fn builder_config_reaches_the_detector() {
+    let ts = TaskSystem::builder()
+        .kind(RuntimeKind::Ddast)
+        .num_threads(2)
+        .pathology_config(PathologyConfig::with_window(64))
+        .build();
+    let rt = ts.runtime().clone();
+    let d = rt.pathology().expect("pathology_config arms the detector");
+    assert_eq!(d.config().window_events, 64);
+    assert!(d.config().streak_windows >= 1);
+    assert!(rt.tracer.is_some(), "pathology_config implies tracing");
+    ts.spawn(&[], || {});
+    ts.taskwait();
+    assert_clean(&ts, "configured");
+    ts.shutdown();
+}
+
+/// Default builds stay disarmed: no detector, no judged windows, every
+/// gauge untouched — the zero-cost default the tentpole promises.
+#[test]
+fn default_build_is_disarmed_and_windowless() {
+    let ts = TaskSystem::builder().kind(RuntimeKind::Ddast).num_threads(2).build();
+    let rt = ts.runtime().clone();
+    assert!(rt.pathology().is_none(), "detector is opt-in");
+    assert!(!rt.pathology_tick(), "disarmed tick is a no-op");
+    let hits = Arc::new(AtomicU64::new(0));
+    for i in 0..200u64 {
+        let h = Arc::clone(&hits);
+        ts.spawn(&[(i % 4, DepMode::Inout)], move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    ts.taskwait();
+    assert_eq!(hits.load(Ordering::Relaxed), 200);
+    assert_eq!(rt.stats.pathology_windows.get(), 0, "no window ever judged");
+    assert_clean(&ts, "disarmed");
+    ts.shutdown();
+}
